@@ -1,0 +1,94 @@
+"""Figs 14–17 + Table 3 — hyper-parameter sensitivity of the online path.
+
+  * Table 3: latency percentiles vs feature count,
+  * Fig 15:  vs number of windows,
+  * Fig 16:  vs window data volume,
+  * Fig 17:  vs number of LAST JOINs.
+(Fig 14's thread scaling is a CPU-host concern; the analogous knob here
+is XLA's intra-op parallelism, outside a single-process benchmark's
+control — noted, not measured.)
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.data.synthetic import make_action_tables
+from repro.serve.engine import FeatureEngine
+
+from .common import emit, timeit
+
+
+def _features_sql(n_feat: int) -> str:
+    fns = ["sum", "avg", "max", "min", "count", "stddev"]
+    items = [f"{fns[i % len(fns)]}(price) OVER w AS f{i}"
+             for i in range(n_feat)]
+    return ("SELECT " + ", ".join(items) + " FROM actions WINDOW w AS "
+            "(PARTITION BY userid ORDER BY ts ROWS_RANGE BETWEEN 60s "
+            "PRECEDING AND CURRENT ROW)")
+
+
+def _windows_sql(n_win: int) -> str:
+    items = [f"sum(price) OVER w{i} AS f{i}" for i in range(n_win)]
+    wins = [f"w{i} AS (PARTITION BY userid ORDER BY ts ROWS_RANGE "
+            f"BETWEEN {10 * (i + 1)}s PRECEDING AND CURRENT ROW)"
+            for i in range(n_win)]
+    return ("SELECT " + ", ".join(items) + " FROM actions WINDOW "
+            + ", ".join(wins))
+
+
+def _joins_sql(n_joins: int) -> str:
+    joins = "\n".join(
+        "LAST JOIN profile ORDER BY ts ON actions.userid = profile.userid"
+        for _ in range(n_joins))
+    return (f"SELECT price, profile.age AS age, sum(price) OVER w AS s "
+            f"FROM actions {joins} WINDOW w AS (PARTITION BY userid "
+            f"ORDER BY ts ROWS_RANGE BETWEEN 30s PRECEDING AND "
+            f"CURRENT ROW)")
+
+
+def _engine(sql, tables, n_ingest=1200):
+    eng = FeatureEngine(sql, tables, capacity=4096)
+    a = tables["actions"]
+    for i in range(n_ingest):
+        eng.ingest("actions", a.row(i))
+    if "profile" in eng.store.tables:
+        p = tables["profile"]
+        for i in range(p.n_rows):
+            eng.ingest("profile", p.row(i))
+    return eng, dict(a.row(n_ingest + 1))
+
+
+def main(quick: bool = False):
+    tables = make_action_tables(n_actions=2000, n_orders=0, n_users=8,
+                                horizon_ms=2_000_000, seed=0)
+
+    for n_feat in ([5, 20] if quick else [5, 20, 60]):
+        eng, req = _engine(_features_sql(n_feat), tables)
+        for _ in range(3):
+            eng.request(req)         # warm (compile) ...
+        eng.reset_stats()            # ... then measure percentiles
+        for _ in range(30):
+            eng.request(req)
+        pct = eng.latency_percentiles()
+        emit(f"table3_features_{n_feat}", pct["TP50"] * 1e3,
+             f"TP50={pct['TP50']:.2f}ms TP99={pct['TP99']:.2f}ms")
+
+    for n_win in ([1, 4] if quick else [1, 2, 4, 8]):
+        eng, req = _engine(_windows_sql(n_win), tables)
+        us = timeit(lambda: eng.request(req), warmup=3, iters=10)
+        emit(f"fig15_windows_{n_win}", us, f"qps={1e6 / us:.0f}")
+
+    for vol in ([200, 1000] if quick else [200, 1000, 1900]):
+        eng, req = _engine(_features_sql(5), tables, n_ingest=vol)
+        us = timeit(lambda: eng.request(req), warmup=3, iters=10)
+        emit(f"fig16_volume_{vol}", us, f"qps={1e6 / us:.0f}")
+
+    for n_j in ([1, 3] if quick else [1, 2, 3]):
+        eng, req = _engine(_joins_sql(n_j), tables)
+        us = timeit(lambda: eng.request(req), warmup=3, iters=10)
+        emit(f"fig17_joins_{n_j}", us, f"qps={1e6 / us:.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Fig 8 — offline MicroBench: single-window / multi-window / skewed.
+
+Ours = the fused offline driver (window merging + parallel branches +
+leaf CSE); baseline = serial per-window execution with host barriers
+(the structural shape of Spark's serialized window operators).  Skewed
+column: §6.2 repartitioning vs single-partition critical path.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import compile_script, parse
+from repro.core.multiwindow import run_parallel, run_serial
+from repro.data.synthetic import make_action_tables
+
+from .common import emit, timeit
+
+MULTI_SQL = """
+SELECT
+  sum(price) OVER w1 AS s1, avg(price) OVER w1 AS a1,
+  max(price) OVER w2 AS m2, count(price) OVER w2 AS c2,
+  min(price) OVER w3 AS m3, ew_avg(price, 0.5) OVER w3 AS e3,
+  drawdown(price) OVER w4 AS d4, stddev(price) OVER w4 AS sd4
+FROM actions
+WINDOW w1 AS (PARTITION BY userid ORDER BY ts
+              ROWS_RANGE BETWEEN 10s PRECEDING AND CURRENT ROW),
+      w2 AS (PARTITION BY userid ORDER BY ts
+             ROWS_RANGE BETWEEN 60s PRECEDING AND CURRENT ROW),
+      w3 AS (PARTITION BY quantity ORDER BY ts
+             ROWS BETWEEN 50 PRECEDING AND CURRENT ROW),
+      w4 AS (PARTITION BY userid ORDER BY ts
+             ROWS BETWEEN 200 PRECEDING AND CURRENT ROW)
+"""
+
+SINGLE_SQL = """
+SELECT sum(price) OVER w1 AS s1, avg(price) OVER w1 AS a1
+FROM actions
+WINDOW w1 AS (PARTITION BY userid ORDER BY ts
+              ROWS_RANGE BETWEEN 10s PRECEDING AND CURRENT ROW)
+"""
+
+
+def main(quick: bool = False):
+    n = 5_000 if quick else 20_000
+    tables = make_action_tables(n_actions=n, n_orders=0, n_users=32,
+                                horizon_ms=3_600_000, seed=0,
+                                with_profile=False)
+
+    cs1 = compile_script(parse(SINGLE_SQL), tables=tables)
+    us1 = timeit(lambda: cs1.offline(tables), warmup=1, iters=5)
+    emit("fig8_single_window_us", us1, f"rows={n}")
+
+    csm = compile_script(parse(MULTI_SQL), tables=tables)
+    us_par = timeit(lambda: run_parallel(csm, tables), warmup=1, iters=5)
+    us_ser = timeit(lambda: run_serial(csm, tables), warmup=1, iters=3)
+    emit("fig8_multi_window_parallel_us", us_par,
+         f"serial_us={us_ser:.0f} speedup={us_ser / us_par:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

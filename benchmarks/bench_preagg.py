@@ -1,0 +1,94 @@
+"""Fig 10/11 — long-window pre-aggregation.
+
+Latency of an online request whose window spans the whole history,
+with and without pre-aggregation, as history grows.  Without pre-agg the
+request must fold the raw rows (buffer grows with the window); with
+pre-agg it folds O(buckets) partials + two bounded edges.  Fig 11's
+deploy-option form (``OPTIONS(long_windows="w:1d")``) is exactly our
+SQL surface.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import compile_script, parse
+from repro.core.consistency import replay_online
+from repro.data.synthetic import make_action_tables
+from repro.storage.timestore import OnlineStore
+
+from .common import emit, timeit
+
+SQL_TMPL = """
+SELECT sum(price) OVER w AS s, count(price) OVER w AS c,
+       max(price) OVER w AS mx, ew_avg(price, 0.5) OVER w AS ew
+FROM actions
+WINDOW w AS (PARTITION BY userid ORDER BY ts
+             ROWS_RANGE BETWEEN {win}s PRECEDING AND CURRENT ROW)
+{options}
+"""
+
+
+def _setup(n_rows, horizon_s, use_preagg, bucket_s, win_s):
+    tables = make_action_tables(
+        n_actions=n_rows, n_orders=0, n_users=2,
+        horizon_ms=horizon_s * 1000, seed=0, with_profile=False)
+    options = (f'OPTIONS (long_windows = "w:{bucket_s}s")'
+               if use_preagg else "")
+    sql = SQL_TMPL.format(win=win_s, options=options)
+    # second-resolution timestamps: convert
+    tables["actions"].columns["ts"] //= 1000
+    cs = compile_script(parse(sql, time_unit="s"), tables=tables)
+    # large buffer so the raw path is *correct* on big windows
+    cs.ctx.online_buffer = max(256, n_rows)
+    cs._build_windows()
+
+    store = OnlineStore(capacity=n_rows + 8)
+    need = cs.required_store_columns()
+    store.create_table("actions", {c: np.float32 for c in
+                                   need["actions"]})
+    pre = cs.init_preagg_states() if use_preagg else None
+    a = tables["actions"]
+    # LOAD DATA path for the store; pre-agg folds rows from the "binlog"
+    store.bulk_load(
+        "actions", a.columns["userid"][: n_rows - 1],
+        a.columns["ts"][: n_rows - 1],
+        {c: a.columns[c][: n_rows - 1].astype(np.float32)
+         for c in need["actions"]})
+    if use_preagg:
+        for i in range(n_rows - 1):
+            key = int(a.columns["userid"][i])
+            ts = int(a.columns["ts"][i])
+            vals = {c: float(a.columns[c][i]) for c in need["actions"]}
+            pre = cs.preagg_update(pre, "actions", key, ts, vals)
+    last = a.row(n_rows - 1)
+    return cs, store, pre, last, need
+
+
+def main(quick: bool = False):
+    sizes = [2000, 8000] if quick else [2000, 8000, 32000]
+    win_s = 900_000
+    base_us = {}
+    for use_preagg in (False, True):
+        for n in sizes:
+            cs, store, pre, last, need = _setup(
+                n, horizon_s=1_000_000, use_preagg=use_preagg,
+                bucket_s=10_000, win_s=win_s)
+            key = int(last["userid"])
+            ts = int(last["ts"])
+            vals = {c: float(last[c]) for c in need["actions"]}
+            fn = lambda: cs.online(store, key, ts, vals,
+                                   preagg_states=pre)
+            us = timeit(fn, warmup=2, iters=5)
+            tag = "preagg" if use_preagg else "raw"
+            emit(f"fig10_long_window_{tag}_{n}rows", us,
+                 f"window_rows~{n // 2}")
+            base_us[(use_preagg, n)] = us
+    n = sizes[-1]
+    speedup = base_us[(False, n)] / base_us[(True, n)]
+    emit("fig11_preagg_speedup", base_us[(True, n)],
+         f"speedup={speedup:.1f}x at {n} rows")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Benchmark utilities: timing + CSV emission.
+
+Every benchmark prints ``name,us_per_call,derived`` rows (harness
+contract).  ``derived`` carries the figure-specific metric (speedup,
+reduction %, tuples/sec, ...).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+
+def timeit(fn: Callable, *, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall-clock microseconds per call."""
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        times.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(times))
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)

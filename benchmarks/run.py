@@ -1,0 +1,53 @@
+"""Benchmark harness (deliverable d): one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  ``--quick`` trims sizes for CI.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+"""
+
+import argparse
+import sys
+import time
+import traceback
+
+from . import (bench_glq_compile, bench_hyperparams, bench_memory,
+               bench_offline, bench_online_micro, bench_preagg,
+               bench_rtp_topn, bench_skew, bench_window_union)
+
+SUITES = {
+    "fig6_online_micro": bench_online_micro.main,
+    "fig7_rtp_topn": bench_rtp_topn.main,
+    "table2_memory": bench_memory.main,
+    "fig8_offline_micro": bench_offline.main,
+    "fig9_glq_and_cache": bench_glq_compile.main,
+    "fig10_11_preagg": bench_preagg.main,
+    "sec932_window_union": bench_window_union.main,
+    "fig13_skew": bench_skew.main,
+    "fig14_17_table3_hyperparams": bench_hyperparams.main,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in SUITES.items():
+        if args.only and args.only not in name:
+            continue
+        print(f"# --- {name} ---", flush=True)
+        t0 = time.time()
+        try:
+            fn(quick=args.quick)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            traceback.print_exc()
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,110 @@
+"""Offline mode end-to-end: feature computation -> LM training.
+
+The offline engine computes features over history (the same compiled
+script the online engine serves), and the training substrate runs a
+real multi-step LM training loop with checkpointing, gradient
+compression, and fault-tolerance bookkeeping.
+
+Defaults are CPU-sized; ``--steps 300 --d-model 512`` reproduces a
+~100M-parameter run on accelerators.
+
+Run:  PYTHONPATH=src python examples/offline_training.py [--steps N]
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get, reduced
+from repro.core import compile_script, parse
+from repro.data.pipeline import FeatureDataPipeline, TokenPipeline
+from repro.data.synthetic import make_action_tables
+from repro.distributed.compression import int8_compress
+from repro.distributed.fault import CheckpointManager
+from repro.models import init_params
+from repro.train.optimizer import AdamWConfig, adamw_init
+from repro.train.steps import build_train_step
+
+SQL = """
+SELECT
+  sum(price) OVER w AS f_spend,
+  avg(price) OVER w AS f_avg,
+  count(price) OVER w AS f_n,
+  max(price) OVER w AS f_max,
+  distinct_count(category) OVER w AS f_cats
+FROM actions
+WINDOW w AS (PARTITION BY userid ORDER BY ts
+             ROWS_RANGE BETWEEN 60s PRECEDING AND CURRENT ROW)
+"""
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--compress", action="store_true")
+    args = ap.parse_args()
+
+    print("== 1. offline feature computation (training-side driver)")
+    tables = make_action_tables(n_actions=2000, n_orders=0, n_users=16,
+                                with_profile=False)
+    cs = compile_script(parse(SQL), tables=tables)
+    pipe = FeatureDataPipeline(cs, tables, batch_size=args.batch)
+    mat = pipe.feature_matrix()
+    print(f"   features: {mat.shape} (finite={np.isfinite(mat).all()})")
+
+    print("== 2. LM training loop (checkpoint/restart + compression)")
+    base = reduced("llama3-8b")
+    cfg = dataclasses.replace(
+        base, name="demo-lm", n_layers=args.layers,
+        d_model=args.d_model, n_heads=max(4, args.d_model // 32),
+        n_kv_heads=max(2, args.d_model // 64),
+        head_dim=32, d_ff=args.d_model * 4)
+    params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    n_params = sum(np.prod(p.shape) for p in
+                   jax.tree_util.tree_leaves(params))
+    print(f"   model: {cfg.n_layers}L d={cfg.d_model} "
+          f"({n_params / 1e6:.1f}M params)")
+
+    state = adamw_init(params, with_compression=args.compress)
+    step_fn = jax.jit(build_train_step(
+        cfg, AdamWConfig(lr=5e-3, warmup_steps=5, total_steps=args.steps,
+                         weight_decay=0.0),
+        n_micro=2, compress=int8_compress if args.compress else None,
+        compute_dtype=jnp.float32))
+    tokens = TokenPipeline(cfg.vocab_size, args.batch, args.seq)
+    mgr = CheckpointManager("checkpoints/offline_demo", keep=2)
+
+    losses = []
+    t0 = time.time()
+    for batch in tokens.batches(args.steps):
+        state, metrics = step_fn(state, {"tokens": jnp.asarray(
+            batch["tokens"])})
+        losses.append(float(metrics["loss"]))
+        step = int(metrics["step"])
+        if step % 10 == 0:
+            mgr.save(step, state)
+            print(f"   step {step:4d} loss={losses[-1]:.4f} "
+                  f"({(time.time() - t0) / step:.2f}s/step)")
+
+    print(f"== 3. loss {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"(drop {losses[0] - losses[-1]:.3f})")
+    assert losses[-1] < losses[0]
+
+    print("== 4. simulated failure: restore from checkpoint and continue")
+    state2 = mgr.restore(state)
+    state2, metrics = step_fn(state2, {"tokens": jnp.asarray(
+        tokens.batch_at(0)["tokens"])})
+    print(f"   resumed at step {int(metrics['step'])} "
+          f"loss={float(metrics['loss']):.4f}")
+
+
+if __name__ == "__main__":
+    main()

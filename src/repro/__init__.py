@@ -1,0 +1,4 @@
+"""repro — OpenMLDB-style real-time feature computation for online ML,
+rebuilt as a multi-pod JAX training/serving framework (see DESIGN.md)."""
+
+__version__ = "0.1.0"

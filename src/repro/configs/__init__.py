@@ -1,0 +1,4 @@
+"""Arch configs: one module per assigned architecture + registry."""
+
+from .base import ArchConfig, ShapeSpec, SHAPES  # noqa: F401
+from .registry import ARCHS, get, reduced  # noqa: F401

@@ -1,0 +1,5 @@
+"""Config module for --arch whisper-tiny (see registry for the exact published numbers + provenance)."""
+
+from .registry import get
+
+CONFIG = get("whisper-tiny")

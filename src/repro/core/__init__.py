@@ -1,0 +1,13 @@
+"""repro.core — the paper's contribution: real-time relational feature
+computation with a unified offline/online plan (OpenMLDB, cs.DB 2025)."""
+
+from .types import Column, ColumnType, Dictionary, Table, TableSchema  # noqa: F401
+from .expr import (AggCall, BinaryOp, ColumnRef, Expr, FuncCall,  # noqa: F401
+                   Literal, UnaryOp)
+from .window import WindowSpec, parse_interval_ms  # noqa: F401
+from .plan import (FeatureScript, LastJoinSpec, SelectItem,  # noqa: F401
+                   build_plan)
+from .sql import parse  # noqa: F401
+from .compiler import (CompileContext, CompiledScript,  # noqa: F401
+                       cache_stats, clear_cache, compile_script)
+from .consistency import verify_consistency, replay_online  # noqa: F401

@@ -1,0 +1,559 @@
+"""Unified query plan compiler (§4) — one plan, two execution drivers.
+
+The consistency mechanism: a FeaturePlan lowers to *one* set of traced jnp
+computations (window folds over (key, ts)-ordered streams).  The offline
+driver applies them to whole historical tables (vectorized over every base
+row); the online driver applies the same folds to a single request tuple
+against the live store.  Same trace => bitwise-identical features, so the
+paper's months-long online/offline verification collapses to a unit test
+(tests/test_consistency.py).
+
+Compilation-level optimizations reproduced from §4.2:
+
+  * window merging      — done in plan.build_plan (canonical WindowSpec);
+  * cycle binding       — leaf-level CSE in window.fold_windows (shared
+                          sum/count accumulators across aggregates);
+  * compilation cache   — module-level cache keyed by (plan fingerprint,
+                          mode, shape signature); cache hits skip tracing
+                          and XLA compilation entirely (bench_compile_cache).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..storage import timestore
+from .expr import AggCall, ColumnRef, Expr, collect_columns, eval_scalar
+from .functions import Aggregator, build_aggregator
+from .plan import (FeaturePlan, FeatureScript, LastJoinSpec, WindowAgg,
+                   build_plan)
+from .preagg import PreAgg
+from .types import Table
+from .window import (WindowSpec, first_geq, fold_windows, segment_starts,
+                     window_bounds)
+
+__all__ = ["CompileContext", "CompiledScript", "compile_script",
+           "cache_stats", "clear_cache"]
+
+INT_MIN = -(2**31) + 2
+
+# ---------------------------------------------------------------------------
+# Compilation cache (§4.2)
+# ---------------------------------------------------------------------------
+
+_CACHE: Dict[Tuple, Any] = {}
+_STATS = {"hits": 0, "misses": 0}
+
+
+def cache_stats() -> Dict[str, int]:
+    return dict(_STATS)
+
+
+def clear_cache():
+    _CACHE.clear()
+    _STATS["hits"] = 0
+    _STATS["misses"] = 0
+
+
+def _cached(key, builder):
+    fn = _CACHE.get(key)
+    if fn is None:
+        _STATS["misses"] += 1
+        fn = builder()
+        _CACHE[key] = fn
+    else:
+        _STATS["hits"] += 1
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Context
+# ---------------------------------------------------------------------------
+
+
+class CompileContext:
+    """Static compile-time info: category cardinalities, buffer sizes."""
+
+    def __init__(self, tables: Optional[Dict[str, Table]] = None,
+                 default_cardinality: int = 32,
+                 max_cardinality: int = 256,
+                 online_buffer: int = 256,
+                 cardinality_overrides: Optional[Dict[str, int]] = None):
+        self.tables = tables or {}
+        self.default_cardinality = default_cardinality
+        self.max_cardinality = max_cardinality
+        self.online_buffer = online_buffer
+        self.overrides = dict(cardinality_overrides or {})
+
+    def cardinality(self, expr: Expr) -> int:
+        if isinstance(expr, ColumnRef):
+            if expr.name in self.overrides:
+                return self.overrides[expr.name]
+            for t in self.tables.values():
+                d = t.dicts.get(expr.name)
+                if d is not None:
+                    c = max(8, len(d))
+                    return min(self.max_cardinality, _round8(c))
+        return self.default_cardinality
+
+
+def _round8(x: int) -> int:
+    return (x + 7) // 8 * 8
+
+
+# ---------------------------------------------------------------------------
+# Compiled script
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _WindowPhys:
+    """Everything the drivers need for one physical window."""
+
+    node: WindowAgg
+    aggs: List[Aggregator]
+    feature_names: List[str]
+    sources: Tuple[str, ...]        # union tables first, base LAST
+    needed_cols: Tuple[str, ...]    # agg-arg columns (value columns)
+    online_buffer: int
+    preagg: Optional[PreAgg]
+
+
+class CompiledScript:
+    """A deployed feature script: offline + online drivers sharing folds."""
+
+    def __init__(self, script: FeatureScript, ctx: CompileContext):
+        self.script = script
+        self.ctx = ctx
+        self.plan: FeaturePlan = build_plan(script)
+        self._fingerprint = script.fingerprint()   # hashed once
+        self._online_fns: Dict[Tuple, Any] = {}
+        self._build_windows()
+        self._build_join_info()
+
+    # -- static analysis ----------------------------------------------------
+    def _build_windows(self):
+        self.windows: List[_WindowPhys] = []
+        for node in self.plan.physical_windows:
+            spec = node.spec
+            aggs, names = [], []
+            for fname, call in node.agg_items:
+                aggs.append(build_aggregator(call, self.ctx))
+                names.append(fname)
+            needed = set()
+            for _, call in node.agg_items:
+                for a in call.args:
+                    needed |= collect_columns(a)
+            needed.discard(spec.partition_by)
+            needed.discard(spec.order_by)
+            if spec.frame_rows:
+                buf = min(4096, spec.preceding + 1)
+            else:
+                buf = spec.maxsize or self.ctx.online_buffer
+            preagg = None
+            if node.long_window_bucket_ms > 0 and not spec.frame_rows:
+                preagg = PreAgg(
+                    spec=spec,
+                    leaves=_unique_leaves(aggs),
+                    bucket_ms=node.long_window_bucket_ms,
+                    n_keys=self.ctx.cardinality(
+                        ColumnRef(spec.partition_by)),
+                    window_ms=spec.preceding,
+                    value_cols=tuple(sorted(needed)),
+                )
+            self.windows.append(_WindowPhys(
+                node=node, aggs=aggs, feature_names=names,
+                sources=tuple(spec.union_tables) + (self.script.base_table,),
+                needed_cols=tuple(sorted(needed)),
+                online_buffer=buf, preagg=preagg))
+
+    def _build_join_info(self):
+        """Columns each LAST JOIN must expose (referenced as table.col)."""
+        self.join_cols: Dict[str, List[str]] = {}
+        for item in self.plan.scalar_items:
+            for e in _walk(item.expr):
+                if isinstance(e, ColumnRef) and e.table and \
+                        e.table != self.script.base_table:
+                    self.join_cols.setdefault(e.table, []).append(e.name)
+        for js in self.script.last_joins:
+            self.join_cols.setdefault(js.right_table, [])
+
+    @property
+    def feature_names(self) -> List[str]:
+        return [it.name for it in self.script.select]
+
+    def describe_plan(self) -> str:
+        return self.plan.describe()
+
+    # ======================================================================
+    # OFFLINE driver (batch over whole tables)
+    # ======================================================================
+
+    def offline(self, tables: Dict[str, Table]) -> Dict[str, np.ndarray]:
+        base = tables[self.script.base_table]
+        arrays = {name: t.device_columns() for name, t in tables.items()}
+        shapes_sig = tuple(sorted(
+            (name, tuple((c, v.shape) for c, v in sorted(cols.items())))
+            for name, cols in arrays.items()))
+        key = ("offline", self._fingerprint, shapes_sig)
+        fn = _cached(key, lambda: jax.jit(self._offline_fn))
+        out = fn(arrays)
+        return {k: np.asarray(v) for k, v in out.items()}
+
+    def _offline_fn(self, arrays: Dict[str, Dict[str, jnp.ndarray]]
+                    ) -> Dict[str, jnp.ndarray]:
+        base_name = self.script.base_table
+        base_cols = arrays[base_name]
+        n_base = next(iter(base_cols.values())).shape[0]
+        out: Dict[str, jnp.ndarray] = {}
+
+        # ---- window branches (the parallel segment of the plan) ----------
+        for w in self.windows:
+            spec = w.node.spec
+            feats = self._offline_window(arrays, w, n_base)
+            for name, val in zip(w.feature_names, feats):
+                out[name] = val
+
+        # ---- LAST JOINs ---------------------------------------------------
+        env = dict(base_cols)
+        for js in self.script.last_joins:
+            joined = self._offline_last_join(arrays, js)
+            env.update(joined)
+
+        # ---- scalar items ---------------------------------------------------
+        for item in self.plan.scalar_items:
+            out[item.name] = jnp.asarray(eval_scalar(item.expr, env))
+        # preserve select order
+        return {it.name: out[it.name] for it in self.script.select}
+
+    def _offline_window(self, arrays, w: _WindowPhys, n_base: int
+                        ) -> List[jnp.ndarray]:
+        spec = w.node.spec
+        cols_needed = set(w.needed_cols) | {spec.partition_by, spec.order_by}
+
+        parts = []  # (col dict, table_rank, orig_idx)
+        for rank, tname in enumerate(w.sources):
+            cols = arrays[tname]
+            n_t = next(iter(cols.values())).shape[0]
+            is_base = tname == self.script.base_table and \
+                rank == len(w.sources) - 1
+            part = {c: cols[c] for c in cols_needed}
+            part["__rank__"] = jnp.full((n_t,), rank, jnp.int32)
+            part["__arrival__"] = jnp.arange(n_t, dtype=jnp.int32)
+            part["__orig__"] = (jnp.arange(n_t, dtype=jnp.int32) if is_base
+                                else jnp.full((n_t,), n_base, jnp.int32))
+            parts.append(part)
+
+        merged = {k: jnp.concatenate([p[k] for p in parts])
+                  for k in parts[0]}
+        key_col = merged[spec.partition_by].astype(jnp.int32)
+        ts_col = merged[spec.order_by].astype(jnp.int32)
+        # stable (key, ts, rank, arrival) order; base rank sorts LAST among
+        # equal timestamps == online insert-after-peers (see timestore).
+        perm = jnp.lexsort((merged["__arrival__"], merged["__rank__"],
+                            ts_col, key_col))
+        env = {k: jnp.take(v, perm, axis=0) for k, v in merged.items()}
+        key_s = jnp.take(key_col, perm)
+        ts_s = jnp.take(ts_col, perm)
+
+        seg_start = segment_starts(key_s)
+        n = key_s.shape[0]
+        seg_flag = jnp.arange(n, dtype=jnp.int32) == seg_start
+        start, end = window_bounds(spec, key_s, ts_s, seg_start)
+
+        feats = fold_windows(w.aggs, env, start, end, seg_start, seg_flag)
+
+        # ConcatJoin on the index column: scatter back to base-row order
+        orig = env["__orig__"]  # n_base == out-of-bounds => dropped
+        outs = []
+        for f in feats:
+            shape = (n_base,) + f.shape[1:]
+            buf = jnp.zeros(shape, f.dtype)
+            outs.append(buf.at[orig].set(f, mode="drop"))
+        return outs
+
+    def _offline_last_join(self, arrays, js: LastJoinSpec
+                           ) -> Dict[str, jnp.ndarray]:
+        base = arrays[self.script.base_table]
+        right = arrays[js.right_table]
+        order = js.order_by or self.script.order_column
+        rk = right[js.right_key].astype(jnp.int32)
+        rts = right[order].astype(jnp.int32)
+        perm = jnp.lexsort((rts, rk))
+        rk_s = jnp.take(rk, perm)
+        rts_s = jnp.take(rts, perm)
+
+        lk = base[js.left_key].astype(jnp.int32)
+        lts = base[self.script.order_column].astype(jnp.int32)
+        lo = jnp.searchsorted(rk_s, lk, side="left").astype(jnp.int32)
+        hi = jnp.searchsorted(rk_s, lk, side="right").astype(jnp.int32)
+        if js.point_in_time:
+            pos = first_geq(rts_s, lts + 1, lo, hi) - 1
+        else:
+            pos = hi - 1
+        valid = pos >= lo
+        safe = jnp.clip(pos, 0, max(rk_s.shape[0] - 1, 0))
+
+        out: Dict[str, jnp.ndarray] = {}
+        for col in self.join_cols.get(js.right_table, []):
+            v = jnp.take(jnp.take(right[col], perm, axis=0), safe, axis=0)
+            out[f"{js.right_table}.{col}"] = jnp.where(
+                valid, v, jnp.zeros_like(v))
+        out[f"{js.right_table}.__matched__"] = valid
+        return out
+
+    # ======================================================================
+    # ONLINE driver (request mode against the live store)
+    # ======================================================================
+
+    def required_store_columns(self) -> Dict[str, List[str]]:
+        """Which columns each table's online store must retain."""
+        need: Dict[str, set] = {}
+        for w in self.windows:
+            spec = w.node.spec
+            for t in w.sources:
+                s = need.setdefault(t, set())
+                s |= set(w.needed_cols)
+                s.add(spec.partition_by)
+        for js in self.script.last_joins:
+            s = need.setdefault(js.right_table, set())
+            s |= set(self.join_cols.get(js.right_table, []))
+            s.add(js.right_key)
+        need.setdefault(self.script.base_table, set())
+        return {t: sorted(cs - {"ts"}) for t, cs in need.items()}
+
+    def online(self, store: "timestore.OnlineStore", key: int, ts: int,
+               values: Dict[str, float],
+               preagg_states: Optional[Dict[int, Any]] = None
+               ) -> Dict[str, np.ndarray]:
+        """Compute features for one request tuple (virtually inserted)."""
+        states = store.tables
+        use_pre = preagg_states is not None
+        # hot path: per-instance fn cache keyed by store identity
+        local_key = (id(store), store.capacity, use_pre)
+        fn = self._online_fns.get(local_key)
+        if fn is None:
+            sig = tuple(sorted((t, s["keys"].shape[0]) for t, s in
+                               states.items()))
+            cache_key = ("online", self._fingerprint, sig, use_pre)
+            fn = _cached(cache_key,
+                         lambda: jax.jit(functools.partial(
+                             self._online_fn, use_preagg=use_pre)))
+            self._online_fns[local_key] = fn
+        vals = {k: jnp.asarray(v, jnp.float32) for k, v in values.items()}
+        out = fn(states, jnp.int32(key), jnp.int32(ts), vals,
+                 preagg_states if use_pre else {})
+        return {k: np.asarray(v) for k, v in out.items()}
+
+    def _online_fn(self, states, key, ts, values, preagg_states,
+                   use_preagg=False):
+        out: Dict[str, jnp.ndarray] = {}
+        for wi, w in enumerate(self.windows):
+            if use_preagg and w.preagg is not None:
+                folded = self._online_window_preagg(
+                    states, w, key, ts, values, preagg_states[wi])
+            else:
+                folded = self._online_window_raw(states, w, key, ts, values)
+            for name, agg in zip(w.feature_names, w.aggs):
+                out[name] = agg.finalize(folded)
+
+        env: Dict[str, jnp.ndarray] = dict(values)
+        env[self.script.order_column] = jnp.asarray(ts, jnp.int32)
+        for js in self.script.last_joins:
+            env.update(self._online_last_join(states, js, env, key, ts))
+        for item in self.plan.scalar_items:
+            out[item.name] = jnp.asarray(eval_scalar(item.expr, env))
+        return {it.name: out[it.name] for it in self.script.select}
+
+    def _gather_sources(self, states, w: _WindowPhys, key, ts,
+                        t0) -> Tuple[Dict[str, jnp.ndarray], jnp.ndarray,
+                                     jnp.ndarray, jnp.ndarray]:
+        """Fixed-size merged buffer of all window rows before the request."""
+        spec = w.node.spec
+        bufs = []
+        for rank, tname in enumerate(w.sources):
+            st = states[tname]
+            lo, hi = timestore.range_bounds(st, key, t0, ts)
+            cols, ts_arr, valid = timestore.gather_window(
+                st, lo, hi, w.online_buffer, list(w.needed_cols))
+            bufs.append((cols, ts_arr, valid,
+                         jnp.full_like(ts_arr, rank)))
+        cols = {c: jnp.concatenate([b[0][c] for b in bufs])
+                for c in w.needed_cols}
+        ts_all = jnp.concatenate([b[1] for b in bufs])
+        valid = jnp.concatenate([b[2] for b in bufs])
+        rank = jnp.concatenate([b[3] for b in bufs])
+        return cols, ts_all, valid, rank
+
+    def _merge_request(self, w: _WindowPhys, cols, ts_all, valid, rank,
+                       key, ts, values):
+        """Append the (virtually inserted) request row, sort by (ts, rank),
+        apply the ROWS-frame cap, return the env for leaf folds."""
+        spec = w.node.spec
+        n_src = len(w.sources)
+        req_valid = not spec.instance_not_in_window
+        cols = {c: jnp.concatenate(
+            [v, jnp.asarray(values.get(c, 0.0), v.dtype)[None]])
+            for c, v in cols.items()}
+        ts_all = jnp.concatenate([ts_all, jnp.asarray(ts, jnp.int32)[None]])
+        valid = jnp.concatenate(
+            [valid, jnp.asarray(req_valid, bool)[None]])
+        rank = jnp.concatenate(
+            [rank, jnp.full((1,), n_src, jnp.int32)])
+
+        sort_ts = jnp.where(valid, ts_all, jnp.int32(2**31 - 1))
+        pos0 = jnp.arange(ts_all.shape[0], dtype=jnp.int32)
+        perm = jnp.lexsort((pos0, rank, sort_ts))
+        env = {c: jnp.take(v, perm) for c, v in cols.items()}
+        keep = jnp.take(valid, perm)
+
+        if spec.frame_rows:
+            # valid rows sort before invalid (ts=MAX) rows, so the newest
+            # (preceding+1) valid rows occupy positions [n_keep-p-1, n_keep)
+            n_keep = jnp.sum(keep.astype(jnp.int32))
+            pos = jnp.arange(keep.shape[0], dtype=jnp.int32)
+            keep = keep & (pos >= n_keep - jnp.int32(spec.preceding + 1))
+        if spec.maxsize:
+            n_keep = jnp.sum(keep.astype(jnp.int32))
+            pos = jnp.arange(keep.shape[0], dtype=jnp.int32)
+            keep = keep & (pos >= n_keep - jnp.int32(spec.maxsize))
+        env["__valid__"] = keep
+        env[spec.order_by] = jnp.take(ts_all, perm)
+        return env
+
+    def _online_window_raw(self, states, w: _WindowPhys, key, ts, values
+                           ) -> Dict[str, jnp.ndarray]:
+        spec = w.node.spec
+        t0 = (ts - jnp.int32(min(spec.preceding, 2**30))) \
+            if not spec.frame_rows else jnp.int32(INT_MIN)
+        cols, ts_all, valid, rank = self._gather_sources(
+            states, w, key, ts, t0)
+        env = self._merge_request(w, cols, ts_all, valid, rank, key, ts,
+                                  values)
+        return _ordered_fold(_unique_leaves(w.aggs), env)
+
+    def _online_window_preagg(self, states, w: _WindowPhys, key, ts,
+                              values, pre_state) -> Dict[str, jnp.ndarray]:
+        """Long-window path (§5.1): interior from bucket partials, edges
+        raw, ordered combine edge_l ⊕ buckets ⊕ edge_r ⊕ request."""
+        return w.preagg.fold_online(
+            states, w, key, ts, values, pre_state,
+            gather=self._gather_edges, merge=self._merge_request)
+
+    def _gather_edges(self, states, w, key, t0, t1):
+        """Raw rows with ts in [t0, t1) across sources (edge buckets)."""
+        bufs = []
+        for rank, tname in enumerate(w.sources):
+            st = states[tname]
+            lo, hi = timestore.range_bounds(st, key, t0, t1 - 1)
+            cols, ts_arr, valid = timestore.gather_window(
+                st, lo, hi, w.preagg.max_bucket_rows, list(w.needed_cols))
+            bufs.append((cols, ts_arr, valid, jnp.full_like(ts_arr, rank)))
+        cols = {c: jnp.concatenate([b[0][c] for b in bufs])
+                for c in w.needed_cols}
+        ts_all = jnp.concatenate([b[1] for b in bufs])
+        valid = jnp.concatenate([b[2] for b in bufs])
+        rank = jnp.concatenate([b[3] for b in bufs])
+        sort_ts = jnp.where(valid, ts_all, jnp.int32(2**31 - 1))
+        pos0 = jnp.arange(ts_all.shape[0], dtype=jnp.int32)
+        perm = jnp.lexsort((pos0, rank, sort_ts))
+        env = {c: jnp.take(v, perm) for c, v in cols.items()}
+        env["__valid__"] = jnp.take(valid, perm)
+        return env
+
+    def _online_last_join(self, states, js: LastJoinSpec, env, key, ts):
+        st = states[js.right_table]
+        jk = env.get(js.left_key)
+        jk = key if jk is None else jnp.asarray(jk, jnp.int32)
+        lo, hi = timestore.range_bounds(st, jk, jnp.int32(INT_MIN), ts)
+        pos = hi - 1
+        valid = pos >= lo
+        safe = jnp.clip(pos, 0, st["keys"].shape[0] - 1)
+        out = {}
+        for col in self.join_cols.get(js.right_table, []):
+            v = st["cols"][col][safe]
+            out[f"{js.right_table}.{col}"] = jnp.where(valid, v,
+                                                       jnp.zeros_like(v))
+        out[f"{js.right_table}.__matched__"] = valid
+        return out
+
+    # -- pre-aggregation plumbing -------------------------------------------
+    def init_preagg_states(self) -> Dict[int, Any]:
+        return {wi: w.preagg.init_state()
+                for wi, w in enumerate(self.windows) if w.preagg is not None}
+
+    def preagg_update(self, pre_states: Dict[int, Any], table: str,
+                      key: int, ts: int, values: Dict[str, float]):
+        """Fold one ingested row into every relevant window's buckets —
+        driven from the store binlog (asynchronous, §5.1)."""
+        for wi, w in enumerate(self.windows):
+            if w.preagg is None or table not in w.sources:
+                continue
+            pre_states[wi] = w.preagg.update(
+                pre_states[wi], jnp.int32(key), jnp.int32(ts),
+                {k: jnp.asarray(v, jnp.float32) for k, v in values.items()})
+        return pre_states
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def _unique_leaves(aggs: Sequence[Aggregator]):
+    uniq = {}
+    for a in aggs:
+        for leaf in a.leaves:
+            uniq.setdefault(leaf.key, leaf)
+    return uniq
+
+
+def _tree_fold(leaf, lifted: jnp.ndarray) -> jnp.ndarray:
+    """Ordered log-depth tree reduction (cheaper than a full prefix scan
+    when only the total fold is needed — the online request case)."""
+    n = lifted.shape[0]
+    n_pad = 1 << max(1, (n - 1).bit_length())
+    if n_pad > n:
+        ident = jnp.broadcast_to(leaf.identity(),
+                                 (n_pad - n,) + lifted.shape[1:])
+        lifted = jnp.concatenate([lifted, ident], axis=0)
+    while lifted.shape[0] > 1:
+        lifted = leaf.combine(lifted[0::2], lifted[1::2])
+    return lifted[0]
+
+
+def _ordered_fold(leaves: Dict[str, Any], env) -> Dict[str, jnp.ndarray]:
+    """Fold every (deduplicated) leaf over the ordered buffer."""
+    out = {}
+    for k, leaf in leaves.items():
+        out[k] = _tree_fold(leaf, leaf.lift(env))
+    return out
+
+
+def _walk(e: Expr):
+    yield e
+    for attr in ("lhs", "rhs", "operand"):
+        child = getattr(e, attr, None)
+        if child is not None:
+            yield from _walk(child)
+    for a in getattr(e, "args", ()) or ():
+        yield from _walk(a)
+
+
+def compile_script(script_or_sql, tables: Optional[Dict[str, Table]] = None,
+                   **ctx_kwargs) -> CompiledScript:
+    """Front door: SQL text or FeatureScript -> CompiledScript."""
+    if isinstance(script_or_sql, str):
+        from .sql import parse
+
+        script = parse(script_or_sql)
+    else:
+        script = script_or_sql
+    ctx = CompileContext(tables=tables, **ctx_kwargs)
+    return CompiledScript(script, ctx)

@@ -1,0 +1,427 @@
+"""Aggregate feature functions as bounded-state monoids.
+
+The paper's entire online-optimization suite reduces to one algebraic fact:
+every OpenMLDB window function can be expressed as a *monoid* over a bounded
+per-row state:
+
+  - ``lift``      row -> state
+  - ``combine``   state x state -> state           (associative)
+  - ``identity``  neutral element
+  - ``invert_prefix`` (optional)  prefix-difference: given segment-prefix
+    folds P_end and P_start, recover the fold of rows [start, end).
+
+With that interface:
+  * long-window **pre-aggregation** (§5.1)  = cache ``combine``-folds per
+    time bucket, answer queries by combining bucket partials + raw edges;
+  * **subtract-and-evict** incremental windows (§5.2) = ``invert_prefix``;
+  * **cycle binding** (§4.2) = leaf-level CSE: ``avg`` re-uses the same
+    ``sum``/``count`` leaves as plain ``sum``/``count``;
+  * segment trees (§5.1) = balanced ``combine`` trees for non-invertible
+    leaves (min/max/drawdown).
+
+Dictionary encoding (types.Dictionary) bounds category cardinality, which
+turns the paper's "exact-scan" functions (topN_frequency, distinct_count,
+avg_cate_where) into *exact* bounded-state monoids: their state is a
+(cardinality,)-histogram.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .expr import AggCall, ColumnRef, Expr, Literal, eval_scalar
+
+__all__ = [
+    "Leaf", "AddLeaf", "MinLeaf", "MaxLeaf", "DrawdownLeaf", "EWLeaf",
+    "Aggregator", "build_aggregator", "eval_scalar_fn", "AGG_FUNCTIONS",
+]
+
+_NEG_INF = -3.0e38  # f32-safe sentinels (avoid inf arithmetic in combines)
+_POS_INF = 3.0e38
+
+
+# --------------------------------------------------------------------------
+# Leaves: the unit of state sharing (cycle binding happens at leaf level).
+# --------------------------------------------------------------------------
+
+
+class Leaf:
+    key: str
+    shape: Tuple[int, ...]
+    invertible: bool = False
+
+    def lift(self, env) -> jnp.ndarray:
+        """Per-row states: (rows, *shape)."""
+        raise NotImplementedError
+
+    def identity(self) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def combine(self, a, b):
+        raise NotImplementedError
+
+    def invert_prefix(self, p_end, p_start):
+        raise NotImplementedError
+
+
+def _masked(env, value, fill):
+    """Apply the window-validity mask if present (rows outside a window
+    or NULL rows contribute the identity)."""
+    mask = env.get("__valid__")
+    if mask is None:
+        return value
+    mask = jnp.asarray(mask)
+    extra = value.ndim - mask.ndim
+    if extra > 0:
+        mask = mask.reshape(mask.shape + (1,) * extra)
+    return jnp.where(mask, value, fill)
+
+
+@dataclasses.dataclass
+class AddLeaf(Leaf):
+    """Additive leaf: sum-like; covers scalar sums/counts and histograms."""
+
+    key: str
+    value_fn: Callable[[dict], jnp.ndarray]
+    shape: Tuple[int, ...] = ()
+    invertible: bool = True
+
+    def lift(self, env):
+        v = self.value_fn(env).astype(jnp.float32)
+        return _masked(env, v, jnp.zeros((), jnp.float32))
+
+    def identity(self):
+        return jnp.zeros(self.shape, jnp.float32)
+
+    def combine(self, a, b):
+        return a + b
+
+    def invert_prefix(self, p_end, p_start):
+        return p_end - p_start
+
+
+@dataclasses.dataclass
+class MinLeaf(Leaf):
+    key: str
+    value_fn: Callable[[dict], jnp.ndarray] = None
+    shape: Tuple[int, ...] = ()
+    invertible: bool = False
+
+    def lift(self, env):
+        v = self.value_fn(env).astype(jnp.float32)
+        return _masked(env, v, jnp.float32(_POS_INF))
+
+    def identity(self):
+        return jnp.full(self.shape, _POS_INF, jnp.float32)
+
+    def combine(self, a, b):
+        return jnp.minimum(a, b)
+
+
+@dataclasses.dataclass
+class MaxLeaf(Leaf):
+    key: str
+    value_fn: Callable[[dict], jnp.ndarray] = None
+    shape: Tuple[int, ...] = ()
+    invertible: bool = False
+
+    def lift(self, env):
+        v = self.value_fn(env).astype(jnp.float32)
+        return _masked(env, v, jnp.float32(_NEG_INF))
+
+    def identity(self):
+        return jnp.full(self.shape, _NEG_INF, jnp.float32)
+
+    def combine(self, a, b):
+        return jnp.maximum(a, b)
+
+
+@dataclasses.dataclass
+class DrawdownLeaf(Leaf):
+    """Max decline percentage from a running peak (paper §4.1(3)).
+
+    State [mx, mn, dd]: segment max, segment min, best drawdown inside the
+    segment.  combine(L, R) additionally considers peaks in L with troughs
+    in R — exactly the cross-term of a segment-tree merge.  Values are
+    assumed positive (prices); non-positive peaks contribute no drawdown.
+    """
+
+    key: str
+    value_fn: Callable[[dict], jnp.ndarray] = None
+    shape: Tuple[int, ...] = (3,)
+    invertible: bool = False
+
+    def lift(self, env):
+        v = self.value_fn(env).astype(jnp.float32)
+        mx = _masked(env, v, jnp.float32(_NEG_INF))
+        mn = _masked(env, v, jnp.float32(_POS_INF))
+        dd = jnp.zeros_like(v)
+        return jnp.stack([mx, mn, dd], axis=-1)
+
+    def identity(self):
+        return jnp.asarray([_NEG_INF, _POS_INF, 0.0], jnp.float32)
+
+    def combine(self, a, b):
+        amx, amn, add_ = a[..., 0], a[..., 1], a[..., 2]
+        bmx, bmn, bdd = b[..., 0], b[..., 1], b[..., 2]
+        ok = (amx > 0) & (amx > _NEG_INF / 2) & (bmn < _POS_INF / 2)
+        cross = jnp.where(ok, (amx - bmn) / jnp.where(ok, amx, 1.0), 0.0)
+        dd = jnp.maximum(jnp.maximum(add_, bdd), jnp.maximum(cross, 0.0))
+        return jnp.stack(
+            [jnp.maximum(amx, bmx), jnp.minimum(amn, bmn), dd], axis=-1
+        )
+
+
+@dataclasses.dataclass
+class EWLeaf(Leaf):
+    """Exponentially-weighted average (paper §4.1(3), ``ew_avg``).
+
+    For ordered rows x_1..x_n (oldest..newest) with decay d = 1/(1+alpha):
+        ew = (sum_i d^(n-i) x_i) / (sum_i d^(n-i))
+    State [ws, wc, n]; combine(L, R) = [R.ws + d^R.n * L.ws, ..., L.n+R.n]
+    — a first-order linear recurrence, i.e. the same algebra as the
+    chunked-scan kernel used by the SSM blocks (kernels/chunked_scan).
+    Left-prefix-invertible: W = P_end ⊖ d^(e-s)·P_start.
+    """
+
+    key: str
+    value_fn: Callable[[dict], jnp.ndarray] = None
+    decay: float = 0.5
+    shape: Tuple[int, ...] = (3,)
+    invertible: bool = True
+
+    def lift(self, env):
+        v = self.value_fn(env).astype(jnp.float32)
+        one = jnp.ones_like(v)
+        ws = _masked(env, v, jnp.zeros((), jnp.float32))
+        wc = _masked(env, one, jnp.zeros((), jnp.float32))
+        n = _masked(env, one, jnp.zeros((), jnp.float32))
+        return jnp.stack([ws, wc, n], axis=-1)
+
+    def identity(self):
+        return jnp.zeros((3,), jnp.float32)
+
+    def _pow(self, n):
+        d = jnp.float32(self.decay)
+        return jnp.exp(n * jnp.log(d))
+
+    def combine(self, a, b):
+        scale = self._pow(b[..., 2])
+        ws = b[..., 0] + scale * a[..., 0]
+        wc = b[..., 1] + scale * a[..., 1]
+        return jnp.stack([ws, wc, a[..., 2] + b[..., 2]], axis=-1)
+
+    def invert_prefix(self, p_end, p_start):
+        n = p_end[..., 2] - p_start[..., 2]
+        scale = self._pow(n)
+        ws = p_end[..., 0] - scale * p_start[..., 0]
+        wc = p_end[..., 1] - scale * p_start[..., 1]
+        return jnp.stack([ws, wc, n], axis=-1)
+
+
+# --------------------------------------------------------------------------
+# Aggregators: feature functions = leaves + a finalizer.
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Aggregator:
+    name: str
+    leaves: List[Leaf]
+    finalize: Callable[[Dict[str, jnp.ndarray]], jnp.ndarray]
+    n_outputs: int = 1
+    output_names: Optional[List[str]] = None
+
+    @property
+    def invertible(self) -> bool:
+        return all(l.invertible for l in self.leaves)
+
+
+def _value_fn(arg: Expr):
+    return lambda env: jnp.asarray(eval_scalar(arg, env))
+
+
+def _onehot_fn(arg: Expr, card: int, weight: Optional[Expr] = None,
+               cond: Optional[Expr] = None):
+    """(rows, card) one-hot (optionally value-weighted / condition-masked).
+
+    This is the dense histogram lift that makes topN_frequency /
+    distinct_count / avg_cate_where exact bounded-state monoids.
+    """
+
+    def fn(env):
+        code = jnp.asarray(eval_scalar(arg, env)).astype(jnp.int32)
+        oh = jax_one_hot(code, card)
+        if cond is not None:
+            c = jnp.asarray(eval_scalar(cond, env)).astype(jnp.float32)
+            oh = oh * c[..., None]
+        if weight is not None:
+            w = jnp.asarray(eval_scalar(weight, env)).astype(jnp.float32)
+            oh = oh * w[..., None]
+        return oh
+
+    return fn
+
+
+def jax_one_hot(code, card):
+    iota = jnp.arange(card, dtype=jnp.int32)
+    return (code[..., None] == iota).astype(jnp.float32)
+
+
+def _safe_div(a, b):
+    return a / jnp.where(b == 0, 1.0, b)
+
+
+def build_aggregator(call: AggCall, ctx) -> Aggregator:
+    """Construct the Aggregator for one AggCall.
+
+    ``ctx`` provides ``cardinality(expr) -> int`` for histogram-state
+    functions (derived from dictionary sizes / declared bounds).
+    """
+    fn = call.fn.lower()
+    args = call.args
+    params = call.params
+
+    def fp(i):  # fingerprint of the i-th argument
+        return args[i].fingerprint()
+
+    if fn in ("sum", "count", "avg", "stddev", "variance"):
+        leaves: List[Leaf] = []
+        if fn != "count":
+            leaves.append(AddLeaf(f"sum:{fp(0)}", _value_fn(args[0])))
+        if fn != "sum":
+            cnt_key = f"count:{fp(0)}"
+            leaves.append(AddLeaf(cnt_key, lambda env: jnp.ones_like(
+                jnp.asarray(eval_scalar(args[0], env)), jnp.float32)))
+        if fn in ("stddev", "variance"):
+            sq = lambda env: jnp.square(
+                jnp.asarray(eval_scalar(args[0], env)).astype(jnp.float32))
+            leaves.append(AddLeaf(f"sumsq:{fp(0)}", sq))
+        keys = [l.key for l in leaves]
+
+        if fn == "sum":
+            fin = lambda s: s[keys[0]]
+        elif fn == "count":
+            fin = lambda s: s[keys[0]]
+        elif fn == "avg":
+            fin = lambda s: _safe_div(s[keys[0]], s[keys[1]])
+        else:
+            def fin(s, _v=(fn == "variance")):
+                mean = _safe_div(s[keys[0]], s[keys[1]])
+                var = _safe_div(s[keys[2]], s[keys[1]]) - jnp.square(mean)
+                var = jnp.maximum(var, 0.0)
+                return var if _v else jnp.sqrt(var)
+        return Aggregator(fn, leaves, fin)
+
+    if fn in ("min", "max"):
+        cls = MinLeaf if fn == "min" else MaxLeaf
+        leaf = cls(f"{fn}:{fp(0)}", _value_fn(args[0]))
+        sentinel = _POS_INF if fn == "min" else _NEG_INF
+
+        def fin(s, k=leaf.key, sent=sentinel):
+            v = s[k]
+            return jnp.where(jnp.abs(v) >= abs(sent) / 2, 0.0, v)
+
+        return Aggregator(fn, [leaf], fin)
+
+    if fn == "distinct_count":
+        card = ctx.cardinality(args[0])
+        leaf = AddLeaf(f"hist:{fp(0)}:{card}", _onehot_fn(args[0], card),
+                       shape=(card,))
+        return Aggregator(
+            fn, [leaf],
+            lambda s, k=leaf.key: jnp.sum((s[k] > 0).astype(jnp.float32),
+                                          axis=-1))
+
+    if fn in ("topn_frequency", "top_n_frequency", "topn_freq"):
+        card = ctx.cardinality(args[0])
+        top_n = int(params[0]) if params else int(args[1].value)
+        leaf = AddLeaf(f"hist:{fp(0)}:{card}", _onehot_fn(args[0], card),
+                       shape=(card,))
+
+        def fin(s, k=leaf.key, n=top_n):
+            import jax
+
+            counts = s[k]
+            vals, idx = jax.lax.top_k(counts, n)
+            return jnp.where(vals > 0, idx, -1).astype(jnp.float32)
+
+        return Aggregator(fn, [leaf], fin, n_outputs=top_n,
+                          output_names=[f"top{i+1}" for i in range(top_n)])
+
+    if fn in ("avg_cate_where", "avg_category_where", "avg_cate"):
+        # avg_cate(value, category) / avg_cate_where(value, cond, category)
+        if fn == "avg_cate":
+            value, cond, cat = args[0], None, args[1]
+        else:
+            value, cond, cat = args[0], args[1], args[2]
+        card = ctx.cardinality(cat)
+        cfp = cat.fingerprint()
+        wfp = value.fingerprint()
+        xfp = cond.fingerprint() if cond is not None else ""
+        s_leaf = AddLeaf(f"cate_sum:{wfp}|{xfp}|{cfp}:{card}",
+                         _onehot_fn(cat, card, weight=value, cond=cond),
+                         shape=(card,))
+        c_leaf = AddLeaf(f"cate_cnt:{xfp}|{cfp}:{card}",
+                         _onehot_fn(cat, card, cond=cond), shape=(card,))
+
+        def fin(s, sk=s_leaf.key, ck=c_leaf.key):
+            return _safe_div(s[sk], s[ck])
+
+        return Aggregator(fn, [s_leaf, c_leaf], fin, n_outputs=card,
+                          output_names=[f"cate{i}" for i in range(card)])
+
+    if fn == "drawdown":
+        leaf = DrawdownLeaf(f"dd:{fp(0)}", _value_fn(args[0]))
+        return Aggregator(fn, [leaf],
+                          lambda s, k=leaf.key: jnp.maximum(s[k][..., 2], 0.0))
+
+    if fn == "ew_avg":
+        alpha = float(params[0]) if params else float(args[1].value)
+        decay = 1.0 / (1.0 + alpha)
+        leaf = EWLeaf(f"ew:{fp(0)}:{decay:.6g}", _value_fn(args[0]),
+                      decay=decay)
+        return Aggregator(fn, [leaf],
+                          lambda s, k=leaf.key: _safe_div(s[k][..., 0],
+                                                          s[k][..., 1]))
+
+    raise ValueError(f"unknown aggregate function {call.fn!r}")
+
+
+AGG_FUNCTIONS = (
+    "sum", "count", "avg", "min", "max", "stddev", "variance",
+    "distinct_count", "topn_frequency", "avg_cate_where", "avg_cate",
+    "drawdown", "ew_avg",
+)
+
+
+# --------------------------------------------------------------------------
+# Scalar (row-level) functions — §4.1 (4)(5).
+# --------------------------------------------------------------------------
+
+
+def eval_scalar_fn(name: str, args: Sequence[Expr], env):
+    name = name.lower()
+    if name == "multiclass_label":
+        return jnp.asarray(eval_scalar(args[0], env)).astype(jnp.int32)
+    if name in ("continuous", "label"):
+        return jnp.asarray(eval_scalar(args[0], env)).astype(jnp.float32)
+    if name == "discrete":
+        # feature-signature hashing; dim is a static literal
+        from ..kernels.feature_hash import ops as fh_ops
+
+        code = jnp.asarray(eval_scalar(args[0], env)).astype(jnp.int32)
+        dim = int(args[1].value) if len(args) > 1 else 1 << 20
+        return fh_ops.feature_hash(code, dim).astype(jnp.float32)
+    if name == "abs":
+        return jnp.abs(jnp.asarray(eval_scalar(args[0], env)))
+    if name == "log1p":
+        return jnp.log1p(jnp.asarray(eval_scalar(args[0], env)))
+    if name in ("if_null", "ifnull"):
+        v = jnp.asarray(eval_scalar(args[0], env))
+        return jnp.where(jnp.isnan(v), eval_scalar(args[1], env), v)
+    raise ValueError(f"unknown scalar function {name!r}")

@@ -1,0 +1,243 @@
+"""Long-window pre-aggregation (§5.1).
+
+Aggregators are maintained at two time granularities (fine bucket ``g`` ms
+and coarse bucket ``g * fanout`` ms — the paper's daily/monthly hierarchy).
+On ingest (driven from the store binlog, i.e. asynchronously w.r.t. the
+insert path), each row's lifted leaf state is combined into its (key, fine
+bucket) and (key, coarse bucket) slots.
+
+An online query over ``[t0 = ts - W, ts]`` is decomposed exactly as in the
+paper's Figure 4:
+
+    raw left edge  | fine buckets | coarse buckets | fine buckets | raw right edge (+ request row)
+    [t0, fb0*g)      [fb0, cb0*f)   [cb0, cb1)       [cb1*f, fbr)    [fbr*g, ts]
+
+and folded *in time order* (the monoid combines of drawdown/ew_avg are
+order-sensitive), replacing an O(window) scan with O(fanout + W/(g*fanout))
+combines + two bounded edge scans.
+
+Buckets live in ring buffers indexed by absolute bucket id modulo capacity;
+a per-slot ``epoch`` array stores the absolute id so stale slots read as
+identity (no explicit clearing pass needed).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .functions import Leaf
+from .window import WindowSpec
+
+__all__ = ["PreAgg"]
+
+
+@dataclasses.dataclass
+class PreAgg:
+    spec: WindowSpec
+    leaves: Dict[str, Leaf]
+    bucket_ms: int                 # fine granularity g
+    window_ms: int                 # W
+    n_keys: int
+    value_cols: Tuple[str, ...]
+    fanout: int = 16               # coarse = g * fanout
+    max_bucket_rows: int = 128     # edge-scan buffer bound
+
+    def __post_init__(self):
+        self.coarse_ms = self.bucket_ms * self.fanout
+        # ring capacities: enough fine slots to cover one window + slack
+        self.n_fine = max(4, self.window_ms // self.bucket_ms + 2 * self.fanout)
+        self.n_coarse = max(4, self.window_ms // self.coarse_ms + 4)
+        # static count of coarse buckets a window can span
+        self.max_coarse_q = self.window_ms // self.coarse_ms + 2
+        self._update_jit = jax.jit(self._update_impl)
+        # §5.1 "aggregator hierarchy enhancement": per-level query stats
+        self.query_stats = {"fine": 0, "coarse": 0, "raw_edge": 0,
+                            "queries": 0}
+
+    # -------------------------------------------------------- adaptivity
+    def observe_query(self, ts: int):
+        """Record which levels a query at time ``ts`` touches (host-side
+        bookkeeping; the paper adjusts the hierarchy from such stats)."""
+        g, f = self.bucket_ms, self.fanout
+        t0 = ts - self.window_ms
+        fb0 = -(-t0 // g)
+        fbr = ts // g
+        cb0 = -(-fb0 // f)
+        cb1 = fbr // f
+        n_coarse = max(0, cb1 - cb0)
+        n_fine = max(0, (min(cb0 * f, fbr) - fb0)) + \
+            max(0, fbr - max(cb1 * f, fb0))
+        self.query_stats["queries"] += 1
+        self.query_stats["coarse"] += n_coarse
+        self.query_stats["fine"] += n_fine
+        self.query_stats["raw_edge"] += 2
+
+    def suggest_hierarchy(self) -> dict:
+        """Adaptive-hierarchy advice (§5.1): if coarse buckets are rarely
+        used the level is wasted maintenance; if fine-per-query is high a
+        coarser/extra level would shrink query work."""
+        q = max(1, self.query_stats["queries"])
+        fine_pq = self.query_stats["fine"] / q
+        coarse_pq = self.query_stats["coarse"] / q
+        advice = "keep"
+        if coarse_pq < 0.5 and q >= 16:
+            advice = "drop-coarse-level"
+        elif fine_pq > 4 * self.fanout:
+            advice = "add-coarser-level"
+        return {"fine_per_query": fine_pq, "coarse_per_query": coarse_pq,
+                "advice": advice}
+
+    # ------------------------------------------------------------------ state
+    def init_state(self) -> Dict[str, Any]:
+        fine, coarse = {}, {}
+        for k, leaf in self.leaves.items():
+            ident = leaf.identity()
+            fine[k] = jnp.broadcast_to(
+                ident, (self.n_keys, self.n_fine) + ident.shape).copy()
+            coarse[k] = jnp.broadcast_to(
+                ident, (self.n_keys, self.n_coarse) + ident.shape).copy()
+        return {
+            "fine": fine,
+            "coarse": coarse,
+            "fine_epoch": jnp.full((self.n_keys, self.n_fine), -1, jnp.int32),
+            "coarse_epoch": jnp.full((self.n_keys, self.n_coarse), -1,
+                                     jnp.int32),
+        }
+
+    # ----------------------------------------------------------------- update
+    def update(self, state, key, ts, values):
+        return self._update_jit(state, key, ts, values)
+
+    def _update_impl(self, state, key, ts, values):
+        env = {c: jnp.asarray(values.get(c, 0.0), jnp.float32)
+               for c in self.value_cols}
+        env[self.spec.order_by] = jnp.asarray(ts, jnp.int32)
+        key = jnp.clip(key, 0, self.n_keys - 1)
+
+        fine_id = ts // jnp.int32(self.bucket_ms)
+        coarse_id = ts // jnp.int32(self.coarse_ms)
+        out = dict(state)
+        out["fine"] = dict(state["fine"])
+        out["coarse"] = dict(state["coarse"])
+
+        for k, leaf in self.leaves.items():
+            lifted = leaf.lift(env)  # scalar state
+            out["fine"][k] = _fold_slot(
+                state["fine"][k], state["fine_epoch"], leaf, lifted, key,
+                fine_id, self.n_fine)
+            out["coarse"][k] = _fold_slot(
+                state["coarse"][k], state["coarse_epoch"], leaf, lifted, key,
+                coarse_id, self.n_coarse)
+        out["fine_epoch"] = state["fine_epoch"].at[
+            key, fine_id % self.n_fine].set(fine_id)
+        out["coarse_epoch"] = state["coarse_epoch"].at[
+            key, coarse_id % self.n_coarse].set(coarse_id)
+        return out
+
+    # ------------------------------------------------------------------ query
+    def fold_online(self, states, w, key, ts, values, pre_state,
+                    gather: Callable, merge: Callable
+                    ) -> Dict[str, jnp.ndarray]:
+        """Ordered fold over [ts-W, ts] using partials + raw edges."""
+        g = jnp.int32(self.bucket_ms)
+        f = jnp.int32(self.fanout)
+        cg = jnp.int32(self.coarse_ms)
+        t0 = ts - jnp.int32(self.window_ms)
+
+        fb0 = (t0 + g - 1) // g          # first fully-covered fine bucket
+        fbr = ts // g                     # current (partial) fine bucket
+        fb0 = jnp.minimum(fb0, fbr)
+        cb0 = (fb0 + f - 1) // f          # first fully-covered coarse bucket
+        cb1 = fbr // f                     # end (exclusive) coarse bucket
+        cb0 = jnp.minimum(cb0, cb1)
+        has_coarse = cb1 > cb0
+        # without any coarse bucket, fine range is just [fb0, fbr)
+        fine_l_end = jnp.where(has_coarse, cb0 * f, fbr)
+        fine_r_start = jnp.where(has_coarse, cb1 * f, fbr)
+
+        key_c = jnp.clip(key, 0, self.n_keys - 1)
+
+        # ---- raw edges -----------------------------------------------------
+        env_l = gather(states, w, key, t0, fb0 * g)
+        env_r = gather(states, w, key, fbr * g, ts + 1)
+        # request row joins the right edge (ordered last)
+        env_r = _append_request(env_r, self.spec, self.value_cols, values,
+                                ts)
+
+        out: Dict[str, jnp.ndarray] = {}
+        for k, leaf in self.leaves.items():
+            left = _fold_env(leaf, env_l)
+            right = _fold_env(leaf, env_r)
+            # no-coarse case: the fine range can span up to 2*fanout-1
+            fine_a = self._fold_bucket_range(
+                pre_state["fine"][k], pre_state["fine_epoch"], leaf, key_c,
+                fb0, fine_l_end, self.n_fine, 2 * self.fanout)
+            coarse = self._fold_bucket_range(
+                pre_state["coarse"][k], pre_state["coarse_epoch"], leaf,
+                key_c, cb0, cb1, self.n_coarse, self.max_coarse_q)
+            fine_b = self._fold_bucket_range(
+                pre_state["fine"][k], pre_state["fine_epoch"], leaf, key_c,
+                fine_r_start, fbr, self.n_fine, self.fanout + 1)
+            acc = leaf.combine(left, fine_a)
+            acc = leaf.combine(acc, coarse)
+            acc = leaf.combine(acc, fine_b)
+            out[k] = leaf.combine(acc, right)
+        return out
+
+    def _fold_bucket_range(self, buckets, epochs, leaf: Leaf, key,
+                           b0, b1, capacity, max_q: int):
+        """Ordered combine of bucket ids [b0, b1), masked to valid epochs."""
+        ids = b0 + jnp.arange(max_q, dtype=jnp.int32)
+        in_range = ids < b1
+        slots = ids % jnp.int32(capacity)
+        per_key_states = buckets[key]          # (capacity, *shape)
+        per_key_epochs = epochs[key]           # (capacity,)
+        st = jnp.take(per_key_states, slots, axis=0)
+        ep = jnp.take(per_key_epochs, slots, axis=0)
+        ok = in_range & (ep == ids)
+        ident = jnp.broadcast_to(leaf.identity(), st.shape)
+        st = jnp.where(_b(ok, st), st, ident)
+        acc = leaf.identity()
+        for i in range(max_q):                 # static, small
+            acc = leaf.combine(acc, st[i])
+        return acc
+
+
+def _fold_slot(buckets, epochs, leaf: Leaf, lifted, key, bucket_id,
+               capacity):
+    slot = bucket_id % jnp.int32(capacity)
+    cur = buckets[key, slot]
+    stale = epochs[key, slot] != bucket_id
+    cur = jnp.where(_b(stale, cur),
+                    jnp.broadcast_to(leaf.identity(), cur.shape), cur)
+    return buckets.at[key, slot].set(leaf.combine(cur, lifted))
+
+
+def _fold_env(leaf: Leaf, env) -> jnp.ndarray:
+    from .compiler import _tree_fold
+
+    return _tree_fold(leaf, leaf.lift(env))
+
+
+def _append_request(env, spec: WindowSpec, value_cols, values, ts):
+    """Append the request row after the right-edge rows (it is the newest
+    element of its window — ordering matches the offline stable sort)."""
+    req_valid = not spec.instance_not_in_window
+    out = {}
+    for c in value_cols:
+        v = env[c]
+        out[c] = jnp.concatenate(
+            [v, jnp.asarray(values.get(c, 0.0), v.dtype)[None]])
+    out["__valid__"] = jnp.concatenate(
+        [env["__valid__"], jnp.asarray(req_valid, bool)[None]])
+    return out
+
+
+def _b(flag, state):
+    extra = state.ndim - flag.ndim
+    return flag.reshape(flag.shape + (1,) * extra)

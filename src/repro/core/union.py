@@ -1,0 +1,186 @@
+"""Self-adjusted window union (§5.2).
+
+Two mechanisms, mapped from threads to mesh shards:
+
+1. **On-the-fly load balancing** — a static hash of keys onto workers (the
+   Flink baseline) collapses under skew.  ``LoadBalancer`` tracks per-key
+   processing cost (EMA of tuples folded per key) and periodically
+   recomputes the key->worker map with greedy LPT bin-packing; hot keys may
+   be *split* across several workers (each worker folds a partial state,
+   partials merge by the leaf monoid — the same combine used everywhere
+   else).
+
+2. **Incremental computation** — ``SlidingAggregator`` keeps a running
+   window fold per key and, on each arriving tuple, evicts expired rows by
+   prefix-difference (Subtract-and-Evict [58]) instead of re-folding the
+   window: O(1) amortized per tuple vs O(window).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .functions import Aggregator, Leaf
+
+__all__ = ["LoadBalancer", "SlidingAggregator", "static_hash_assign"]
+
+
+def static_hash_assign(n_keys: int, n_workers: int) -> np.ndarray:
+    """The rigid baseline: key -> worker by hash (Flink-style)."""
+    from .hll import splitmix64
+
+    keys = np.arange(n_keys, dtype=np.uint64)
+    return (splitmix64(keys) % np.uint64(n_workers)).astype(np.int32)
+
+
+class LoadBalancer:
+    """Dynamic key->worker assignment from observed load."""
+
+    def __init__(self, n_keys: int, n_workers: int, ema: float = 0.5,
+                 split_threshold: float = 1.5):
+        self.n_keys = n_keys
+        self.n_workers = n_workers
+        self.ema = ema
+        self.split_threshold = split_threshold
+        self.load = np.zeros(n_keys, dtype=np.float64)
+        self.assignment = static_hash_assign(n_keys, n_workers)
+        # keys allowed to fan out over several workers (hot keys)
+        self.split_keys: Dict[int, int] = {}
+
+    def observe(self, key_counts: np.ndarray):
+        """Update per-key cost EMA with a batch's tuple counts."""
+        self.load = self.ema * key_counts + (1 - self.ema) * self.load
+
+    def rebalance(self) -> np.ndarray:
+        """Greedy LPT: heaviest key to least-loaded worker; split keys
+        heavier than split_threshold * mean-worker-load."""
+        order = np.argsort(-self.load)
+        worker_load = np.zeros(self.n_workers, dtype=np.float64)
+        assign = np.zeros(self.n_keys, dtype=np.int32)
+        self.split_keys.clear()
+        total = float(self.load.sum())
+        fair = total / self.n_workers if self.n_workers else 0.0
+        for k in order:
+            cost = float(self.load[k])
+            if fair > 0 and cost > self.split_threshold * fair:
+                # split a hot key across ceil(cost/fair) workers
+                n_split = min(self.n_workers, int(np.ceil(cost / fair)))
+                ws = np.argsort(worker_load)[:n_split]
+                worker_load[ws] += cost / n_split
+                assign[k] = int(ws[0])
+                self.split_keys[int(k)] = n_split
+            else:
+                w = int(np.argmin(worker_load))
+                worker_load[w] += cost
+                assign[k] = w
+        self.assignment = assign
+        return assign
+
+    def imbalance(self, key_counts: np.ndarray,
+                  assignment: Optional[np.ndarray] = None) -> float:
+        """max-worker-load / mean-worker-load under an assignment,
+        accounting for split keys (their load spreads evenly)."""
+        assign = self.assignment if assignment is None else assignment
+        loads = np.zeros(self.n_workers, dtype=np.float64)
+        for k in range(self.n_keys):
+            c = float(key_counts[k])
+            n_split = self.split_keys.get(k, 1) if assignment is None else 1
+            if n_split > 1:
+                ws = np.argsort(loads)[:n_split]
+                loads[ws] += c / n_split
+            else:
+                loads[assign[k]] += c
+        mean = loads.mean() if loads.mean() > 0 else 1.0
+        return float(loads.max() / mean)
+
+
+class SlidingAggregator:
+    """Per-key incremental window state (Subtract-and-Evict).
+
+    Maintains, per key: a ring buffer of (ts, lifted-state) plus the
+    inclusive prefix fold at each element.  A new tuple costs one combine;
+    eviction costs one ``invert_prefix``.  Only invertible leaves qualify —
+    callers fall back to re-folding (or a segment tree) otherwise, exactly
+    the paper's constraint.
+    """
+
+    def __init__(self, leaf: Leaf, window_ms: int):
+        if not leaf.invertible:
+            raise ValueError("Subtract-and-Evict needs an invertible leaf")
+        import collections
+
+        self.leaf = leaf
+        self.window_ms = window_ms
+        self._buf: Dict[int, "collections.deque"] = {}
+        self._total: Dict[int, np.ndarray] = {}
+        self._evicted: Dict[int, np.ndarray] = {}
+        self._deque = collections.deque
+        self.combines = 0  # work counter (benchmarks compare vs re-fold)
+
+    def push(self, key: int, ts: int, lifted: np.ndarray) -> np.ndarray:
+        """Add one tuple; evict expired rows; return the window fold.
+
+        total = fold(all rows ever), evicted = fold(expired prefix);
+        window fold = invert_prefix(total, evicted).  One combine per
+        arrival + one per eviction: O(1) amortized.  Streaming combines
+        run in numpy (host streaming path — per-tuple jax dispatch would
+        dominate; the algebra is identical to the device leaves).
+        """
+        comb, inv = self._ops if hasattr(self, "_ops") else \
+            self.__dict__.setdefault("_ops", self._np_ops())
+        ident = self._ident if hasattr(self, "_ident") else \
+            self.__dict__.setdefault("_ident",
+                                     np.asarray(self.leaf.identity()))
+        buf = self._buf.setdefault(key, self._deque())
+        total = self._total.get(key, ident)
+        evicted = self._evicted.get(key, ident)
+
+        total = comb(total, np.asarray(lifted))
+        self.combines += 1
+        buf.append((ts, lifted))
+
+        horizon = ts - self.window_ms
+        while buf and buf[0][0] < horizon:
+            _, old = buf.popleft()
+            evicted = comb(evicted, np.asarray(old))
+            self.combines += 1
+
+        self._total[key] = total
+        self._evicted[key] = evicted
+        self.combines += 1
+        return inv(total, evicted)
+
+    def _np_ops(self):
+        """numpy implementations of the leaf algebra for hot streaming."""
+        from .functions import AddLeaf, EWLeaf
+
+        if isinstance(self.leaf, AddLeaf):
+            return (lambda a, b: a + b), (lambda t, e: t - e)
+        if isinstance(self.leaf, EWLeaf):
+            d = self.leaf.decay
+
+            def comb(a, b):
+                s = d ** b[..., 2]
+                return np.stack([b[..., 0] + s * a[..., 0],
+                                 b[..., 1] + s * a[..., 1],
+                                 a[..., 2] + b[..., 2]], axis=-1)
+
+            def inv(t, e):
+                n = t[..., 2] - e[..., 2]
+                s = d ** n
+                return np.stack([t[..., 0] - s * e[..., 0],
+                                 t[..., 1] - s * e[..., 1], n], axis=-1)
+
+            return comb, inv
+        # generic fallback through the jax leaf (slower, still correct)
+        return (lambda a, b: np.asarray(self.leaf.combine(a, b)),
+                lambda t, e: np.asarray(self.leaf.invert_prefix(t, e)))
+
+    def window_fold(self, key: int) -> np.ndarray:
+        ident = np.asarray(self.leaf.identity())
+        total = self._total.get(key, ident)
+        evicted = self._evicted.get(key, ident)
+        return np.asarray(self.leaf.invert_prefix(total, evicted))

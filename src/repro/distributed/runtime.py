@@ -1,0 +1,40 @@
+"""Distribution runtime context for model code.
+
+Model layers are mesh-agnostic by default (pjit/SPMD chooses the
+partitioning).  Optimizations that need *manual* collectives (the
+shard_map flash-decode merge) read the active mesh from here; drivers
+(dryrun, serve) set it around lowering.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+_MESH = None
+_DECODE_AXIS: Optional[str] = None
+
+
+def set_mesh(mesh, decode_axis: Optional[str] = "model"):
+    global _MESH, _DECODE_AXIS
+    _MESH = mesh
+    _DECODE_AXIS = decode_axis
+
+
+def get_mesh():
+    return _MESH
+
+
+def decode_axis() -> Optional[str]:
+    return _DECODE_AXIS
+
+
+@contextlib.contextmanager
+def use_mesh(mesh, decode_axis: Optional[str] = "model"):
+    global _MESH, _DECODE_AXIS
+    prev = (_MESH, _DECODE_AXIS)
+    _MESH, _DECODE_AXIS = mesh, decode_axis
+    try:
+        yield
+    finally:
+        _MESH, _DECODE_AXIS = prev

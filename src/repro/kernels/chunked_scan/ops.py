@@ -1,0 +1,32 @@
+"""Public op: first-order linear recurrence with kernel/ref dispatch."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernel import linear_scan_pallas
+from .ref import linear_scan_ref
+
+
+def linear_scan(a: jnp.ndarray, b: jnp.ndarray, use_pallas: bool = False,
+                chunk: int = 128, interpret: bool = True) -> jnp.ndarray:
+    """y_t = a_t * y_{t-1} + b_t over the -2 axis.
+
+    Shared by ``ew_avg`` (feature layer) and SSM/hybrid blocks (model
+    layer).  XLA ref on CPU / dry-run; Pallas path for TPU.
+    """
+    if use_pallas:
+        squeeze = a.ndim == 2
+        if squeeze:
+            a, b = a[None], b[None]
+        t = a.shape[-2]
+        pad = (-t) % chunk
+        if pad:
+            ones = jnp.ones(a.shape[:-2] + (pad, a.shape[-1]), a.dtype)
+            zeros = jnp.zeros_like(ones)
+            a = jnp.concatenate([a, ones], axis=-2)
+            b = jnp.concatenate([b, zeros], axis=-2)
+        y = linear_scan_pallas(a, b, chunk=chunk, interpret=interpret)
+        y = y[..., :t, :]
+        return y[0] if squeeze else y
+    return linear_scan_ref(a, b)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the first-order linear recurrence scan."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def linear_scan_ref(a: jnp.ndarray, b: jnp.ndarray,
+                    y0: jnp.ndarray = None) -> jnp.ndarray:
+    """y_t = a_t * y_{t-1} + b_t  over axis -2 (time).
+
+    a, b: (..., T, D).  Returns y: (..., T, D).  The associative combine is
+    (a2*a1, a2*b1 + b2) — the same monoid as EWLeaf / SSM diagonal state.
+    """
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    if y0 is not None:
+        # fold the initial state into the first step
+        b = b.at[..., 0, :].set(a[..., 0, :] * y0 + b[..., 0, :])
+
+    def comb(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, y = jax.lax.associative_scan(comb, (a, b), axis=-2)
+    return y

@@ -1,0 +1,31 @@
+"""Public op: feature-signature hashing with kernel/ref dispatch."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernel import feature_hash_pallas
+from .ref import feature_hash_ref
+
+
+def feature_hash(codes: jnp.ndarray, dim: int, salt: int = 0x9E3779B9,
+                 use_pallas: bool = False, interpret: bool = True
+                 ) -> jnp.ndarray:
+    """Hash discrete codes into [0, dim) feature indices (§4.1(5))."""
+    if use_pallas:
+        return feature_hash_pallas(codes, dim, salt=salt,
+                                   interpret=interpret)
+    return feature_hash_ref(codes, dim, salt=salt)
+
+
+def signature_batch(discrete_codes: jnp.ndarray, continuous: jnp.ndarray,
+                    dim: int, use_pallas: bool = False):
+    """Assemble an ML-ready (indices, values) sparse batch + dense block:
+    LibSVM-style output without materializing the high-dim space.
+
+    discrete_codes: (N, Cd) int32; continuous: (N, Cc) float32.
+    Returns (hash_idx (N, Cd) int32, ones (N, Cd) f32, continuous).
+    """
+    idx = feature_hash(discrete_codes, dim, use_pallas=use_pallas)
+    vals = jnp.ones(discrete_codes.shape, jnp.float32)
+    return idx, vals, continuous.astype(jnp.float32)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for feature-signature hashing (§4.1(5))."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# 32-bit murmur3-style finalizer constants
+_C1 = jnp.uint32(0x85EBCA6B)
+_C2 = jnp.uint32(0xC2B2AE35)
+
+
+def mix32(x: jnp.ndarray) -> jnp.ndarray:
+    """murmur3 fmix32: avalanche mixing of 32-bit lanes."""
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * _C1
+    x = x ^ (x >> 13)
+    x = x * _C2
+    x = x ^ (x >> 16)
+    return x
+
+
+def feature_hash_ref(codes: jnp.ndarray, dim: int,
+                     salt: int = 0x9E3779B9) -> jnp.ndarray:
+    """Discrete column signature: dictionary code -> hashed feature index
+    in [0, dim).  Identical math to the Pallas kernel (exactness matters:
+    the index IS the feature identity downstream)."""
+    h = mix32(codes.astype(jnp.uint32) ^ jnp.uint32(salt))
+    return (h % jnp.uint32(dim)).astype(jnp.int32)

@@ -1,0 +1,44 @@
+"""Public op: decode attention with partial-merge, kernel/ref dispatch."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernel import decode_partials_pallas
+from .ref import (decode_attention_ref, decode_partials_ref,
+                  finalize_partials, merge_partials)
+
+
+def decode_partials(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    lengths: jnp.ndarray = None, use_pallas: bool = False,
+                    interpret: bool = True):
+    """Partial-softmax states (m, l, o) for one KV shard.
+
+    q: (B, H, D); k/v: (B, S, H, D); lengths: (B,) live KV rows.
+    """
+    b, h, d = q.shape
+    s = k.shape[1]
+    if lengths is None:
+        lengths = jnp.full((b,), s, jnp.int32)
+    if use_pallas:
+        qf = q.reshape(b * h, d)
+        kf = jnp.moveaxis(k, 2, 1).reshape(b * h, s, d)
+        vf = jnp.moveaxis(v, 2, 1).reshape(b * h, s, d)
+        lf = jnp.repeat(lengths, h)
+        m, l, o = decode_partials_pallas(qf, kf, vf, lf,
+                                         interpret=interpret)
+        return (m.reshape(b, h), l.reshape(b, h), o.reshape(b, h, d))
+    mask = jnp.arange(s)[None, :] < lengths[:, None]
+    return decode_partials_ref(q, k, v, mask)
+
+
+def decode_attention(q, k, v, lengths=None, use_pallas: bool = False,
+                     interpret: bool = True):
+    """Full single-shard decode attention (partials finalized locally)."""
+    m, l, o = decode_partials(q, k, v, lengths, use_pallas=use_pallas,
+                              interpret=interpret)
+    return finalize_partials(m, l, o)
+
+
+__all__ = ["decode_partials", "decode_attention", "merge_partials",
+           "finalize_partials", "decode_attention_ref"]

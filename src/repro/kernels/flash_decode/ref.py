@@ -1,0 +1,58 @@
+"""Pure-jnp oracle for decode attention + the partial-merge monoid."""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                         mask: jnp.ndarray = None) -> jnp.ndarray:
+    """Single-token attention: q (B, H, D), k/v (B, S, H, D) -> (B, H, D)."""
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if mask is not None:
+        s = jnp.where(mask[:, None, :], s, -1e30)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bhs,bshd->bhd", p, v.astype(jnp.float32))
+
+
+def decode_partials_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        mask: jnp.ndarray = None
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Partial-softmax state over a KV shard: (m, l, o).
+
+    m (B, H): running max logit; l (B, H): sum exp(s - m);
+    o (B, H, D): sum exp(s - m) * v.  These states form the *same monoid*
+    as the feature layer's pre-aggregation partials (DESIGN.md §2):
+    merging two shards is ``merge_partials`` below.
+    """
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if mask is not None:
+        s = jnp.where(mask[:, None, :], s, -1e30)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bhs,bshd->bhd", p, v.astype(jnp.float32))
+    return m, l, o
+
+
+def merge_partials(a, b):
+    """Combine two (m, l, o) shard partials — associative & commutative."""
+    ma, la, oa = a
+    mb, lb, ob = b
+    m = jnp.maximum(ma, mb)
+    ea = jnp.exp(ma - m)
+    eb = jnp.exp(mb - m)
+    l = la * ea + lb * eb
+    o = oa * ea[..., None] + ob * eb[..., None]
+    return m, l, o
+
+
+def finalize_partials(m, l, o) -> jnp.ndarray:
+    return o / jnp.maximum(l, 1e-30)[..., None]

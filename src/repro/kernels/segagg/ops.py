@@ -1,0 +1,37 @@
+"""Public op: segmented aggregation with kernel/ref dispatch."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import segagg_pallas
+from .ref import segagg_ref
+
+
+def segagg(values: jnp.ndarray, seg_ids: jnp.ndarray, n_segments: int,
+           use_pallas: bool = False, interpret: bool = True) -> jnp.ndarray:
+    """Per-segment sums: (N, F) x (N,) -> (n_segments, F).
+
+    ``use_pallas=False`` routes to the XLA reference (used on CPU hosts and
+    in dry-run lowering); the Pallas path targets TPU (validated against
+    the ref in interpret mode by tests/test_kernels.py).
+    """
+    if use_pallas:
+        return segagg_pallas(values, seg_ids, n_segments,
+                             interpret=interpret)
+    return segagg_ref(values, seg_ids, n_segments)
+
+
+def bucket_build(values: jnp.ndarray, ts: jnp.ndarray, bucket_ms: int,
+                 n_buckets: int, use_pallas: bool = False) -> jnp.ndarray:
+    """Pre-aggregation bucket build (§5.1): sum + count per time bucket.
+
+    Returns (n_buckets, F+1): per-bucket feature sums with a trailing
+    count column (the ones-column trick turns counts into the same
+    matmul).
+    """
+    ones = jnp.ones((values.shape[0], 1), jnp.float32)
+    aug = jnp.concatenate([values.astype(jnp.float32), ones], axis=1)
+    seg = (ts // jnp.int32(bucket_ms)).astype(jnp.int32)
+    return segagg(aug, seg, n_buckets, use_pallas=use_pallas)

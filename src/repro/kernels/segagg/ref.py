@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for segmented aggregation (pre-agg bucket build)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segagg_ref(values: jnp.ndarray, seg_ids: jnp.ndarray,
+               n_segments: int) -> jnp.ndarray:
+    """sum of ``values`` rows per segment id.
+
+    values: (N, F) float32; seg_ids: (N,) int32 in [0, n_segments) —
+    out-of-range ids (padding rows) are dropped.
+    Returns (n_segments, F).
+    """
+    values = values.astype(jnp.float32)
+    ok = (seg_ids >= 0) & (seg_ids < n_segments)
+    safe = jnp.where(ok, seg_ids, 0)
+    vals = jnp.where(ok[:, None], values, 0.0)
+    return jax.ops.segment_sum(vals, safe, num_segments=n_segments)

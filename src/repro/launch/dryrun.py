@@ -1,0 +1,288 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run (deliverable e): prove every (arch x shape x mesh)
+cell lowers + compiles with coherent sharding, and harvest the roofline
+inputs (memory_analysis, cost_analysis, collective bytes from post-SPMD
+HLO).
+
+The XLA_FLAGS line above MUST run before any other import — jax locks the
+device count at first init.  Do not import this module from tests.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b \
+        --shape train_4k [--multi-pod] [--out results/dryrun]
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import ARCHS, SHAPES, get
+from ..distributed.sharding import (batch_pspec, cache_pspecs,
+                                    named_shardings, param_pspecs)
+from ..models import (init_decode_state, init_params, model_input_spec)
+from ..train.optimizer import adamw_init
+from ..train.steps import build_decode_step, build_train_step, \
+    build_prefill_step, default_n_micro
+from .mesh import make_production_mesh
+
+_COLL_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[^=]*?=?\s*(\w+\[[^\]]*\])", re.IGNORECASE)
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {"f32": 4, "f16": 2, "bf16": 2, "s32": 4, "u32": 4,
+                "s8": 1, "u8": 1, "pred": 1, "f64": 8, "s64": 8,
+                "u64": 8, "s16": 2, "u16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1}
+
+
+def collective_bytes(hlo_text: str):
+    """Sum output-operand bytes of every collective op in post-SPMD HLO.
+
+    Returns {op_kind: bytes} + total.  Bytes are per-participant (shapes
+    in SPMD HLO are already per-device).
+    """
+    out = {"all-gather": 0, "all-reduce": 0, "reduce-scatter": 0,
+           "all-to-all": 0, "collective-permute": 0}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*)", ls)
+        if not m:
+            continue
+        rhs = m.group(1)
+        kind = None
+        for k in out:
+            if re.search(rf"\b{k}(-start|-done)?\(", rhs) or \
+                    re.search(rf"\b{k}(-start)?\b", rhs.split("(")[0]):
+                kind = k
+                break
+        if kind is None or f"{kind}-done" in rhs.split("(")[0]:
+            continue
+        # shapes on the lhs of '=' were consumed; parse result shape(s)
+        shapes = _SHAPE_RE.findall(rhs.split("(")[0])
+        nbytes = 0
+        for dt, dims in shapes:
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in filter(None, dims.split(",")):
+                n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        out[kind] += nbytes
+    out["total"] = sum(out.values())
+    return out
+
+
+def _flops_bytes(cost):
+    flops = cost.get("flops", 0.0) if cost else 0.0
+    nbytes = sum(v for k, v in (cost or {}).items()
+                 if k.startswith("bytes accessed"))
+    # 'bytes accessed' (no suffix) is the total; per-operand entries also
+    # appear — prefer the bare key when present
+    if cost and "bytes accessed" in cost:
+        nbytes = cost["bytes accessed"]
+    return float(flops), float(nbytes)
+
+
+def dryrun_cell(arch: str, shape_name: str, multi_pod: bool,
+                collect_hlo: bool = True, overrides=None,
+                strategy: str = "auto",
+                sharded_decode: bool = False):
+    """Lower + compile one cell; return the roofline record."""
+    from ..distributed import runtime
+
+    cfg = get(arch)
+    shape = SHAPES[shape_name]
+    if shape_name not in cfg.applicable_shapes():
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "status": "SKIP",
+                "reason": "quadratic attention at 500k context "
+                          "(DESIGN.md §4 applicability)"}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    runtime.set_mesh(mesh if (sharded_decode and shape.kind == "decode")
+                     else None)
+    t0 = time.time()
+
+    # ---- abstract params (no allocation) -------------------------------
+    params_shape = jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0),
+                            dtype=jnp.bfloat16))
+    p_specs = param_pspecs(cfg, params_shape, mesh, overrides=overrides,
+                           strategy=strategy)
+
+    record = {"arch": arch, "shape": shape_name,
+              "mesh": "2x16x16" if multi_pod else "16x16",
+              "n_devices": mesh.devices.size,
+              "strategy": strategy,
+              "sharded_decode": sharded_decode}
+
+    if shape.kind == "train":
+        n_micro = default_n_micro(cfg, shape)
+        record["n_micro"] = n_micro
+        dp_axes = ("pod", "data") if multi_pod else ("data",)
+        step = build_train_step(cfg, n_micro=n_micro, dp_axes=dp_axes)
+        state_shape = jax.eval_shape(adamw_init, params_shape)
+        # optimizer state shards like the params (ZeRO-3)
+        s_specs = type(state_shape)(
+            step=P(), params=p_specs,
+            mu=p_specs, nu=p_specs,
+            compress_err=jax.tree_util.tree_map(lambda _: P(),
+                                                state_shape.compress_err))
+        batch_shape = model_input_spec(cfg, shape)
+        b_specs = batch_pspec(batch_shape, mesh)
+        jitted = jax.jit(
+            step,
+            in_shardings=(named_shardings(s_specs, mesh),
+                          named_shardings(b_specs, mesh)),
+            out_shardings=(named_shardings(s_specs, mesh), None),
+        )
+        with mesh:
+            lowered = jitted.lower(state_shape, batch_shape)
+    elif shape.kind == "prefill":
+        step = build_prefill_step(cfg, cache_capacity=shape.seq_len)
+        batch_shape = model_input_spec(cfg, shape)
+        b_specs = batch_pspec(batch_shape, mesh)
+        cache_shape = jax.eval_shape(
+            lambda: init_decode_state(cfg, shape.global_batch,
+                                      shape.seq_len))
+        # drop the (logits, state) output sharding constraint: let SPMD
+        # choose; cache layout is verified in the decode cell
+        jitted = jax.jit(
+            step,
+            in_shardings=(named_shardings(p_specs, mesh),
+                          named_shardings(b_specs, mesh)),
+        )
+        with mesh:
+            lowered = jitted.lower(params_shape, batch_shape)
+    else:  # decode
+        step = build_decode_step(cfg)
+        cache_shape = jax.eval_shape(
+            lambda: init_decode_state(cfg, shape.global_batch,
+                                      shape.seq_len))
+        c_specs = cache_pspecs(cfg, cache_shape, mesh)
+        tok = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+        tok_spec = batch_pspec(tok, mesh)
+        jitted = jax.jit(
+            step,
+            in_shardings=(named_shardings(p_specs, mesh),
+                          named_shardings(c_specs, mesh),
+                          named_shardings(tok_spec, mesh)),
+            out_shardings=(None, named_shardings(c_specs, mesh)),
+        )
+        with mesh:
+            lowered = jitted.lower(params_shape, cache_shape, tok)
+
+    record["lower_s"] = round(time.time() - t0, 1)
+    t1 = time.time()
+    compiled = lowered.compile()
+    record["compile_s"] = round(time.time() - t1, 1)
+
+    mem = compiled.memory_analysis()
+    record["memory"] = {
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+        "output_bytes": getattr(mem, "output_size_in_bytes", None),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+    }
+    cost = compiled.cost_analysis()
+    flops, nbytes = _flops_bytes(cost)
+    record["hlo_flops"] = flops
+    record["hlo_bytes"] = nbytes
+
+    if collect_hlo:
+        from ..roofline import analyze_hlo
+
+        t2 = time.time()
+        hlo = compiled.as_text()
+        loop_aware = analyze_hlo(hlo)
+        record["collectives"] = loop_aware.collectives
+        # loop-aware numbers supersede the built-ins (XLA counts while
+        # bodies once; see roofline/hlo_analyzer.py)
+        record["flops_loop_aware"] = loop_aware.flops
+        record["hbm_bytes_loop_aware"] = loop_aware.hbm_bytes
+        record["loops"] = loop_aware.loops[:50]
+        record["unknown_loops"] = loop_aware.unknown_loops[:20]
+        record["hlo_parse_s"] = round(time.time() - t2, 1)
+        record["hlo_lines"] = hlo.count("\n")
+    record["status"] = "OK"
+    return record
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--no-hlo", action="store_true")
+    ap.add_argument("--sharding", default="auto",
+                    choices=["auto", "megatron", "megatron_zero",
+                             "embed_fix"])
+    ap.add_argument("--sharded-decode", action="store_true")
+    args = ap.parse_args(argv)
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    cells = []
+    archs = sorted(ARCHS) if (args.all or not args.arch) else [args.arch]
+    shapes = sorted(SHAPES) if (args.all or not args.shape) \
+        else [args.shape]
+    meshes = [False, True] if (args.both_meshes or args.all) \
+        else [args.multi_pod]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                cells.append((a, s, mp))
+
+    n_fail = 0
+    for arch, shape, mp in cells:
+        tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
+        path = outdir / f"{tag}.json"
+        if path.exists():
+            print(f"[skip existing] {tag}")
+            continue
+        print(f"[dryrun] {tag} ...", flush=True)
+        try:
+            rec = dryrun_cell(arch, shape, mp,
+                              collect_hlo=not args.no_hlo,
+                              strategy=args.sharding,
+                              sharded_decode=args.sharded_decode)
+        except Exception as e:  # noqa: BLE001 — record and continue
+            rec = {"arch": arch, "shape": shape,
+                   "mesh": "2x16x16" if mp else "16x16",
+                   "status": "FAIL", "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-4000:]}
+            n_fail += 1
+        path.write_text(json.dumps(rec, indent=2))
+        status = rec["status"]
+        extra = ""
+        if status == "OK":
+            gb = (rec["memory"]["peak_bytes"] or 0) / 1e9
+            extra = (f" flops={rec['hlo_flops']:.3e} peak={gb:.2f}GB "
+                     f"coll={rec.get('collectives', {}).get('total', 0):.3e}B "
+                     f"({rec['lower_s']}s lower, {rec['compile_s']}s "
+                     f"compile)")
+        print(f"[{status}] {tag}{extra}", flush=True)
+    print(f"done; {n_fail} failures")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never
+touches jax device state (the dry-run must set
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before *any* jax
+initialization, and smoke tests must keep seeing 1 device).
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_host_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips.  Multi-pod: a leading
+    ``pod`` axis of 2 (512 chips); DP spans pod x data, TP stays inside a
+    pod (ICI), so the only cross-pod (DCI) collective is the gradient
+    all-reduce."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """1-device mesh for CPU smoke tests (same axis names)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,5 @@
+"""Model stack: one generic transformer covering all 10 assigned archs."""
+
+from .model import (init_params, forward_train, forward_prefill,  # noqa: F401
+                    init_decode_state, decode_step, loss_fn,
+                    model_input_spec)

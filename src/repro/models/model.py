@@ -1,0 +1,545 @@
+"""Generic model covering all ten assigned architectures.
+
+One parameter schema + one scanned layer body per family keeps HLO size
+and compile time flat in depth; family differences are contained in the
+layer body (attention type, MoE/dense FFN, SSM branch, enc-dec).
+
+Entry points:
+  init_params(cfg, key)                     -> params pytree
+  forward_train(cfg, params, batch)         -> (loss, logits)
+  init_decode_state(cfg, batch, max_len)    -> cache pytree
+  decode_step(cfg, params, state, token)    -> (logits, new state)
+  model_input_spec(cfg, shape)              -> ShapeDtypeStruct pytree
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig, ShapeSpec
+from . import layers as L
+
+Params = Dict[str, Any]
+
+# attention chunk used by the flash-style online softmax
+ATTN_CHUNK = 1024
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(cfg: ArchConfig, key, dtype) -> Params:
+    ks = jax.random.split(key, 8)
+    p: Params = {"norm1": jnp.ones((cfg.d_model,), dtype),
+                 "norm2": jnp.ones((cfg.d_model,), dtype)}
+    if cfg.family == "ssm":
+        p["rwkv"] = L.init_rwkv(ks[0], cfg, dtype)
+        return p
+    if cfg.attn_type == "mla":
+        p["attn"] = L.init_mla(ks[0], cfg, dtype)
+    elif cfg.attn_type == "gqa":
+        p["attn"] = L.init_gqa(ks[0], cfg, dtype)
+    if cfg.family == "hybrid":
+        p["ssm"] = L.init_ssm(ks[1], cfg, dtype)
+        p["mix_a"] = jnp.ones((), dtype) * 0.5
+        p["mix_s"] = jnp.ones((), dtype) * 0.5
+    if cfg.moe is not None:
+        p["moe"] = L.init_moe(ks[2], cfg, dtype)
+    else:
+        d, f = cfg.d_model, cfg.d_ff
+        s = d ** -0.5
+        if cfg.family == "audio":
+            p["mlp"] = {
+                "w_up": (jax.random.normal(ks[3], (d, f)) * s).astype(dtype),
+                "b_up": jnp.zeros((f,), dtype),
+                "w_down": (jax.random.normal(ks[4], (f, d)) * f ** -0.5
+                           ).astype(dtype),
+                "b_down": jnp.zeros((d,), dtype),
+            }
+        else:
+            p["mlp"] = {
+                "w_gate": (jax.random.normal(ks[3], (d, f)) * s
+                           ).astype(dtype),
+                "w_up": (jax.random.normal(ks[4], (d, f)) * s
+                         ).astype(dtype),
+                "w_down": (jax.random.normal(ks[5], (f, d)) * f ** -0.5
+                           ).astype(dtype),
+            }
+    if cfg.family == "audio":
+        # decoder cross-attention (encoder output as kv)
+        p["xattn"] = L.init_gqa(ks[6], cfg, dtype)
+        p["norm_x"] = jnp.ones((cfg.d_model,), dtype)
+    return p
+
+
+def _stack_layers(cfg: ArchConfig, key, n_layers: int, dtype) -> Params:
+    keys = jax.random.split(key, n_layers)
+    return jax.vmap(lambda k: _init_layer(cfg, k, dtype))(keys)
+
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.bfloat16) -> Params:
+    k_emb, k_lay, k_enc, k_head = jax.random.split(key, 4)
+    vp, d = cfg.vocab_padded, cfg.d_model
+    params: Params = {
+        "embed": (jax.random.normal(k_emb, (vp, d)) * 0.02).astype(dtype),
+        "layers": _stack_layers(cfg, k_lay, cfg.n_layers, dtype),
+        "final_norm": jnp.ones((d,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(k_head, (d, vp)) * 0.02
+                             ).astype(dtype)
+    if cfg.encdec is not None:
+        params["enc_layers"] = _stack_layers(
+            cfg, k_enc, cfg.encdec.n_enc_layers, dtype)
+        params["enc_norm"] = jnp.ones((d,), dtype)
+    return params
+
+
+def _layer_flags(cfg: ArchConfig) -> np.ndarray:
+    """(L,) per-layer global-attention flags (hybrid SWA pattern)."""
+    flags = np.zeros((cfg.n_layers,), np.bool_)
+    if cfg.sliding_window and cfg.global_attn_every:
+        flags[::cfg.global_attn_every] = True
+        flags[-1] = True
+    else:
+        flags[:] = True
+    return flags
+
+
+# ---------------------------------------------------------------------------
+# layer body (shared by train / prefill / decode)
+# ---------------------------------------------------------------------------
+
+
+def _layer_fwd(cfg: ArchConfig, p: Params, x, *, positions, is_global,
+               cache=None, enc_out=None, causal=True):
+    """Returns (y, new_cache)."""
+    eps = cfg.norm_eps
+    new_cache: Dict[str, Any] = {}
+
+    if cfg.family == "ssm":
+        tm_state = None if cache is None else (cache["shift1"], cache["S"])
+        h = L.rms_norm(x, p["norm1"], eps)
+        y, tm_state = L.rwkv_time_mix(p["rwkv"], h, cfg, state=tm_state)
+        x = x + y
+        h = L.rms_norm(x, p["norm2"], eps)
+        cm_shift = None if cache is None else cache["shift2"]
+        y, cm_shift = L.rwkv_channel_mix(p["rwkv"], h, shift=cm_shift)
+        x = x + y
+        if cache is not None:
+            new_cache = {"shift1": tm_state[0], "S": tm_state[1],
+                         "shift2": cm_shift}
+        return x, new_cache
+
+    # ---- mixer: attention (+ optional parallel SSM branch) --------------
+    if cfg.family == "audio":
+        h = L.layer_norm(x, p["norm1"], jnp.zeros_like(p["norm1"]), eps)
+    else:
+        h = L.rms_norm(x, p["norm1"], eps)
+
+    window = 0
+    if cfg.sliding_window:
+        window = jnp.where(is_global, 0, cfg.sliding_window) \
+            if isinstance(is_global, jnp.ndarray) else \
+            (0 if is_global else cfg.sliding_window)
+
+    attn_cache = None if cache is None else cache.get("attn")
+    if cfg.attn_type == "mla":
+        attn_out, attn_cache = L.mla_forward(
+            p["attn"], h, cfg, positions=positions, cache=attn_cache,
+            chunk=ATTN_CHUNK)
+    elif cfg.attn_type == "gqa" and causal:
+        attn_out, attn_cache = _maybe_windowed_gqa(
+            cfg, p["attn"], h, positions, attn_cache, is_global)
+    else:  # bidirectional encoder attention
+        attn_out, _ = _encoder_gqa(cfg, p["attn"], h, positions)
+        attn_cache = None
+
+    if cfg.family == "hybrid":
+        ssm_state = None if cache is None else cache.get("ssm")
+        ssm_out, ssm_state = L.ssm_forward(p["ssm"], h, cfg,
+                                           state=ssm_state)
+        mixed = (p["mix_a"].astype(jnp.float32) * attn_out.astype(
+            jnp.float32) + p["mix_s"].astype(jnp.float32) *
+            ssm_out.astype(jnp.float32)).astype(x.dtype)
+        x = x + mixed
+        if cache is not None:
+            new_cache["ssm"] = ssm_state
+    else:
+        x = x + attn_out
+    if cache is not None and attn_cache is not None:
+        new_cache["attn"] = attn_cache
+
+    # ---- cross attention (enc-dec decoder) -------------------------------
+    if cfg.family == "audio" and enc_out is not None:
+        hx = L.layer_norm(x, p["norm_x"], jnp.zeros_like(p["norm_x"]), eps)
+        xa, _ = _cross_gqa(cfg, p["xattn"], hx, enc_out)
+        x = x + xa
+
+    # ---- FFN ---------------------------------------------------------------
+    if cfg.family == "audio":
+        h = L.layer_norm(x, p["norm2"], jnp.zeros_like(p["norm2"]), eps)
+        y = L.gelu_mlp(h, **p["mlp"])
+    else:
+        h = L.rms_norm(x, p["norm2"], eps)
+        y = L.moe_forward(p["moe"], h, cfg) if cfg.moe is not None \
+            else L.swiglu(h, p["mlp"]["w_gate"], p["mlp"]["w_up"],
+                          p["mlp"]["w_down"])
+    return x + y, new_cache
+
+
+def _maybe_windowed_gqa(cfg, p, h, positions, cache, is_global):
+    """GQA with a traced per-layer global/SWA switch (scan keeps layers
+    homogeneous, so the switch is data, not structure).  The window is a
+    *traced scalar* horizon folded into the attention mask — one pass,
+    not compute-both-and-select (EXPERIMENTS.md §Perf, hymba hillclimb)."""
+    if not cfg.sliding_window:
+        return L.gqa_forward(p, h, cfg, positions=positions, cache=cache,
+                             window=0, chunk=ATTN_CHUNK)
+    flag = jnp.asarray(is_global)
+    # global layers get an unreachable horizon (seq lengths < 2^30)
+    window = jnp.where(flag, jnp.int32(2**30),
+                       jnp.int32(cfg.sliding_window))
+    return L.gqa_forward(p, h, cfg, positions=positions, cache=cache,
+                         window=window, chunk=ATTN_CHUNK)
+
+
+def _encoder_gqa(cfg, p, h, positions):
+    b, s, d = h.shape
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dk->bsk", h, p["wq"]).reshape(b, s, hq, dh)
+    k = jnp.einsum("bsd,dk->bsk", h, p["wk"]).reshape(b, s, hkv, dh)
+    v = jnp.einsum("bsd,dk->bsk", h, p["wv"]).reshape(b, s, hkv, dh)
+    cos, sin = L.rope_tables(positions, dh, cfg.rope_theta)
+    q = L.apply_rope(q, cos, sin)
+    k = L.apply_rope(k, cos, sin)
+    out = L.chunked_attention(q, k, v, causal=False, chunk=ATTN_CHUNK)
+    y = jnp.einsum("bsk,kd->bsd", out.reshape(b, s, hq * dh), p["wo"])
+    return y, None
+
+
+def _cross_gqa(cfg, p, h, enc_out):
+    b, s, d = h.shape
+    t = enc_out.shape[1]
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dk->bsk", h, p["wq"]).reshape(b, s, hq, dh)
+    k = jnp.einsum("btd,dk->btk", enc_out, p["wk"]).reshape(b, t, hkv, dh)
+    v = jnp.einsum("btd,dk->btk", enc_out, p["wv"]).reshape(b, t, hkv, dh)
+    out = L.chunked_attention(q, k, v, causal=False, chunk=ATTN_CHUNK)
+    y = jnp.einsum("bsk,kd->bsd", out.reshape(b, s, hq * dh), p["wo"])
+    return y, None
+
+
+# ---------------------------------------------------------------------------
+# train / prefill forward
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(cfg: ArchConfig, params: Params, batch) -> Tuple:
+    """Token embedding (+ modality prefix stubs).  Returns (x, label_mask)
+    where label_mask marks positions that carry next-token loss."""
+    emb = params["embed"]
+    tokens = batch["tokens"]
+    x = jnp.take(emb, tokens, axis=0)
+    mask = jnp.ones(tokens.shape, bool)
+    if cfg.vlm is not None:
+        patches = batch["patches"].astype(x.dtype)      # (B, P, d) stub
+        x = jnp.concatenate([patches, x], axis=1)
+        mask = jnp.concatenate(
+            [jnp.zeros(patches.shape[:2], bool), mask], axis=1)
+    return x, mask
+
+
+def _run_encoder(cfg, params, frames):
+    x = frames.astype(params["embed"].dtype)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    flags = jnp.ones((cfg.encdec.n_enc_layers,), bool)
+
+    def body(h, inp):
+        lp, fl = inp
+        y, _ = _layer_fwd(cfg, lp, h, positions=positions, is_global=fl,
+                          causal=False)
+        return y, None
+
+    x, _ = jax.lax.scan(body, x, (params["enc_layers"], flags))
+    return L.layer_norm(x, params["enc_norm"],
+                        jnp.zeros_like(params["enc_norm"]), cfg.norm_eps)
+
+
+def forward_train(cfg: ArchConfig, params: Params, batch,
+                  remat: bool = True):
+    """Teacher-forced forward; returns (loss, aux dict)."""
+    x, label_mask = _embed_inputs(cfg, params, batch)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    enc_out = None
+    if cfg.encdec is not None:
+        enc_out = _run_encoder(cfg, params, batch["frames"])
+
+    flags = jnp.asarray(_layer_flags(cfg))
+
+    def body(h, inp):
+        lp, fl = inp
+        y, _ = _layer_fwd(cfg, lp, h, positions=positions, is_global=fl,
+                          cache=None, enc_out=enc_out, causal=True)
+        return y, None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, (params["layers"], flags))
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head")
+    logits = jnp.einsum("bsd,dv->bsv", x, head) if head is not None \
+        else jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    loss = loss_fn(cfg, logits, batch["tokens"], label_mask)
+    return loss, {"logits": logits}
+
+
+def loss_fn(cfg: ArchConfig, logits, tokens, label_mask):
+    """Next-token CE over real-vocab logits; padded vocab ids masked."""
+    v = cfg.vocab_size
+    logits = logits.astype(jnp.float32)
+    vocab_ok = jnp.arange(logits.shape[-1]) < v
+    logits = jnp.where(vocab_ok[None, None, :], logits, -1e30)
+    # predict token t+1 at position p(t) (last real token has no target)
+    tgt_mask = label_mask[:, 1:]
+    targets = tokens[:, 1:] if cfg.vlm is None else tokens[:, 1:]
+    n_prefix = logits.shape[1] - tokens.shape[1]
+    pred = logits[:, n_prefix: logits.shape[1] - 1]
+    lse = jax.nn.logsumexp(pred, axis=-1)
+    tgt_logit = jnp.take_along_axis(pred, targets[..., None],
+                                    axis=-1)[..., 0]
+    nll = (lse - tgt_logit) * tgt_mask[:, -pred.shape[1]:]
+    denom = jnp.maximum(jnp.sum(tgt_mask), 1.0)
+    return jnp.sum(nll) / denom
+
+
+def forward_prefill(cfg: ArchConfig, params: Params, batch,
+                    cache_capacity: Optional[int] = None):
+    """Serving prefill: full-sequence forward that also emits the decode
+    cache (per-layer KV / latent / SSM states) and last-token logits."""
+    x, _ = _embed_inputs(cfg, params, batch)
+    b, s, d = x.shape
+    cap = cache_capacity or s
+    positions = jnp.arange(s, dtype=jnp.int32)
+    enc_out = None
+    if cfg.encdec is not None:
+        enc_out = _run_encoder(cfg, params, batch["frames"])
+    flags = jnp.asarray(_layer_flags(cfg))
+
+    def body(h, inp):
+        lp, fl = inp
+        contrib = {}
+        eps = cfg.norm_eps
+        if cfg.family == "ssm":
+            hh = L.rms_norm(h, lp["norm1"], eps)
+            y, (sh1, S) = L.rwkv_time_mix(lp["rwkv"], hh, cfg,
+                                          state=None)
+            h = h + y
+            hh = L.rms_norm(h, lp["norm2"], eps)
+            y, sh2 = L.rwkv_channel_mix(lp["rwkv"], hh, shift=None)
+            h = h + y
+            return h, {"shift1": sh1, "S": S, "shift2": sh2}
+        hh = L.layer_norm(h, lp["norm1"], jnp.zeros_like(lp["norm1"]),
+                          eps) if cfg.family == "audio" else \
+            L.rms_norm(h, lp["norm1"], eps)
+        if cfg.attn_type == "mla":
+            m = cfg.mla
+            latent = jnp.einsum("bsd,dr->bsr", hh, lp["attn"]["kv_down"])
+            c_kv, k_rope = latent[..., :m.kv_rank], latent[..., m.kv_rank:]
+            cos, sin = L.rope_tables(positions, m.rope_dim, cfg.rope_theta)
+            k_rope_r = L.apply_rope(k_rope[:, :, None, :], cos, sin)
+            contrib["attn"] = {"latent": _pad_seq(jnp.concatenate(
+                [c_kv, k_rope_r[:, :, 0, :]], axis=-1), cap)}
+            attn_out, _ = L.mla_forward(lp["attn"], hh, cfg,
+                                        positions=positions, cache=None,
+                                        chunk=ATTN_CHUNK)
+        else:
+            hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+            k = jnp.einsum("bsd,dk->bsk", hh, lp["attn"]["wk"]
+                           ).reshape(b, s, hkv, dh)
+            v = jnp.einsum("bsd,dk->bsk", hh, lp["attn"]["wv"]
+                           ).reshape(b, s, hkv, dh)
+            if cfg.qk_norm:
+                k = L.rms_norm(k, lp["attn"]["k_norm"], eps)
+            cos, sin = L.rope_tables(positions, dh, cfg.rope_theta)
+            contrib["attn"] = {"k": _pad_seq(L.apply_rope(k, cos, sin),
+                                             cap),
+                               "v": _pad_seq(v, cap)}
+            attn_out, _ = _maybe_windowed_gqa(cfg, lp["attn"], hh,
+                                              positions, None, fl)
+        if cfg.family == "hybrid":
+            ssm_out, ssm_state = L.ssm_forward(lp["ssm"], hh, cfg,
+                                               state=None)
+            mixed = (lp["mix_a"].astype(jnp.float32) * attn_out.astype(
+                jnp.float32) + lp["mix_s"].astype(jnp.float32) *
+                ssm_out.astype(jnp.float32)).astype(h.dtype)
+            h = h + mixed
+            contrib["ssm"] = ssm_state
+        else:
+            h = h + attn_out
+        if cfg.family == "audio" and enc_out is not None:
+            hx = L.layer_norm(h, lp["norm_x"], jnp.zeros_like(
+                lp["norm_x"]), eps)
+            xa, _ = _cross_gqa(cfg, lp["xattn"], hx, enc_out)
+            h = h + xa
+        if cfg.family == "audio":
+            hh = L.layer_norm(h, lp["norm2"], jnp.zeros_like(lp["norm2"]),
+                              eps)
+            y = L.gelu_mlp(hh, **lp["mlp"])
+        else:
+            hh = L.rms_norm(h, lp["norm2"], eps)
+            y = L.moe_forward(lp["moe"], hh, cfg) if cfg.moe is not None \
+                else L.swiglu(hh, lp["mlp"]["w_gate"], lp["mlp"]["w_up"],
+                              lp["mlp"]["w_down"])
+        return h + y, contrib
+
+    x, layer_cache = jax.lax.scan(body, x, (params["layers"], flags))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head")
+    last = x[:, -1]
+    logits = last @ head if head is not None else \
+        last @ params["embed"].T
+
+    state: Dict[str, Any] = {"layers": layer_cache,
+                             "len": jnp.full((b,), s, jnp.int32)}
+    if cfg.encdec is not None:
+        state["enc_out"] = enc_out
+    return logits, state
+
+
+def _pad_seq(x, cap):
+    """Pad the sequence axis (axis 1) of a cache contribution to cap."""
+    s = x.shape[1]
+    if s >= cap:
+        return x[:, :cap]
+    pad = [(0, 0)] * x.ndim
+    pad[1] = (0, cap - s)
+    return jnp.pad(x, pad)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def init_decode_state(cfg: ArchConfig, batch_size: int, max_len: int,
+                      dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """Cache pytree, stacked (L, ...) for the layer scan."""
+    Lk, b, s = cfg.n_layers, batch_size, max_len
+    d = cfg.d_model
+    cache: Dict[str, Any] = {"len": jnp.zeros((b,), jnp.int32)}
+    if cfg.family == "ssm":
+        h, dh = cfg.n_heads, cfg.head_dim
+        cache["layers"] = {
+            "shift1": jnp.zeros((Lk, b, d), dtype),
+            "S": jnp.zeros((Lk, b, h, dh, dh), jnp.float32),
+            "shift2": jnp.zeros((Lk, b, d), dtype),
+        }
+        return cache
+    per: Dict[str, Any] = {}
+    if cfg.attn_type == "mla":
+        m = cfg.mla
+        per["attn"] = {"latent": jnp.zeros(
+            (Lk, b, s, m.kv_rank + m.rope_dim), dtype)}
+    elif cfg.attn_type == "gqa":
+        hkv, dh = cfg.n_kv_heads, cfg.head_dim
+        per["attn"] = {"k": jnp.zeros((Lk, b, s, hkv, dh), dtype),
+                       "v": jnp.zeros((Lk, b, s, hkv, dh), dtype)}
+    if cfg.family == "hybrid":
+        sm = cfg.ssm
+        per["ssm"] = jnp.zeros((Lk, b, sm.expand * d, sm.state_dim),
+                               jnp.float32)
+    cache["layers"] = per
+    if cfg.encdec is not None:
+        cache["enc_out"] = jnp.zeros(
+            (b, cfg.encdec.n_frames, d), dtype)
+    return cache
+
+
+def decode_step(cfg: ArchConfig, params: Params, state: Dict[str, Any],
+                token: jnp.ndarray):
+    """One token for every sequence in the batch.  token: (B, 1) int32.
+    Returns (logits (B, vocab_padded), new state)."""
+    b = token.shape[0]
+    x = jnp.take(params["embed"], token, axis=0)        # (B, 1, d)
+    pos = state["len"]                                   # (B,)
+    positions = pos[:, None]
+    flags = jnp.asarray(_layer_flags(cfg))
+    enc_out = state.get("enc_out")
+
+    def body(h, inp):
+        lp, fl, lc = inp
+        layer_cache = _with_len(lc, pos)
+        y, new_cache = _layer_fwd(cfg, lp, h, positions=positions,
+                                  is_global=fl, cache=layer_cache,
+                                  enc_out=enc_out, causal=True)
+        new_cache = _strip_len(new_cache)
+        return y, new_cache
+
+    x, new_layer_cache = jax.lax.scan(
+        body, x, (params["layers"], flags, state["layers"]))
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head")
+    logits = jnp.einsum("bsd,dv->bsv", x, head)[:, 0] \
+        if head is not None else \
+        jnp.einsum("bsd,vd->bsv", x, params["embed"])[:, 0]
+    new_state = dict(state)
+    new_state["layers"] = new_layer_cache
+    new_state["len"] = pos + 1
+    return logits, new_state
+
+
+def _with_len(layer_cache, pos):
+    if layer_cache is None:
+        return None
+    out = dict(layer_cache)
+    if "attn" in out:
+        out["attn"] = dict(out["attn"])
+        out["attn"]["len"] = pos
+    return out
+
+
+def _strip_len(new_cache):
+    out = dict(new_cache)
+    if "attn" in out and isinstance(out["attn"], dict):
+        out["attn"] = {k: v for k, v in out["attn"].items() if k != "len"}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# input specs (dry-run stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+
+def model_input_spec(cfg: ArchConfig, shape: ShapeSpec
+                     ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of a shape cell.
+
+    Modality frontends are STUBS: audio provides precomputed frame
+    embeddings, VLM provides precomputed patch embeddings (DESIGN.md §4).
+    """
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        spec = {
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        }
+        if cfg.vlm is not None:
+            p = cfg.vlm.n_patches
+            spec["tokens"] = jax.ShapeDtypeStruct((b, s - p), jnp.int32)
+            spec["patches"] = jax.ShapeDtypeStruct(
+                (b, p, cfg.d_model), jnp.bfloat16)
+        if cfg.encdec is not None:
+            spec["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encdec.n_frames, cfg.d_model), jnp.bfloat16)
+        return spec
+    # decode: one new token against a seq_len-deep cache
+    return {"token": jax.ShapeDtypeStruct((b, 1), jnp.int32)}

@@ -1,0 +1,3 @@
+"""Roofline analysis from dry-run compiled artifacts (deliverable g)."""
+
+from .hlo_analyzer import analyze_hlo  # noqa: F401

@@ -1,0 +1,296 @@
+"""Loop-aware cost analysis of post-optimization (post-SPMD) HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE,
+regardless of trip count (verified empirically — see EXPERIMENTS.md
+§Methodology).  Every layer stack, microbatch accumulation and KV-chunk
+scan in this framework is a ``lax.scan``, so the built-in numbers
+undercount by 1–3 orders of magnitude.  This module re-derives the three
+roofline inputs from the HLO text with loop multipliers:
+
+  * FLOPs        — ``dot`` ops: 2 x |result| x |contracted dims|
+                   (MXU work; elementwise VPU flops are ignored, which is
+                   the convention MFU accounting uses anyway);
+  * HBM bytes    — per *materialized* buffer: for every top-level op in a
+                   non-fusion computation, result + operand bytes
+                   (fusion internals live in registers/VMEM and don't
+                   touch HBM; parameters/GTE/tuple/bitcast are free);
+  * collective bytes — per collective op, max(result, operand) bytes
+                   (per-participant shapes post-SPMD).
+
+Loop multipliers: a computation reached through a ``while`` body/cond
+inherits trip count x caller multiplier.  Trip counts are extracted from
+the loop-condition region (largest s32 constant — exact for lax.scan's
+canonical 0..N counter); loops whose bound cannot be found get
+multiplier 1 and are reported in ``unknown_loops``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["analyze_hlo", "HloCost"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_TOKEN = re.compile(r"(\w+)\[([0-9,]*)\]")
+_COMP_HEADER = re.compile(
+    r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->\s*(.*?)\s*\{\s*$")
+_LHS = re.compile(r"^\s*(ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_COMMENT = re.compile(r"/\*.*?\*/")
+_OPCODE = re.compile(r"^\s*([\w\-]+)\(")
+_CALLS = re.compile(r"calls=%?([\w.\-]+)")
+_TO_APPLY = re.compile(r"to_apply=%?([\w.\-]+)")
+_COND_BODY = re.compile(
+    r"condition=%?([\w.\-]+).*body=%?([\w.\-]+)")
+_OPERAND = re.compile(r"%([\w.\-]+)")
+_CONSTANT = re.compile(r"constant\((\d+)\)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_FREE_OPS = {"parameter", "constant", "get-tuple-element", "tuple",
+             "bitcast", "after-all", "partition-id", "replica-id",
+             "opt-barrier"}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_TOKEN.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in filter(None, dims.split(",")):
+            n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(text: str) -> Optional[List[int]]:
+    m = _SHAPE_TOKEN.search(text)
+    if not m:
+        return None
+    return [int(d) for d in filter(None, m.group(2).split(","))]
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    opcode: str
+    result: str          # raw result-shape text
+    rest: str            # operands + attrs raw text
+    operands: List[str]
+
+
+@dataclasses.dataclass
+class _Comp:
+    name: str
+    is_entry: bool
+    ops: List[_Op]
+    shapes: Dict[str, str]   # op name -> result shape text
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float
+    hbm_bytes: float
+    collectives: Dict[str, float]
+    loops: List[Tuple[str, int]]
+    unknown_loops: List[str]
+
+    def as_dict(self):
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "collectives": self.collectives,
+            "loops": self.loops,
+            "unknown_loops": self.unknown_loops,
+        }
+
+
+def _parse(text: str) -> Dict[str, _Comp]:
+    comps: Dict[str, _Comp] = {}
+    cur: Optional[_Comp] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HEADER.match(line.strip())
+            if m:
+                cur = _Comp(name=m.group(2), is_entry=bool(m.group(1)),
+                            ops=[], shapes={})
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        line = _COMMENT.sub("", line)
+        m = _LHS.match(line)
+        if not m:
+            continue
+        _, name, rhs = m.groups()
+        # result shape: balanced-paren tuple type, or "dtype[dims]{layout}"
+        rhs = rhs.strip()
+        if rhs.startswith("("):
+            depth = 0
+            for i, ch in enumerate(rhs):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        break
+            result, tail = rhs[: i + 1], rhs[i + 1:]
+        else:
+            sp = rhs.find(" ")
+            if sp < 0:
+                continue
+            result, tail = rhs[:sp], rhs[sp + 1:]
+        mo = _OPCODE.match(tail)
+        if not mo:
+            continue
+        opcode = mo.group(1)
+        rest = tail[mo.end():]
+        # operand names appear before the closing paren of the arg list
+        paren = rest.split("),")[0] if ")," in rest else rest
+        operands = _OPERAND.findall(paren)
+        op = _Op(name=name, opcode=opcode, result=result, rest=rest,
+                 operands=operands)
+        cur.ops.append(op)
+        cur.shapes[name] = result
+    return comps
+
+
+def _trip_count(comps: Dict[str, _Comp], cond_name: str) -> Optional[int]:
+    cond = comps.get(cond_name)
+    if cond is None:
+        return None
+    best = None
+    stack = [cond]
+    seen = set()
+    while stack:
+        c = stack.pop()
+        if c.name in seen:
+            continue
+        seen.add(c.name)
+        for op in c.ops:
+            if op.opcode == "constant" and "s32" in op.result:
+                m = _CONSTANT.search("constant(" + op.rest)
+                if m:
+                    v = int(m.group(1))
+                    best = v if best is None else max(best, v)
+            m = _CALLS.search(op.rest)
+            if m and m.group(1) in comps:
+                stack.append(comps[m.group(1)])
+    return best
+
+
+def _dot_flops(op: _Op, shapes: Dict[str, str]) -> float:
+    out_dims = _shape_dims(op.result) or []
+    out_elems = 1
+    for d in out_dims:
+        out_elems *= d
+    lhs = op.operands[0] if op.operands else None
+    lhs_shape = shapes.get(lhs, "") if lhs else ""
+    lhs_dims = _shape_dims(lhs_shape) or []
+    m = _CONTRACT.search(op.rest)
+    contracted = 1
+    if m and lhs_dims:
+        for i in filter(None, m.group(1).split(",")):
+            i = int(i)
+            if i < len(lhs_dims):
+                contracted *= lhs_dims[i]
+    return 2.0 * out_elems * contracted
+
+
+def analyze_hlo(text: str) -> HloCost:
+    comps = _parse(text)
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        return HloCost(0.0, 0.0, {k: 0.0 for k in _COLLECTIVES}, [], [])
+
+    # computations called via fusion: internals cost flops but not HBM
+    fusion_called = set()
+    for c in comps.values():
+        for op in c.ops:
+            if op.opcode == "fusion":
+                m = _CALLS.search(op.rest)
+                if m:
+                    fusion_called.add(m.group(1))
+
+    flops = 0.0
+    hbm = 0.0
+    coll = {k: 0.0 for k in _COLLECTIVES}
+    loops: List[Tuple[str, int]] = []
+    unknown: List[str] = []
+
+    visited_stack = set()
+
+    def walk(comp: _Comp, mult: float, in_fusion: bool):
+        nonlocal flops, hbm
+        if comp.name in visited_stack:     # recursion guard
+            return
+        visited_stack.add(comp.name)
+        for op in comp.ops:
+            # ---- flops ----------------------------------------------------
+            if op.opcode == "dot":
+                flops += mult * _dot_flops(op, comp.shapes)
+            # ---- HBM traffic ---------------------------------------------
+            if not in_fusion and op.opcode not in _FREE_OPS:
+                if op.opcode == "dynamic-update-slice":
+                    # in-place update (cache writes are donated/aliased):
+                    # traffic = the updated slice, read + write
+                    upd = comp.shapes.get(op.operands[1], "") \
+                        if len(op.operands) > 1 else ""
+                    b = 2 * _shape_bytes(upd)
+                else:
+                    b = _shape_bytes(op.result)
+                    for o in op.operands:
+                        b += _shape_bytes(comp.shapes.get(o, ""))
+                hbm += mult * b
+            # ---- collectives -----------------------------------------------
+            base = op.opcode.replace("-start", "")
+            if base in _COLLECTIVES and not op.opcode.endswith("-done"):
+                b = _shape_bytes(op.result)
+                ob = sum(_shape_bytes(comp.shapes.get(o, ""))
+                         for o in op.operands)
+                coll[base] += mult * max(b, ob)
+            # ---- control flow ----------------------------------------------
+            if op.opcode == "while":
+                m = _COND_BODY.search(op.rest)
+                if m:
+                    cond_name, body_name = m.groups()
+                    trip = _trip_count(comps, cond_name)
+                    if trip is None:
+                        trip = 1
+                        unknown.append(f"{comp.name}/{op.name}")
+                    else:
+                        loops.append((op.name, trip))
+                    body = comps.get(body_name)
+                    if body:
+                        walk(body, mult * trip, in_fusion)
+                    cond = comps.get(cond_name)
+                    if cond:
+                        walk(cond, mult * trip, in_fusion)
+            elif op.opcode == "fusion":
+                m = _CALLS.search(op.rest)
+                if m and m.group(1) in comps:
+                    walk(comps[m.group(1)], mult, True)
+            elif op.opcode in ("call", "async-start", "custom-call"):
+                m = _CALLS.search(op.rest) or _TO_APPLY.search(op.rest)
+                if m and m.group(1) in comps:
+                    walk(comps[m.group(1)], mult, in_fusion)
+            elif op.opcode == "conditional":
+                for name in _OPERAND.findall(op.rest):
+                    if name in comps and ("computation" in op.rest or
+                                          "branch" in op.rest):
+                        pass  # branches are rare here; counted if called
+        visited_stack.discard(comp.name)
+
+    walk(entry, 1.0, False)
+    coll["total"] = sum(coll.values())
+    return HloCost(flops=flops, hbm_bytes=hbm, collectives=coll,
+                   loops=loops, unknown_loops=unknown)

@@ -1,0 +1,4 @@
+"""Online serving: feature engine + model engine + request batcher."""
+
+from .engine import FeatureEngine, ServingEngine  # noqa: F401
+from .batcher import RequestBatcher  # noqa: F401

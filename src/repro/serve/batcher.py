@@ -1,0 +1,66 @@
+"""Request batching for online serving.
+
+Groups incoming requests into fixed-size batches (padding the tail) with
+a max-wait deadline — the standard online-serving trade: larger batches
+amortize the decode step, the deadline bounds tail latency.  The paper's
+workloads (200M req/min) live or die on this amortization.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
+
+__all__ = ["RequestBatcher"]
+
+
+@dataclasses.dataclass
+class _Pending:
+    request_id: int
+    payload: Any
+    enqueued_at: float
+
+
+class RequestBatcher:
+    def __init__(self, batch_size: int, max_wait_ms: float = 5.0):
+        self.batch_size = batch_size
+        self.max_wait_ms = max_wait_ms
+        self.queue: Deque[_Pending] = collections.deque()
+        self._next_id = 0
+        self.batches_emitted = 0
+        self.padded_slots = 0
+
+    def submit(self, payload: Any, now: Optional[float] = None) -> int:
+        rid = self._next_id
+        self._next_id += 1
+        self.queue.append(_Pending(rid, payload,
+                                   now if now is not None else
+                                   time.perf_counter()))
+        return rid
+
+    def ready(self, now: Optional[float] = None) -> bool:
+        if not self.queue:
+            return False
+        if len(self.queue) >= self.batch_size:
+            return True
+        now = now if now is not None else time.perf_counter()
+        age_ms = (now - self.queue[0].enqueued_at) * 1e3
+        return age_ms >= self.max_wait_ms
+
+    def next_batch(self, pad_with: Any = None,
+                   now: Optional[float] = None
+                   ) -> Tuple[List[int], List[Any], int]:
+        """Returns (request ids, payloads padded to batch_size, n_real)."""
+        n = min(self.batch_size, len(self.queue))
+        items = [self.queue.popleft() for _ in range(n)]
+        ids = [it.request_id for it in items]
+        payloads = [it.payload for it in items]
+        n_real = len(payloads)
+        while len(payloads) < self.batch_size:
+            payloads.append(pad_with if pad_with is not None
+                            else payloads[-1])
+            self.padded_slots += 1
+        self.batches_emitted += 1
+        return ids, payloads, n_real

@@ -1,0 +1,165 @@
+"""Online serving engines.
+
+``FeatureEngine`` is the paper's online request mode as a service: a
+deployed feature script + live store + pre-aggregation states behind a
+``request()`` call (Figure 3's Online Request Mode), with TTL eviction
+and §8.2 memory guarding.
+
+``ServingEngine`` wraps a model's prefill/decode for batched requests —
+the "online ML" consumer of the features.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.compiler import CompiledScript, compile_script
+from ..core.types import Table
+from ..storage.memest import MemoryGuard
+from ..storage.timestore import OnlineStore
+
+__all__ = ["FeatureEngine", "ServingEngine"]
+
+
+class FeatureEngine:
+    """Deployed feature script + online store (paper Figure 3, right)."""
+
+    def __init__(self, script_sql: str, tables: Dict[str, Table],
+                 capacity: int = 4096, use_preagg: bool = False,
+                 ttl_ms: int = 0, time_unit: str = "ms",
+                 max_memory_bytes: int = 1 << 34):
+        self.cs: CompiledScript = compile_script(
+            _parse(script_sql, time_unit), tables=tables)
+        self.use_preagg = use_preagg
+        self.ttl_ms = ttl_ms
+        self.store = OnlineStore(capacity=capacity)
+        self.guard = MemoryGuard(max_memory_bytes)
+        need = self.cs.required_store_columns()
+        for tname, cols in need.items():
+            table = tables[tname]
+            specs = {}
+            for c in cols:
+                dd = table.schema.column(c).ctype.device_dtype
+                specs[c] = np.float32 if dd.kind == "f" else np.int32
+            self.store.create_table(tname, specs)
+        self._need = need
+        self.pre_states = (self.cs.init_preagg_states()
+                           if use_preagg else None)
+        self.dicts = {name: t.dicts for name, t in tables.items()}
+        self.n_requests = 0
+        self.latencies_ms: List[float] = []
+
+    def ingest(self, table: str, row: Dict[str, Any]):
+        """Insert an event (Put path + async pre-agg via binlog)."""
+        key_col = next(iter(
+            {w.node.spec.partition_by for w in self.cs.windows}))
+        key = self._encode(table, key_col, row[key_col])
+        ts = int(row[self.cs.script.order_column])
+        values = {c: float(self._encode(table, c, row[c]))
+                  for c in self._need[table]}
+        self.guard.charge(64 + 8 * len(values))
+        self.store.put(table, key, ts, values)
+        if self.use_preagg:
+            self.pre_states = self.cs.preagg_update(
+                self.pre_states, table, key, ts, values)
+        if self.ttl_ms:
+            self.store.evict(table, ts - self.ttl_ms)
+
+    def request(self, row: Dict[str, Any]) -> Dict[str, np.ndarray]:
+        """Online request mode: features for one (virtually inserted)
+        tuple of the base table."""
+        t0 = time.perf_counter()
+        base = self.cs.script.base_table
+        key_col = next(iter(
+            {w.node.spec.partition_by for w in self.cs.windows}))
+        key = self._encode(base, key_col, row[key_col])
+        ts = int(row[self.cs.script.order_column])
+        values = {c: float(self._encode(base, c, row[c]))
+                  for c in self._need[base]}
+        feats = self.cs.online(self.store, key, ts, values,
+                               preagg_states=self.pre_states
+                               if self.use_preagg else None)
+        self.n_requests += 1
+        self.latencies_ms.append((time.perf_counter() - t0) * 1e3)
+        return feats
+
+    def _encode(self, table: str, col: str, v):
+        d = self.dicts.get(table, {}).get(col)
+        if d is not None and isinstance(v, str):
+            return d.encode(v)
+        return v
+
+    def latency_percentiles(self) -> Dict[str, float]:
+        if not self.latencies_ms:
+            return {}
+        arr = np.asarray(self.latencies_ms)
+        return {f"TP{p}": float(np.percentile(arr, p))
+                for p in (50, 90, 95, 99)}
+
+    def reset_stats(self):
+        """Drop warmup (compile) samples before measuring percentiles."""
+        self.latencies_ms.clear()
+        self.n_requests = 0
+
+    def bulk_load(self, table: str, rows_table: Table):
+        """LOAD DATA: ingest a whole historical table at once."""
+        key_col = next(iter(
+            {w.node.spec.partition_by for w in self.cs.windows}))
+        cols = {c: rows_table.columns[c].astype(np.float32)
+                for c in self._need[table]}
+        self.store.bulk_load(
+            table, rows_table.columns[key_col],
+            rows_table.columns[self.cs.script.order_column], cols)
+
+
+def _parse(sql, time_unit):
+    from ..core.sql import parse
+
+    return parse(sql, time_unit=time_unit)
+
+
+class ServingEngine:
+    """Model serving: prefill once, then batched decode steps."""
+
+    def __init__(self, cfg, params, max_len: int = 2048,
+                 dtype=jnp.bfloat16):
+        from ..models import decode_step, forward_prefill, \
+            init_decode_state
+
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self._prefill = jax.jit(
+            lambda p, b: forward_prefill(cfg, p, b,
+                                         cache_capacity=max_len))
+        self._decode = jax.jit(
+            lambda p, s, t: decode_step(cfg, p, s, t))
+        self._init_state = lambda b: init_decode_state(cfg, b, max_len,
+                                                       dtype=dtype)
+        self.state = None
+
+    def prefill(self, batch) -> np.ndarray:
+        logits, state = self._prefill(self.params, batch)
+        # pad the cache to max_len capacity happens inside forward_prefill
+        self.state = state
+        return np.asarray(logits)
+
+    def decode(self, tokens: np.ndarray) -> np.ndarray:
+        logits, self.state = self._decode(self.params, self.state,
+                                          jnp.asarray(tokens, jnp.int32))
+        return np.asarray(logits)
+
+    def generate_greedy(self, batch, n_tokens: int) -> np.ndarray:
+        logits = self.prefill(batch)
+        out = []
+        tok = np.argmax(logits, axis=-1)[:, None].astype(np.int32)
+        for _ in range(n_tokens):
+            out.append(tok)
+            logits = self.decode(tok)
+            tok = np.argmax(logits, axis=-1)[:, None].astype(np.int32)
+        return np.concatenate(out, axis=1)

@@ -1,0 +1,250 @@
+"""Online time-series store — TPU-native adaptation of the refined skiplist.
+
+The paper's §7.2 structure is a two-level skiplist: level 1 sorted by key,
+level 2 per-key linked lists sorted by timestamp, with lock-free CAS
+inserts and batch TTL eviction.  Pointer-chasing has no TPU analogue, so we
+keep the *invariant* (data pre-ranked by (key, ts) so online access is a
+seek + contiguous scan) in a dense representation:
+
+    keys : (capacity,) int32   sorted ascending; padding = INT32_MAX
+    ts   : (capacity,) int32   sorted within each key run; padding = MAX
+    cols : {name: (capacity,) float32/int32}
+    count: ()        int32     live rows
+
+All operations are pure jax (jit-able, static shapes):
+
+  * ``insert``       O(capacity) vectorized shift (a write is a roll of the
+                     suffix — fully parallel on a vector unit, unlike a CAS
+                     chain, and single-writer per shard matches the paper's
+                     replicator-lock serialization anyway),
+  * ``range_bounds`` O(log capacity) via branchless binary search,
+  * ``evict_before`` batch TTL deletion (§7.2): drop every row with
+                     ts < horizon in one compaction pass,
+  * a host-side ``binlog`` (insert sequence numbers) drives asynchronous
+    pre-aggregation updates exactly like the paper's
+    ``replicator->AppendEntry`` (§5.1 Aggregator Update).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+INT_MAX = np.int32(2**31 - 1)
+
+__all__ = ["StoreState", "OnlineStore", "insert", "range_bounds",
+           "evict_before", "gather_window"]
+
+# StoreState is a plain pytree: dict with fixed structure.
+StoreState = Dict
+
+
+def make_state(capacity: int, col_specs: Dict[str, jnp.dtype]) -> StoreState:
+    return {
+        "keys": jnp.full((capacity,), INT_MAX, jnp.int32),
+        "ts": jnp.full((capacity,), INT_MAX, jnp.int32),
+        "cols": {name: jnp.zeros((capacity,), dtype)
+                 for name, dtype in col_specs.items()},
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def _bsearch(keys: jnp.ndarray, tss: jnp.ndarray, key, ts,
+             strict: bool) -> jnp.ndarray:
+    """Branchless binary search over the (key, ts)-sorted store:
+    first index i with (keys[i], ts[i]) > (key, ts)   [strict=True]
+    or >= (key, ts)                                    [strict=False].
+    O(log capacity) scalar gathers — the dense-array analogue of the
+    skiplist seek (§7.2): pre-ranked data makes access logarithmic,
+    never a scan."""
+    n = keys.shape[0]
+    steps = max(1, (n - 1).bit_length() + 1)
+    lo = jnp.int32(0)
+    hi = jnp.int32(n)
+
+    def body(_, carry):
+        lo_, hi_ = carry
+        mid = (lo_ + hi_) // 2
+        m = jnp.clip(mid, 0, n - 1)
+        k_m = keys[m]
+        t_m = tss[m]
+        if strict:
+            gt = (k_m > key) | ((k_m == key) & (t_m > ts))
+        else:
+            gt = (k_m > key) | ((k_m == key) & (t_m >= ts))
+        go_left = gt & (lo_ < hi_)
+        hi_ = jnp.where(go_left, mid, hi_)
+        lo_ = jnp.where(go_left | (lo_ >= hi_), lo_, mid + 1)
+        return lo_, hi_
+
+    lo, _ = jax.lax.fori_loop(0, steps, body, (lo, hi))
+    return lo.astype(jnp.int32)
+
+
+def insert_pos(state: StoreState, key, ts) -> jnp.ndarray:
+    """First index i with (keys[i], ts[i]) > (key, ts): insert *after*
+    peers, preserving arrival order among equal timestamps (this is what
+    makes online replay bitwise-match the offline stable sort).  Padding
+    rows (INT_MAX keys) always compare "after"."""
+    pos = _bsearch(state["keys"], state["ts"], key, ts, strict=True)
+    return jnp.minimum(pos, state["count"])
+
+
+@jax.jit
+def insert(state: StoreState, key, ts, values: Dict[str, jnp.ndarray]
+           ) -> StoreState:
+    """Sorted insert of one row (vectorized suffix shift)."""
+    pos = insert_pos(state, key, ts)
+    idx = jnp.arange(state["keys"].shape[0], dtype=jnp.int32)
+
+    def shifted(arr, new_val):
+        prev = jnp.roll(arr, 1)
+        out = jnp.where(idx > pos, prev, arr)
+        return jnp.where(idx == pos, jnp.asarray(new_val, arr.dtype), out)
+
+    new_cols = {}
+    for name, arr in state["cols"].items():
+        new_cols[name] = shifted(arr, values.get(name, 0))
+    return {
+        "keys": shifted(state["keys"], key),
+        "ts": shifted(state["ts"], ts),
+        "cols": new_cols,
+        "count": state["count"] + 1,
+    }
+
+
+def range_bounds(state: StoreState, key, t0, t1) -> Tuple[jnp.ndarray,
+                                                          jnp.ndarray]:
+    """[lo, hi) of rows with keys==key and ts in [t0, t1] (peers at t1
+    included — matches the position-based offline semantics when the
+    querying row is about to be inserted after its peers).  Two binary
+    searches: O(log capacity), independent of table size."""
+    keys, tss = state["keys"], state["ts"]
+    n = state["count"]
+    lo = jnp.minimum(_bsearch(keys, tss, key, t0, strict=False), n)
+    hi = jnp.minimum(_bsearch(keys, tss, key, t1, strict=True), n)
+    lo = jnp.minimum(lo, hi)
+    return lo, hi
+
+
+@jax.jit
+def evict_before(state: StoreState, horizon_ts) -> StoreState:
+    """Batch TTL eviction (§7.2): remove all rows with ts < horizon.
+
+    Dense-array equivalent of the skiplist's contiguous-head deletion:
+    one stable compaction (keep-mask prefix sum + scatter).
+    """
+    keys, tss = state["keys"], state["ts"]
+    cap = keys.shape[0]
+    idx = jnp.arange(cap, dtype=jnp.int32)
+    live = idx < state["count"]
+    keep = live & (tss >= horizon_ts)
+    dest = jnp.cumsum(keep.astype(jnp.int32)) - 1
+    # out-of-bounds destinations are dropped by the scatter
+    scatter_to = jnp.where(keep, dest, cap)
+
+    def compact(arr, fill):
+        out = jnp.full_like(arr, fill)
+        return out.at[scatter_to].set(arr, mode="drop")
+
+    new_cols = {k: compact(v, 0) for k, v in state["cols"].items()}
+    return {
+        "keys": compact(keys, INT_MAX),
+        "ts": compact(tss, INT_MAX),
+        "cols": new_cols,
+        "count": jnp.sum(keep.astype(jnp.int32)),
+    }
+
+
+def gather_window(state: StoreState, lo: jnp.ndarray, hi: jnp.ndarray,
+                  max_rows: int, col_names: List[str]
+                  ) -> Tuple[Dict[str, jnp.ndarray], jnp.ndarray,
+                             jnp.ndarray]:
+    """Gather the newest ``max_rows`` rows of [lo, hi) into fixed buffers.
+
+    Returns (cols, ts, valid).  Rows are in time order; if the range holds
+    more than ``max_rows`` rows only the most recent are kept (the same
+    truncation MAXSIZE applies to windows).
+    """
+    start = jnp.maximum(lo, hi - max_rows)
+    base = jnp.arange(max_rows, dtype=jnp.int32)
+    idx = start + base
+    valid = idx < hi
+    safe = jnp.clip(idx, 0, state["keys"].shape[0] - 1)
+    cols = {c: jnp.take(state["cols"][c], safe, axis=0)
+            for c in col_names}
+    ts = jnp.take(state["ts"], safe, axis=0)
+    return cols, ts, valid
+
+
+class OnlineStore:
+    """Host-facing wrapper: one StoreState per table + a binlog.
+
+    The binlog (monotone offsets, host side) decouples pre-aggregation
+    updates from the insert path, mirroring §5.1's asynchronous
+    ``update_aggr`` closures: consumers (PreAggregator) read the log tail
+    and fold new rows into their buckets.
+    """
+
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        self.tables: Dict[str, StoreState] = {}
+        self.col_specs: Dict[str, Dict[str, jnp.dtype]] = {}
+        self.binlog: List[Tuple[str, int, int, Dict[str, float]]] = []
+        self._binlog_offset = 0
+
+    def create_table(self, name: str, col_specs: Dict[str, jnp.dtype]):
+        self.tables[name] = make_state(self.capacity, col_specs)
+        self.col_specs[name] = dict(col_specs)
+
+    def bulk_load(self, table: str, keys, ts, cols: Dict[str, "np.ndarray"]
+                  ) -> int:
+        """LOAD DATA path: sort once by (key, ts, arrival) and overwrite
+        the table state (paper Figure 3's offline->online sync)."""
+        keys = np.asarray(keys, np.int32)
+        ts = np.asarray(ts, np.int32)
+        n = keys.shape[0]
+        if n > self.capacity:
+            raise ValueError(f"bulk load of {n} rows exceeds capacity "
+                             f"{self.capacity}")
+        order = np.lexsort((np.arange(n), ts, keys))
+        st = make_state(self.capacity, self.col_specs[table])
+        st["keys"] = st["keys"].at[:n].set(jnp.asarray(keys[order]))
+        st["ts"] = st["ts"].at[:n].set(jnp.asarray(ts[order]))
+        for name in st["cols"]:
+            arr = np.asarray(cols[name])[order]
+            st["cols"][name] = st["cols"][name].at[:n].set(
+                jnp.asarray(arr, st["cols"][name].dtype))
+        st["count"] = jnp.asarray(n, jnp.int32)
+        self.tables[table] = st
+        ko = keys[order].tolist()
+        tso = ts[order].tolist()
+        self.binlog.extend((table, ko[i], tso[i], {}) for i in range(n))
+        self._binlog_offset += n
+        return n
+
+    def put(self, table: str, key: int, ts: int,
+            values: Dict[str, float]) -> int:
+        """Insert + append to binlog; returns the binlog offset."""
+        st = self.tables[table]
+        self.tables[table] = insert(st, jnp.int32(key), jnp.int32(ts),
+                                    {k: jnp.asarray(v) for k, v in
+                                     values.items()})
+        off = self._binlog_offset
+        self.binlog.append((table, int(key), int(ts), dict(values)))
+        self._binlog_offset += 1
+        return off
+
+    def read_binlog(self, from_offset: int):
+        return self.binlog[from_offset:], self._binlog_offset
+
+    def evict(self, table: str, horizon_ts: int):
+        self.tables[table] = evict_before(self.tables[table],
+                                          jnp.int32(horizon_ts))
+
+    def n_rows(self, table: str) -> int:
+        return int(self.tables[table]["count"])

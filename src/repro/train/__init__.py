@@ -1,0 +1,4 @@
+"""Training substrate: optimizer, step builders, trainer loop."""
+
+from .optimizer import adamw_init, adamw_update, TrainState  # noqa: F401
+from .steps import build_train_step, train_batch_spec  # noqa: F401

@@ -1,0 +1,131 @@
+"""Step builders: microbatched, mixed-precision train step; serve steps.
+
+``build_train_step(cfg)`` returns a pure function
+``(state, batch) -> (state, metrics)`` suitable for jit/pjit with the
+sharding trees from distributed/sharding.py:
+
+  * forward in bf16 (params cast per microbatch), grads accumulated f32,
+  * gradient accumulation over ``n_micro`` microbatches via lax.scan
+    (bounds activation memory: per-layer residuals scale with the
+    microbatch, not the global batch),
+  * remat (jax.checkpoint) on the layer scan inside forward_train,
+  * optional gradient compression (error feedback) before AdamW.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeSpec
+from ..models import forward_train, forward_prefill, decode_step
+from .optimizer import AdamWConfig, TrainState, adamw_update, global_norm
+
+__all__ = ["build_train_step", "build_prefill_step", "build_decode_step",
+           "train_batch_spec", "default_n_micro"]
+
+
+def default_n_micro(cfg: ArchConfig, shape: ShapeSpec) -> int:
+    """Microbatch count keeping per-device residuals ~< 8 GB on the
+    production mesh (16-way DP): residual/layer/device =
+    (mb/16) * seq * d_model * 2B."""
+    if shape.kind != "train":
+        return 1
+    budget = 6e9
+    per_seq_layer = shape.seq_len * cfg.d_model * 2
+    total = shape.global_batch * per_seq_layer * cfg.n_layers / 16
+    n = 1
+    while total / n > budget and n < shape.global_batch:
+        n *= 2
+    return min(n, shape.global_batch)
+
+
+def build_train_step(cfg: ArchConfig, opt_cfg: Optional[AdamWConfig] = None,
+                     n_micro: int = 1,
+                     compress: Optional[Callable] = None,
+                     compute_dtype=jnp.bfloat16,
+                     dp_axes: Optional[Tuple[str, ...]] = None):
+    """``dp_axes``: mesh axes carrying the batch dim.  When set, the
+    microbatched xs get an explicit sharding constraint — without it the
+    SPMD partitioner can replicate sequences across the data axis inside
+    the accumulation loop (observed 4x redundant compute; EXPERIMENTS.md
+    §Perf, llama3 train hillclimb)."""
+    opt_cfg = opt_cfg or AdamWConfig()
+
+    def loss_of(params_c, micro):
+        loss, _ = forward_train(cfg, params_c, micro)
+        return loss
+
+    grad_fn = jax.value_and_grad(loss_of)
+
+    def _constrain(micros):
+        if dp_axes is None:
+            return micros
+        from jax.sharding import PartitionSpec as P
+
+        def c(x):
+            if x.ndim >= 2 and x.shape[1] % 1 == 0:
+                spec = P(None, dp_axes, *([None] * (x.ndim - 2)))
+                return jax.lax.with_sharding_constraint(x, spec)
+            return x
+
+        return jax.tree_util.tree_map(c, micros)
+
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        params_c = jax.tree_util.tree_map(
+            lambda p: p.astype(compute_dtype), state.params)
+
+        if n_micro == 1:
+            loss, grads = grad_fn(params_c, batch)
+        else:
+            micros = jax.tree_util.tree_map(
+                lambda x: x.reshape((n_micro, x.shape[0] // n_micro)
+                                    + x.shape[1:]), batch)
+            micros = _constrain(micros)
+
+            def acc_step(carry, micro):
+                loss_acc, grads_acc = carry
+                loss, grads = grad_fn(params_c, micro)
+                grads = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(jnp.float32), grads_acc,
+                    grads)
+                return (loss_acc + loss, grads), None
+
+            zero_grads = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (loss, grads), _ = jax.lax.scan(
+                acc_step, (jnp.zeros((), jnp.float32), zero_grads), micros)
+            loss = loss / n_micro
+            grads = jax.tree_util.tree_map(lambda g: g / n_micro, grads)
+
+        new_state = adamw_update(state, grads, opt_cfg, compress=compress)
+        metrics = {"loss": loss.astype(jnp.float32),
+                   "grad_norm": global_norm(grads),
+                   "step": new_state.step}
+        return new_state, metrics
+
+    return train_step
+
+
+def build_prefill_step(cfg: ArchConfig, cache_capacity: Optional[int] = None):
+    def prefill_step(params, batch):
+        return forward_prefill(cfg, params, batch,
+                               cache_capacity=cache_capacity)
+    return prefill_step
+
+
+def build_decode_step(cfg: ArchConfig):
+    def serve_step(params, state, token):
+        return decode_step(cfg, params, state, token)
+    return serve_step
+
+
+def train_batch_spec(cfg: ArchConfig, shape: ShapeSpec):
+    """ShapeDtypeStructs for a train batch (tokens only; labels are the
+    shifted tokens, computed in the loss)."""
+    from ..models import model_input_spec
+
+    return model_input_spec(cfg, shape)

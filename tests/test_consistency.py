@@ -1,0 +1,81 @@
+"""Online/offline consistency — the paper's headline claim (§4, DESIGN §7)."""
+
+import numpy as np
+import pytest
+
+from repro.core import compile_script, parse, verify_consistency
+from repro.data.synthetic import make_action_tables
+
+
+def test_consistency_full_script(action_tables, micro_sql):
+    cs = compile_script(parse(micro_sql), tables=action_tables)
+    rep = verify_consistency(cs, action_tables)
+    assert rep.passed, str(rep)
+    # integer-valued features must be bitwise equal
+    assert rep.n_exact >= 5, str(rep)
+
+
+def test_consistency_rows_frame():
+    tables = make_action_tables(n_actions=150, n_orders=0, n_users=4,
+                                seed=3, with_profile=False)
+    sql = """
+    SELECT sum(price) OVER w AS s, count(price) OVER w AS c,
+           max(price) OVER w AS mx
+    FROM actions
+    WINDOW w AS (PARTITION BY userid ORDER BY ts
+                 ROWS BETWEEN 9 PRECEDING AND CURRENT ROW)
+    """
+    cs = compile_script(parse(sql), tables=tables)
+    rep = verify_consistency(cs, tables)
+    assert rep.passed, str(rep)
+
+
+def test_consistency_with_preagg():
+    """Long-window pre-aggregation must not change results (§5.1)."""
+    tables = make_action_tables(n_actions=200, n_orders=0, n_users=4,
+                                horizon_ms=12_000_000, seed=4,
+                                with_profile=False)
+    sql = """
+    SELECT sum(price) OVER w AS s, count(price) OVER w AS c,
+           min(price) OVER w AS mn, max(price) OVER w AS mx,
+           ew_avg(price, 0.5) OVER w AS ew
+    FROM actions
+    WINDOW w AS (PARTITION BY userid ORDER BY ts
+                 ROWS_RANGE BETWEEN 3000s PRECEDING AND CURRENT ROW)
+    OPTIONS (long_windows = "w:100s")
+    """
+    cs = compile_script(parse(sql), tables=tables)
+    assert cs.windows[0].preagg is not None
+    rep = verify_consistency(cs, tables, use_preagg=True)
+    assert rep.passed, str(rep)
+    rep_raw = verify_consistency(cs, tables, use_preagg=False)
+    assert rep_raw.passed, str(rep_raw)
+
+
+def test_consistency_with_last_join(action_tables):
+    sql = """
+    SELECT price, profile.age AS age, profile.score * 2 AS dscore,
+      sum(price) OVER w AS s
+    FROM actions
+    LAST JOIN profile ORDER BY ts ON actions.userid = profile.userid
+    WINDOW w AS (PARTITION BY userid ORDER BY ts
+                 ROWS_RANGE BETWEEN 10s PRECEDING AND CURRENT ROW)
+    """
+    cs = compile_script(parse(sql), tables=action_tables)
+    rep = verify_consistency(cs, action_tables)
+    assert rep.passed, str(rep)
+
+
+def test_consistency_maxsize():
+    tables = make_action_tables(n_actions=120, n_orders=80, n_users=3,
+                                seed=5, with_profile=False)
+    sql = """
+    SELECT sum(price) OVER w AS s, count(price) OVER w AS c
+    FROM actions
+    WINDOW w AS (UNION orders PARTITION BY userid ORDER BY ts
+                 ROWS_RANGE BETWEEN 30s PRECEDING AND CURRENT ROW
+                 MAXSIZE 7)
+    """
+    cs = compile_script(parse(sql), tables=tables)
+    rep = verify_consistency(cs, tables)
+    assert rep.passed, str(rep)

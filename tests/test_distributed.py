@@ -1,0 +1,152 @@
+"""Distribution substrate: sharding rules, fault tolerance, compression,
+serving utilities."""
+
+import os
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get, reduced
+from repro.distributed.compression import int8_compress, topk_compress
+from repro.distributed.fault import (CheckpointManager, ElasticPlanner,
+                                     HeartbeatMonitor, StragglerMitigator)
+from repro.distributed.sharding import auto_pspec
+from repro.serve.batcher import RequestBatcher
+
+
+# -------------------------------------------------------------- sharding
+
+def test_auto_pspec_rules():
+    mesh = {"data": 16, "model": 16}
+    # embed (V, d): vocab -> model, d -> data
+    assert auto_pspec("embed", (128256, 4096), mesh, stacked=False) == \
+        P("model", "data")
+    # stacked layer weight (L, d, f): skip L, f -> model, d -> data
+    assert auto_pspec("layers/mlp/w_gate", (32, 4096, 14336), mesh,
+                      stacked=True) == P(None, "data", "model")
+    # norm scales replicate
+    assert auto_pspec("layers/norm1", (32, 4096), mesh, stacked=True) \
+        == P(None, None)
+    # small tensors replicate
+    assert auto_pspec("layers/ssm/w_b", (32, 64, 16), mesh,
+                      stacked=True) == P(None, None, None)
+    # indivisible dims replicate (25 heads * 64 = 1600 % 16 == 0 though;
+    # use a truly indivisible case)
+    assert auto_pspec("x", (30, 18), mesh, stacked=False) == P(None, None)
+
+
+def test_param_pspecs_cover_tree():
+    from repro.distributed.sharding import param_pspecs
+    from repro.models import init_params
+
+    cfg = get("llama3-8b")
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    shapes = jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    specs = param_pspecs(cfg, shapes, mesh)
+    n_leaves = len(jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, P)))
+    assert n_leaves == len(jax.tree_util.tree_leaves(
+        shapes, is_leaf=lambda x: hasattr(x, "shape")))
+
+
+# ---------------------------------------------------------------- fault
+
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    state = {"w": np.arange(12.0).reshape(3, 4),
+             "opt": {"mu": np.ones((3, 4)), "step": np.int32(7)}}
+    mgr.save(7, state)
+    mgr.save(9, state)
+    assert mgr.latest_step() == 9
+    restored = mgr.restore(state)
+    np.testing.assert_array_equal(restored["w"], state["w"])
+    assert restored["opt"]["step"] == 7
+
+    # retention gc
+    mgr.save(11, state)
+    assert mgr.latest_step() == 11
+    with pytest.raises(FileNotFoundError):
+        _ = np.load(tmp_path / "step_00000007.host0.npz")
+
+
+def test_checkpoint_shape_mismatch_rejected(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"w": np.ones((2, 2))})
+    with pytest.raises(ValueError):
+        mgr.restore({"w": np.ones((3, 3))})
+
+
+def test_elastic_replan():
+    planner = ElasticPlanner(chips_per_host=4, tp_target=16)
+    # full fleet: 64 hosts = 256 chips -> (data 16, model 16)
+    plan = planner.plan(list(range(64)), 64)
+    assert (plan.data, plan.model) == (16, 16)
+    # lose 4 hosts -> 240 chips; tp drops to the largest divisor
+    plan = planner.plan(list(range(60)), 64)
+    assert plan.model * plan.data == 240
+    assert plan.dropped_hosts == (60, 61, 62, 63)
+    assert "re-slice" in plan.resharding
+
+
+def test_straggler_mitigation():
+    m = StragglerMitigator(n_hosts=8, threshold=1.5)
+    m.observe({h: 1.0 for h in range(8)})
+    assert m.stragglers() == []
+    m.observe({7: 5.0})
+    assert m.stragglers() == [7]
+    backups = m.plan_backups()
+    assert 7 in backups and backups[7] != 7
+
+
+def test_heartbeat():
+    hb = HeartbeatMonitor(4, timeout_s=10)
+    for h in range(4):
+        hb.beat(h, now=100.0)
+    assert hb.healthy(now=105.0) == [0, 1, 2, 3]
+    assert hb.healthy(now=115.0) == []
+    hb.beat(2, now=114.0)
+    assert hb.healthy(now=115.0) == [2]
+
+
+# ------------------------------------------------------------ compression
+
+def test_int8_error_feedback_converges():
+    g = {"w": jnp.asarray(np.random.default_rng(0)
+                          .standard_normal((64, 64)).astype(np.float32))}
+    err = {"w": jnp.zeros((64, 64))}
+    total = jnp.zeros((64, 64))
+    for _ in range(20):
+        cg, err = int8_compress(g, err)
+        total = total + cg["w"]
+    # error feedback: accumulated compressed grads ~ accumulated true
+    np.testing.assert_allclose(np.asarray(total) / 20,
+                               np.asarray(g["w"]), atol=2e-2)
+
+
+def test_topk_keeps_largest():
+    g = {"w": jnp.asarray([[1.0, -5.0, 0.1, 3.0]])}
+    err = {"w": jnp.zeros((1, 4))}
+    cg, err2 = topk_compress(g, err, frac=0.5)
+    w = np.asarray(cg["w"])[0]
+    assert w[1] == -5.0 and w[3] == 3.0
+    assert w[0] == 0.0 and w[2] == 0.0
+    np.testing.assert_allclose(np.asarray(err2["w"])[0],
+                               [1.0, 0.0, 0.1, 0.0])
+
+
+# ---------------------------------------------------------------- batcher
+
+def test_request_batcher_deadline_and_padding():
+    b = RequestBatcher(batch_size=4, max_wait_ms=5.0)
+    b.submit("a", now=0.0)
+    b.submit("b", now=0.001)
+    assert not b.ready(now=0.002)          # under deadline, under size
+    assert b.ready(now=0.01)               # deadline hit
+    ids, payloads, n_real = b.next_batch(now=0.01)
+    assert n_real == 2 and len(payloads) == 4
+    for _ in range(4):
+        b.submit("x", now=1.0)
+    assert b.ready(now=1.0)                # full batch, no wait

@@ -1,0 +1,147 @@
+"""Property-based tests of the monoid invariants (hypothesis).
+
+Every aggregate function is built on leaves that must satisfy:
+  * associativity:   c(c(a,b),d) == c(a,c(b,d))
+  * identity:        c(e,a) == a == c(a,e)
+  * prefix-inversion (invertible leaves):
+        invert_prefix(c(P,W), P) == W
+These laws are exactly what pre-aggregation (§5.1), subtract-and-evict
+(§5.2) and the segment tree rely on — if they hold, those optimizations
+are semantics-preserving by algebra.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.expr import AggCall, ColumnRef, Literal
+from repro.core.functions import (AddLeaf, DrawdownLeaf, EWLeaf, MaxLeaf,
+                                  MinLeaf, build_aggregator)
+
+
+class _Ctx:
+    def cardinality(self, expr):
+        return 8
+
+
+def _leaves():
+    col = ColumnRef("x")
+    vf = lambda env: jnp.asarray(env["x"])
+    return [
+        AddLeaf("sum:x", vf),
+        MinLeaf("min:x", vf),
+        MaxLeaf("max:x", vf),
+        DrawdownLeaf("dd:x", vf),
+        EWLeaf("ew:x", vf, decay=0.7),
+    ]
+
+
+floats = st.floats(min_value=0.5, max_value=100.0, allow_nan=False)
+rowlists = st.lists(floats, min_size=1, max_size=12)
+
+
+def _fold(leaf, xs):
+    env = {"x": np.asarray(xs, np.float32)}
+    lifted = leaf.lift(env)
+    acc = leaf.identity()
+    for i in range(lifted.shape[0]):
+        acc = leaf.combine(acc, lifted[i])
+    return np.asarray(acc)
+
+
+@pytest.mark.parametrize("leaf", _leaves(), ids=lambda l: l.key)
+@given(xs=rowlists, split=st.integers(min_value=0, max_value=12))
+@settings(max_examples=25, deadline=None)
+def test_associativity_via_split(leaf, xs, split):
+    """fold(xs) == combine(fold(left), fold(right)) for any split."""
+    split = min(split, len(xs))
+    full = _fold(leaf, xs)
+    left = _fold(leaf, xs[:split]) if split else np.asarray(
+        leaf.identity())
+    right = _fold(leaf, xs[split:]) if split < len(xs) else np.asarray(
+        leaf.identity())
+    merged = np.asarray(leaf.combine(jnp.asarray(left),
+                                     jnp.asarray(right)))
+    np.testing.assert_allclose(merged, full, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("leaf", _leaves(), ids=lambda l: l.key)
+@given(xs=rowlists)
+@settings(max_examples=15, deadline=None)
+def test_identity(leaf, xs):
+    full = _fold(leaf, xs)
+    e = jnp.asarray(leaf.identity())
+    np.testing.assert_allclose(
+        np.asarray(leaf.combine(e, jnp.asarray(full))), full, rtol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(leaf.combine(jnp.asarray(full), e)), full, rtol=1e-5)
+
+
+@pytest.mark.parametrize(
+    "leaf", [l for l in _leaves() if l.invertible], ids=lambda l: l.key)
+@given(xs=rowlists, split=st.integers(min_value=0, max_value=12))
+@settings(max_examples=25, deadline=None)
+def test_prefix_inversion(leaf, xs, split):
+    """invert_prefix(fold(xs), fold(prefix)) == fold(suffix)."""
+    split = min(split, len(xs))
+    full = _fold(leaf, xs)
+    prefix = _fold(leaf, xs[:split]) if split else np.asarray(
+        leaf.identity())
+    suffix = _fold(leaf, xs[split:]) if split < len(xs) else np.asarray(
+        leaf.identity())
+    got = np.asarray(leaf.invert_prefix(jnp.asarray(full),
+                                        jnp.asarray(prefix)))
+    np.testing.assert_allclose(got, suffix, rtol=1e-3, atol=1e-3)
+
+
+def test_drawdown_semantics():
+    """drawdown = max (peak - later trough) / peak, floored at 0."""
+    call = AggCall("drawdown", (ColumnRef("x"),), window="w")
+    agg = build_aggregator(call, _Ctx())
+    for xs, expect in [
+        ([10, 8, 12, 6, 9], (12 - 6) / 12),
+        ([1, 2, 3, 4], 0.0),
+        ([100, 50], 0.5),
+    ]:
+        (leaf,) = agg.leaves
+        state = _fold(leaf, xs)
+        out = float(agg.finalize({leaf.key: jnp.asarray(state)}))
+        np.testing.assert_allclose(out, expect, rtol=1e-5)
+
+
+def test_ew_avg_semantics():
+    """ew_avg matches the explicit weighted average."""
+    alpha = 0.5
+    call = AggCall("ew_avg", (ColumnRef("x"), Literal(alpha)), window="w",
+                   params=(alpha,))
+    agg = build_aggregator(call, _Ctx())
+    xs = [3.0, 7.0, 2.0, 9.0]
+    d = 1 / (1 + alpha)
+    w = np.array([d ** (len(xs) - 1 - i) for i in range(len(xs))])
+    expect = (w * np.asarray(xs)).sum() / w.sum()
+    (leaf,) = agg.leaves
+    state = _fold(leaf, xs)
+    out = float(agg.finalize({leaf.key: jnp.asarray(state)}))
+    np.testing.assert_allclose(out, expect, rtol=1e-5)
+
+
+def test_topn_and_distinct_exact():
+    """Dictionary-bounded histograms make these exact (DESIGN.md C8)."""
+    ctx = _Ctx()
+    env = {"x": np.asarray([1, 1, 2, 3, 3, 3, 5], np.float32),
+           "cat": np.asarray([1, 1, 2, 3, 3, 3, 5], np.int32)}
+    call = AggCall("topn_frequency", (ColumnRef("cat"), Literal(2)),
+                   window="w", params=(2,))
+    agg = build_aggregator(call, ctx)
+    (leaf,) = agg.leaves
+    lifted = leaf.lift({"cat": jnp.asarray(env["cat"])})
+    state = lifted.sum(axis=0)
+    out = np.asarray(agg.finalize({leaf.key: state}))
+    assert list(out.astype(int)) == [3, 1]
+
+    call2 = AggCall("distinct_count", (ColumnRef("cat"),), window="w")
+    agg2 = build_aggregator(call2, ctx)
+    (leaf2,) = agg2.leaves
+    state2 = leaf2.lift({"cat": jnp.asarray(env["cat"])}).sum(axis=0)
+    assert float(agg2.finalize({leaf2.key: state2})) == 4.0

@@ -1,0 +1,158 @@
+"""Per-kernel validation: shape/dtype sweeps vs the pure-jnp oracles
+(interpret=True executes kernel bodies on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.segagg import ops as segagg_ops
+from repro.kernels.chunked_scan import ops as scan_ops
+from repro.kernels.feature_hash import ops as hash_ops
+from repro.kernels.flash_decode import ops as fd_ops
+
+
+# ------------------------------------------------------------------ segagg
+
+@pytest.mark.parametrize("n,f,s", [(64, 4, 8), (1000, 16, 50),
+                                   (257, 1, 3), (512, 33, 128)])
+def test_segagg_shapes(n, f, s):
+    rng = np.random.default_rng(n)
+    vals = jnp.asarray(rng.standard_normal((n, f)).astype(np.float32))
+    segs = jnp.asarray(np.sort(rng.integers(0, s, n)).astype(np.int32))
+    a = segagg_ops.segagg(vals, segs, s, use_pallas=True)
+    b = segagg_ops.segagg(vals, segs, s, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_segagg_unsorted_and_out_of_range():
+    rng = np.random.default_rng(0)
+    vals = jnp.asarray(rng.standard_normal((100, 3)).astype(np.float32))
+    segs = jnp.asarray(rng.integers(-2, 12, 100).astype(np.int32))
+    a = segagg_ops.segagg(vals, segs, 10, use_pallas=True)
+    b = segagg_ops.segagg(vals, segs, 10, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_bucket_build_counts():
+    ts = jnp.asarray([0, 10, 20, 20, 35], jnp.int32)
+    vals = jnp.ones((5, 1), jnp.float32) * 2.0
+    out = segagg_ops.bucket_build(vals, ts, bucket_ms=10, n_buckets=4)
+    np.testing.assert_allclose(np.asarray(out[:, 1]), [1, 1, 2, 1])
+    np.testing.assert_allclose(np.asarray(out[:, 0]), [2, 2, 4, 2])
+
+
+# ------------------------------------------------------------ chunked_scan
+
+@pytest.mark.parametrize("b,t,d,chunk", [(1, 64, 8, 16), (2, 300, 32, 128),
+                                         (3, 128, 1, 128), (2, 1000, 7, 64)])
+def test_chunked_scan_shapes(b, t, d, chunk):
+    rng = np.random.default_rng(t)
+    a = jnp.asarray(rng.uniform(0.3, 1.0, (b, t, d)).astype(np.float32))
+    x = jnp.asarray(rng.standard_normal((b, t, d)).astype(np.float32))
+    y1 = scan_ops.linear_scan(a, x, use_pallas=True, chunk=chunk)
+    y2 = scan_ops.linear_scan(a, x, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-4,
+                               atol=1e-4)
+
+
+@given(t=st.integers(2, 80), d=st.integers(1, 9))
+@settings(max_examples=10, deadline=None)
+def test_chunked_scan_property(t, d):
+    rng = np.random.default_rng(t * 100 + d)
+    a = jnp.asarray(rng.uniform(0.2, 0.99, (1, t, d)).astype(np.float32))
+    x = jnp.asarray(rng.standard_normal((1, t, d)).astype(np.float32))
+    y1 = np.asarray(scan_ops.linear_scan(a, x, use_pallas=True, chunk=16))
+    # sequential oracle
+    h = np.zeros((d,), np.float32)
+    an, xn = np.asarray(a)[0], np.asarray(x)[0]
+    for i in range(t):
+        h = an[i] * h + xn[i]
+        np.testing.assert_allclose(y1[0, i], h, rtol=2e-3, atol=2e-3)
+
+
+def test_ew_avg_equivalence():
+    """ew_avg's monoid == the chunked scan recurrence (DESIGN.md §2)."""
+    from repro.core.functions import EWLeaf
+    import jax.numpy as jnp
+
+    decay = 0.8
+    xs = np.random.default_rng(0).uniform(1, 5, 20).astype(np.float32)
+    a = jnp.full((1, 20, 1), decay)
+    y = scan_ops.linear_scan(a, jnp.asarray(xs)[None, :, None],
+                             use_pallas=True, chunk=16)
+    leaf = EWLeaf("ew", lambda env: jnp.asarray(env["x"]), decay=decay)
+    state = leaf.identity()
+    for v in xs:
+        state = leaf.combine(state, leaf.lift({"x": jnp.asarray([v])})[0])
+    np.testing.assert_allclose(float(y[0, -1, 0]), float(state[0]),
+                               rtol=1e-4)
+
+
+# ------------------------------------------------------------ feature_hash
+
+@pytest.mark.parametrize("shape,dim", [((64,), 1024), ((16, 7), 1 << 20),
+                                       ((3, 5, 2), 997)])
+def test_feature_hash_shapes(shape, dim):
+    rng = np.random.default_rng(42)
+    codes = jnp.asarray(rng.integers(0, 1 << 30, shape).astype(np.int32))
+    h1 = hash_ops.feature_hash(codes, dim, use_pallas=True)
+    h2 = hash_ops.feature_hash(codes, dim, use_pallas=False)
+    assert bool(jnp.all(h1 == h2))
+    assert bool(jnp.all((h1 >= 0) & (h1 < dim)))
+
+
+def test_feature_hash_determinism_and_spread():
+    codes = jnp.arange(10000, dtype=jnp.int32)
+    h = np.asarray(hash_ops.feature_hash(codes, 4096, use_pallas=True))
+    h2 = np.asarray(hash_ops.feature_hash(codes, 4096, use_pallas=True))
+    assert (h == h2).all()
+    # avalanche: bucket occupancy near-uniform
+    counts = np.bincount(h, minlength=4096)
+    assert counts.max() < 25                      # ~2.4 expected
+
+
+# ------------------------------------------------------------ flash_decode
+
+@pytest.mark.parametrize("b,h,s,d", [(1, 2, 128, 32), (2, 4, 700, 64),
+                                     (3, 1, 1024, 128)])
+def test_flash_decode_shapes(b, h, s, d):
+    rng = np.random.default_rng(s)
+    q = jnp.asarray(rng.standard_normal((b, h, d)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((b, s, h, d)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((b, s, h, d)).astype(np.float32))
+    lens = jnp.asarray(rng.integers(1, s + 1, b).astype(np.int32))
+    o1 = fd_ops.decode_attention(q, k, v, lens, use_pallas=True)
+    mask = jnp.arange(s)[None, :] < lens[:, None]
+    o2 = fd_ops.decode_attention_ref(q, k, v, mask)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_flash_decode_shard_merge_is_exact():
+    """Partial merge across KV shards == full attention: the model-layer
+    instance of the paper's aggregator merge (DESIGN.md §2)."""
+    rng = np.random.default_rng(7)
+    b, h, s, d = 2, 4, 512, 64
+    q = jnp.asarray(rng.standard_normal((b, h, d)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((b, s, h, d)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((b, s, h, d)).astype(np.float32))
+    lens = jnp.asarray([s, s - 30], jnp.int32)
+    full = fd_ops.decode_attention(q, k, v, lens, use_pallas=True)
+    parts = []
+    n_shards = 4
+    c = s // n_shards
+    for i in range(n_shards):
+        shard_len = jnp.clip(lens - i * c, 0, c)
+        parts.append(fd_ops.decode_partials(
+            q, k[:, i * c:(i + 1) * c], v[:, i * c:(i + 1) * c],
+            shard_len, use_pallas=True))
+    acc = parts[0]
+    for p in parts[1:]:
+        acc = fd_ops.merge_partials(acc, p)
+    merged = fd_ops.finalize_partials(*acc)
+    np.testing.assert_allclose(np.asarray(merged), np.asarray(full),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,72 @@
+"""Online Preview Mode (Figure 3 mode 2) + adaptive pre-agg hierarchy."""
+
+import numpy as np
+import pytest
+
+from repro.core import compile_script, parse
+from repro.core.preview import PreviewLimits, preview
+from repro.data.synthetic import make_action_tables
+
+
+def test_preview_bounded_and_cached(action_tables, micro_sql):
+    limits = PreviewLimits(max_rows_per_table=100)
+    res = preview(micro_sql, action_tables, limits=limits)
+    assert res.ok
+    assert res.truncated                       # tables have > 100 rows
+    assert res.n_rows == 100
+    assert not res.cache_hit
+    res2 = preview(micro_sql, action_tables, limits=limits)
+    assert res2.cache_hit                      # cached second run
+    for k in res.features:
+        np.testing.assert_array_equal(res.features[k], res2.features[k])
+
+
+def test_preview_equals_production_on_same_slice(action_tables):
+    """A script that passes preview gives production-identical features
+    (same CompiledScript) — the deploy-safety property."""
+    sql = """
+    SELECT sum(price) OVER w AS s FROM actions
+    WINDOW w AS (PARTITION BY userid ORDER BY ts
+                 ROWS_RANGE BETWEEN 5s PRECEDING AND CURRENT ROW)
+    """
+    limits = PreviewLimits(max_rows_per_table=10**9)  # no truncation
+    res = preview(sql, action_tables, limits=limits, use_cache=False)
+    cs = compile_script(parse(sql), tables=action_tables)
+    prod = cs.offline(action_tables)
+    np.testing.assert_array_equal(res.features["s"], prod["s"])
+
+
+def test_preview_rejects_over_complex_scripts(action_tables):
+    items = ", ".join(f"sum(price) OVER w{i} AS f{i}" for i in range(10))
+    wins = ", ".join(
+        f"w{i} AS (PARTITION BY userid ORDER BY ts ROWS_RANGE BETWEEN "
+        f"{i + 1}s PRECEDING AND CURRENT ROW)" for i in range(10))
+    sql = f"SELECT {items} FROM actions WINDOW {wins}"
+    res = preview(sql, action_tables, limits=PreviewLimits(max_windows=4))
+    assert not res.ok
+    assert any("windows" in v for v in res.violations)
+
+
+def test_adaptive_hierarchy_stats():
+    from repro.core.functions import AddLeaf
+    from repro.core.preagg import PreAgg
+    from repro.core.window import WindowSpec
+    import jax.numpy as jnp
+
+    spec = WindowSpec("w", "k", "ts", preceding=100_000)
+    leaf = AddLeaf("sum:x", lambda env: jnp.asarray(env["x"]))
+    pa = PreAgg(spec=spec, leaves={"sum:x": leaf}, bucket_ms=1000,
+                window_ms=100_000, n_keys=4, value_cols=("x",))
+    # queries deep in time use coarse buckets -> keep / add advice
+    for ts in range(200_000, 200_000 + 32):
+        pa.observe_query(ts)
+    s = pa.suggest_hierarchy()
+    assert s["coarse_per_query"] > 1
+    assert s["advice"] in ("keep", "add-coarser-level")
+
+    # window much smaller than a coarse bucket: coarse level unused
+    pa2 = PreAgg(spec=spec, leaves={"sum:x": leaf}, bucket_ms=1000,
+                 window_ms=8_000, n_keys=4, value_cols=("x",))
+    for ts in range(50_000, 50_032):
+        pa2.observe_query(ts)
+    assert pa2.suggest_hierarchy()["advice"] == "drop-coarse-level"

@@ -1,0 +1,147 @@
+"""Storage layer: compact codec (§7.1), timestore (§7.2), memest (§8)."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core.types import Column, ColumnType, TableSchema
+from repro.storage.encoding import (CompactRowCodec, SparkRowCodec,
+                                    row_size_compact, row_size_spark)
+from repro.storage.memest import (MemoryGuard, TableMemSpec,
+                                  estimate_memory, recommend_engine)
+from repro.storage import timestore
+
+
+# ---------------------------------------------------------------- encoding
+
+def _paper_schema():
+    cols = []
+    for i in range(20):
+        cols.append(Column(f"i{i}", ColumnType.INT))
+    for i in range(20):
+        cols.append(Column(f"f{i}", ColumnType.FLOAT))
+    for i in range(20):
+        cols.append(Column(f"s{i}", ColumnType.STRING))
+    for i in range(5):
+        cols.append(Column(f"t{i}", ColumnType.TIMESTAMP))
+    return TableSchema("paper", tuple(cols))
+
+
+def _paper_row():
+    row = {}
+    for i in range(20):
+        row[f"i{i}"] = i
+        row[f"f{i}"] = float(i)
+        row[f"s{i}"] = "x"         # 1-byte strings, as in the example
+    for i in range(5):
+        row[f"t{i}"] = 1_000_000 + i
+    return row
+
+
+def test_paper_memory_example_exact():
+    """§7.1 worked example: 255 bytes vs Spark's 556 (54% saving)."""
+    schema, row = _paper_schema(), _paper_row()
+    assert row_size_compact(schema, row) == 255
+    assert row_size_spark(schema, row) == 556
+
+
+def test_codec_roundtrip_with_nulls():
+    schema = TableSchema("t", (
+        Column("a", ColumnType.INT), Column("b", ColumnType.FLOAT),
+        Column("c", ColumnType.STRING), Column("d", ColumnType.TIMESTAMP),
+        Column("e", ColumnType.STRING), Column("f", ColumnType.BOOL)))
+    codec = CompactRowCodec(schema)
+    rows = [
+        {"a": 42, "b": 3.5, "c": "hello", "d": 123456789, "e": "w",
+         "f": True},
+        {"a": None, "b": -1.25, "c": None, "d": 1, "e": "", "f": False},
+        {"a": -7, "b": None, "c": "longer string value here", "d": None,
+         "e": "y", "f": None},
+    ]
+    for row in rows:
+        buf = codec.encode(row)
+        back = codec.decode(buf)
+        for k, v in row.items():
+            if v is None:
+                assert back[k] is None
+            elif isinstance(v, float):
+                np.testing.assert_allclose(back[k], v, rtol=1e-6)
+            else:
+                assert back[k] == v
+
+
+# ---------------------------------------------------------------- timestore
+
+def test_timestore_sorted_insert_and_range():
+    st = timestore.make_state(32, {"v": jnp.float32})
+    rows = [(2, 50), (1, 10), (2, 30), (1, 20), (2, 30), (3, 5)]
+    for i, (k, t) in enumerate(rows):
+        st = timestore.insert(st, jnp.int32(k), jnp.int32(t),
+                              {"v": jnp.float32(i)})
+    keys = np.asarray(st["keys"])[:6]
+    tss = np.asarray(st["ts"])[:6]
+    assert list(keys) == [1, 1, 2, 2, 2, 3]
+    assert list(tss) == [10, 20, 30, 30, 50, 5]
+    # equal (key, ts): arrival order preserved (insert after peers)
+    vs = np.asarray(st["cols"]["v"])[:6]
+    assert vs[2] == 2.0 and vs[3] == 4.0
+
+    lo, hi = timestore.range_bounds(st, jnp.int32(2), jnp.int32(25),
+                                    jnp.int32(40))
+    assert (int(lo), int(hi)) == (2, 4)
+
+
+def test_timestore_ttl_eviction():
+    st = timestore.make_state(16, {"v": jnp.float32})
+    for i, t in enumerate([5, 10, 15, 20, 25]):
+        st = timestore.insert(st, jnp.int32(1), jnp.int32(t),
+                              {"v": jnp.float32(i)})
+    st = timestore.evict_before(st, jnp.int32(15))
+    assert int(st["count"]) == 3
+    assert list(np.asarray(st["ts"])[:3]) == [15, 20, 25]
+    # padding restored
+    assert np.asarray(st["keys"])[3] == timestore.INT_MAX
+
+
+def test_binlog_offsets_monotone():
+    store = timestore.OnlineStore(capacity=8)
+    store.create_table("t", {"v": np.float32})
+    offs = [store.put("t", 1, ts, {"v": 1.0}) for ts in (3, 1, 2)]
+    assert offs == [0, 1, 2]
+    tail, end = store.read_binlog(1)
+    assert len(tail) == 2 and end == 3
+
+
+# ---------------------------------------------------------------- memest
+
+def test_memory_estimation_formula():
+    """§8.1 example: latest table, 1M rows, 300B rows, 2 indexes,
+    2 replicas, 16B keys, C=70, K=1 -> ~1.568 GB."""
+    spec = TableMemSpec(
+        name="t", n_rows=1_000_000, avg_row_bytes=300, n_replicas=2,
+        table_type="latest", indexes=((1_000_000, 16), (1_000_000, 16)),
+        data_copies=1)
+    est = estimate_memory([spec])
+    # 2 * [2*1e6*(16+156) + 2*1e6*70 + 1*1e6*300] = 2*(344e6+140e6+300e6)
+    assert abs(est["t"] - 2 * (344e6 + 140e6 + 300e6)) < 1e3
+    assert est["t"] / 1e9 == pytest.approx(1.568, rel=0.01)
+
+
+def test_engine_recommendation():
+    assert recommend_engine(1e9, 8e9, 10) == "memory"
+    assert recommend_engine(16e9, 8e9, 25) == "disk"
+
+
+def test_memory_guard_isolation_and_alerting():
+    alerts = []
+    g = MemoryGuard(1000, alert_fraction=0.5,
+                    on_alert=lambda u, m: alerts.append((u, m)))
+    g.charge(400)
+    assert not alerts
+    g.charge(200)                       # crosses 50%
+    assert alerts == [(600, 1000)]
+    with pytest.raises(MemoryError):
+        g.charge(500)                   # write fails...
+    assert g.rejected_writes == 1       # ...but the service stays up
+    g.release(300)
+    g.charge(100)                       # writes resume after release

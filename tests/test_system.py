@@ -1,0 +1,111 @@
+"""End-to-end behaviour of the feature-computation system (deliverable c)."""
+
+import numpy as np
+import pytest
+
+from repro.core import compile_script, parse
+from repro.core.compiler import cache_stats, clear_cache
+
+
+def test_parse_and_plan(micro_sql):
+    script = parse(micro_sql)
+    assert script.base_table == "actions"
+    assert set(script.windows) == {"w3s", "w100"}
+    assert script.windows["w3s"].union_tables == ("orders",)
+    assert script.windows["w3s"].preceding == 3000
+    cs = compile_script(script)
+    # two physical windows, plan has ConcatJoin over both branches
+    assert len(cs.windows) == 2
+    assert "ConcatJoin" in cs.describe_plan()
+    assert "WindowAgg" in cs.describe_plan()
+
+
+def test_window_merging():
+    """§4.2: identical window definitions merge into one physical window."""
+    sql = """
+    SELECT sum(price) OVER w1 AS a, avg(price) OVER w2 AS b
+    FROM actions
+    WINDOW w1 AS (PARTITION BY userid ORDER BY ts
+                  ROWS_RANGE BETWEEN 5s PRECEDING AND CURRENT ROW),
+          w2 AS (PARTITION BY userid ORDER BY ts
+                 ROWS_RANGE BETWEEN 5s PRECEDING AND CURRENT ROW)
+    """
+    cs = compile_script(parse(sql))
+    assert len(cs.windows) == 1, "identical windows must merge"
+    assert cs.plan.n_merged_windows == 1
+
+
+def test_cycle_binding():
+    """§4.2: avg/sum/count over one column share accumulator leaves."""
+    sql = """
+    SELECT sum(price) OVER w AS a, avg(price) OVER w AS b,
+           count(price) OVER w AS c
+    FROM actions
+    WINDOW w AS (PARTITION BY userid ORDER BY ts
+                 ROWS_RANGE BETWEEN 5s PRECEDING AND CURRENT ROW)
+    """
+    cs = compile_script(parse(sql))
+    (w,) = cs.windows
+    all_leaves = [l.key for a in w.aggs for l in a.leaves]
+    assert len(all_leaves) == 4            # sum(1) + avg(2) + count(1)
+    assert len(set(all_leaves)) == 2       # ...bound to 2 unique states
+
+
+def test_offline_against_numpy_oracle(action_tables, micro_sql):
+    cs = compile_script(parse(micro_sql), tables=action_tables)
+    out = cs.offline(action_tables)
+    a = action_tables["actions"]
+    o = action_tables["orders"]
+    prices = np.concatenate([a.columns["price"], o.columns["price"]])
+    users = np.concatenate([a.columns["userid"], o.columns["userid"]])
+    tss = np.concatenate([a.columns["ts"], o.columns["ts"]])
+    for i in range(0, a.n_rows, 17):
+        u, t = a.columns["userid"][i], a.columns["ts"][i]
+        m = (users == u) & (tss >= t - 3000) & (tss <= t)
+        np.testing.assert_allclose(out["price_sum"][i], prices[m].sum(),
+                                   rtol=1e-4)
+        np.testing.assert_allclose(out["price_max"][i], prices[m].max(),
+                                   rtol=1e-5)
+        np.testing.assert_allclose(out["cnt"][i], m.sum(), rtol=0)
+    # scalar expr
+    np.testing.assert_allclose(out["double_price"],
+                               a.columns["price"] * 2, rtol=1e-6)
+
+
+def test_compilation_cache(action_tables, micro_sql):
+    clear_cache()
+    cs = compile_script(parse(micro_sql), tables=action_tables)
+    cs.offline(action_tables)
+    miss1 = cache_stats()["misses"]
+    cs.offline(action_tables)                 # same script+shapes: hit
+    assert cache_stats()["hits"] >= 1
+    cs2 = compile_script(parse(micro_sql), tables=action_tables)
+    cs2.offline(action_tables)                # same fingerprint: hit
+    assert cache_stats()["misses"] == miss1
+
+
+def test_last_join_point_in_time(action_tables):
+    sql = """
+    SELECT price, profile.age AS age,
+      sum(price) OVER w AS s
+    FROM actions
+    LAST JOIN profile ORDER BY ts ON actions.userid = profile.userid
+    WINDOW w AS (PARTITION BY userid ORDER BY ts
+                 ROWS_RANGE BETWEEN 10s PRECEDING AND CURRENT ROW)
+    """
+    cs = compile_script(parse(sql), tables=action_tables)
+    out = cs.offline(action_tables)
+    a = action_tables["actions"]
+    p = action_tables["profile"]
+    for i in range(0, a.n_rows, 23):
+        u, t = a.columns["userid"][i], a.columns["ts"][i]
+        m = (p.columns["userid"] == u) & (p.columns["ts"] <= t)
+        if m.any():
+            # latest matching profile row (stable: last among equal ts)
+            cand = np.where(m)[0]
+            j = cand[np.argmax(p.columns["ts"][cand])]
+            best_ts = p.columns["ts"][j]
+            ages = p.columns["age"][cand[p.columns["ts"][cand] == best_ts]]
+            assert out["age"][i] in ages
+        else:
+            assert out["age"][i] == 0.0

@@ -1,0 +1,117 @@
+"""Self-adjusted window union (§5.2) + time-aware skew resolving (§6.2)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.functions import AddLeaf
+from repro.core.skew import (assign_part_ids, plan_partitions,
+                             skewed_window_fold)
+from repro.core.union import (LoadBalancer, SlidingAggregator,
+                              static_hash_assign)
+from repro.data.synthetic import zipf_keys
+
+
+# ------------------------------------------------------------- §5.2 balance
+
+def test_dynamic_balancing_beats_static_hash_under_skew():
+    rng = np.random.default_rng(0)
+    n_keys, n_workers = 64, 8
+    keys = zipf_keys(100_000, n_keys, 1.4, rng)
+    counts = np.bincount(keys, minlength=n_keys).astype(np.float64)
+
+    lb = LoadBalancer(n_keys, n_workers)
+    static_imb = lb.imbalance(counts, static_hash_assign(n_keys,
+                                                         n_workers))
+    lb.observe(counts)
+    lb.rebalance()
+    dynamic_imb = lb.imbalance(counts)
+    assert dynamic_imb < static_imb, (static_imb, dynamic_imb)
+    assert dynamic_imb < 1.5  # near-even with hot-key splitting
+
+
+def test_hot_key_splitting():
+    lb = LoadBalancer(n_keys=4, n_workers=4, split_threshold=1.2)
+    counts = np.array([1000.0, 10.0, 10.0, 10.0])
+    lb.observe(counts)
+    lb.rebalance()
+    assert 0 in lb.split_keys and lb.split_keys[0] > 1
+
+
+# ------------------------------------------------- §5.2 subtract-and-evict
+
+def test_sliding_aggregator_matches_refold_and_is_o1():
+    leaf = AddLeaf("sum:x", lambda env: jnp.asarray(env["x"]))
+    win = 1000
+    agg = SlidingAggregator(leaf, window_ms=win)
+    rng = np.random.default_rng(1)
+    ts = np.sort(rng.integers(0, 20_000, 400))
+    vals = rng.uniform(0, 10, 400)
+    history = []
+    for t, v in zip(ts, vals):
+        lifted = np.float32(v)
+        got = agg.push(1, int(t), lifted)
+        history.append((int(t), float(v)))
+        expect = sum(x for tt, x in history if tt >= t - win)
+        np.testing.assert_allclose(float(got), expect, rtol=1e-4)
+    # O(1) amortized: ~3 combines per push (add + evict + diff), vs
+    # O(window-rows) for re-folding
+    assert agg.combines < 4 * len(ts)
+
+
+# ------------------------------------------------------------- §6.2 skew
+
+def _window_sum_fold(window_ms):
+    """Reference per-row window fold over (keys, ts, values)."""
+    def fold(keys, ts, values):
+        out = np.zeros_like(values, dtype=np.float64)
+        order = np.lexsort((ts, keys))
+        k_s, t_s, v_s = keys[order], ts[order], values[order]
+        for i in range(len(k_s)):
+            m = (k_s[: i + 1] == k_s[i]) & (t_s[: i + 1] >= t_s[i] -
+                                            window_ms)
+            out[order[i]] = v_s[: i + 1][m].sum()
+        return out
+    return fold
+
+
+def test_skewed_fold_matches_unpartitioned():
+    rng = np.random.default_rng(2)
+    n = 300
+    keys = zipf_keys(n, 6, 1.2, rng)
+    ts = np.sort(rng.choice(np.arange(1, 50_000), n, replace=False))
+    vals = rng.uniform(0, 5, n)
+    win = 4000
+    fold = _window_sum_fold(win)
+    expect = fold(keys, ts, vals)
+    got = skewed_window_fold(keys, ts, vals, window_ms=win, quantile=4,
+                             fold_fn=fold)
+    np.testing.assert_allclose(got, expect, rtol=1e-9)
+
+
+def test_partition_planning_uses_percentiles():
+    rng = np.random.default_rng(3)
+    ts = rng.integers(0, 100_000, 10_000)
+    keys = rng.integers(0, 50, 10_000)
+    plan = plan_partitions(keys, ts, quantile=4)
+    assert plan.boundaries.shape == (3,)
+    pid = assign_part_ids(ts, plan)
+    frac = np.bincount(pid, minlength=4) / len(ts)
+    assert (np.abs(frac - 0.25) < 0.05).all()      # near-equal slices
+    # HLL cardinality estimate within 5%
+    assert abs(plan.est_n_keys - 50) / 50 < 0.05
+
+
+def test_hll_accuracy():
+    from repro.core.hll import HyperLogLog
+
+    rng = np.random.default_rng(4)
+    for true_n in (100, 5_000, 200_000):
+        hll = HyperLogLog(p=12)
+        # every value seen at least once (coverage must be exact —
+        # estimation error, not sampling error, is under test)
+        vals = np.concatenate([np.arange(true_n),
+                               rng.integers(0, true_n, true_n)])
+        hll.add(vals.astype(np.uint64))
+        est = hll.estimate()
+        assert abs(est - true_n) / true_n < 0.06, (true_n, est)
