@@ -1,0 +1,133 @@
+"""Batched online request execution: per-request latency + throughput
+of the vmapped ``online_batch`` path across batch sizes vs the scalar
+``online`` path, the fused Pallas/ref window-fold fast path, and bulk
+store ingest (``put_many``) vs sequential ``put``.
+
+The paper's workloads (~200M req/min, §7.2) live on amortization: one
+jitted call, one host->device transfer, and one dispatch shared by B
+requests.  Expected shape: per-request cost falls roughly as 1/B until
+the device is compute-bound.
+
+    PYTHONPATH=src python -m benchmarks.bench_online_batch [--tiny]
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.data.synthetic import make_action_tables
+from repro.serve.engine import FeatureEngine
+
+from .common import emit, timeit
+
+SQL = """
+SELECT
+  sum(price) OVER w AS s, avg(price) OVER w AS a,
+  count(price) OVER w AS c,
+  distinct_count(category) OVER w AS dc,
+  avg_cate_where(price, quantity > 1, category) OVER w AS ca
+FROM actions
+WINDOW w AS (UNION orders PARTITION BY userid ORDER BY ts
+             ROWS_RANGE BETWEEN 60s PRECEDING AND CURRENT ROW)
+"""
+
+BATCH_SIZES = (1, 8, 64, 256)
+
+
+def _setup(n_act: int, n_ord: int):
+    tables = make_action_tables(n_actions=n_act, n_orders=n_ord,
+                                n_users=64, horizon_ms=30_000_000,
+                                seed=0, with_profile=False)
+    eng = FeatureEngine(SQL, tables, capacity=n_act + n_ord + 512)
+    eng.bulk_load("actions", tables["actions"])
+    eng.bulk_load("orders", tables["orders"])
+    return tables, eng
+
+
+def main(quick: bool = False, tiny: bool = False):
+    n_act = 2_000 if tiny else (20_000 if quick else 60_000)
+    n_ord = 1_000 if tiny else (10_000 if quick else 30_000)
+    iters = 3 if tiny else 10
+    tables, eng = _setup(n_act, n_ord)
+    a = tables["actions"]
+    cs = eng.cs
+
+    reqs = [dict(a.row(n_act - 1 - i)) for i in range(max(BATCH_SIZES))]
+    enc = [eng._encode_request(r) for r in reqs]
+    need = eng._need["actions"]
+
+    def batch_args(b):
+        keys = [e[0] for e in enc[:b]]
+        ts = [e[1] for e in enc[:b]]
+        values = {c: [e[2][c] for e in enc[:b]] for c in need}
+        return keys, ts, values
+
+    per_req_us = {}
+    for b in BATCH_SIZES:
+        keys, ts, values = batch_args(b)
+        us = timeit(lambda: cs.online_batch(eng.store, keys, ts, values),
+                    warmup=2, iters=iters)
+        per_req_us[b] = us / b
+        emit(f"online_batch_b{b}_us_per_req", us / b,
+             f"call_us={us:.0f} qps={b * 1e6 / us:.0f}")
+
+    # scalar baseline: one request per jitted call
+    k0, t0, v0 = enc[0]
+    us_scalar = timeit(lambda: cs.online(eng.store, k0, t0, v0),
+                       warmup=2, iters=iters)
+    emit("online_scalar_us_per_req", us_scalar,
+         f"qps={1e6 / us_scalar:.0f}")
+    emit("online_batch64_speedup", per_req_us[64],
+         f"vs_b1={per_req_us[1] / per_req_us[64]:.1f}x "
+         f"vs_scalar={us_scalar / per_req_us[64]:.1f}x")
+
+    # fused window-fold fast path (jnp ref + Pallas interpret)
+    keys, ts, values = batch_args(64)
+    us_fast = timeit(lambda: cs.online_batch_fast(eng.store, keys, ts,
+                                                  values),
+                     warmup=2, iters=iters)
+    emit("online_fast64_us_per_req", us_fast / 64,
+         f"vs_vmap={per_req_us[64] / (us_fast / 64):.1f}x")
+    if tiny:
+        us_pal = timeit(lambda: cs.online_batch_fast(
+            eng.store, keys, ts, values, use_pallas=True), warmup=1,
+            iters=2)
+        emit("online_fast64_pallas_interpret_us_per_req", us_pal / 64, "")
+
+    # ---- bulk ingest: put_many vs sequential put ----------------------
+    n_ing = 64 if tiny else 256
+    rows = [dict(a.row(i)) for i in range(n_ing)]
+    kc = eng.key_col
+    keys_i = np.asarray([r[kc] for r in rows], np.int32)
+    ts_i = np.asarray([r["ts"] for r in rows], np.int32)
+    cols_i = {c: np.asarray([r[c] for r in rows], np.float32)
+              for c in need}
+
+    def _seq_put():
+        st = FeatureEngine(SQL, tables, capacity=4 * n_ing).store
+        for i in range(n_ing):
+            st.put("actions", int(keys_i[i]), int(ts_i[i]),
+                   {c: float(cols_i[c][i]) for c in need})
+
+    def _bulk_put():
+        st = FeatureEngine(SQL, tables, capacity=4 * n_ing).store
+        st.put_many("actions", keys_i, ts_i, cols_i)
+
+    us_seq = timeit(_seq_put, warmup=1, iters=max(2, iters // 2))
+    us_bulk = timeit(_bulk_put, warmup=1, iters=max(2, iters // 2))
+    emit("ingest_seq_put_us_per_row", us_seq / n_ing,
+         f"rows={n_ing}")
+    emit("ingest_put_many_us_per_row", us_bulk / n_ing,
+         f"rows={n_ing} speedup={us_seq / us_bulk:.1f}x")
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke sizes (seconds, not minutes)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    main(quick=args.quick, tiny=args.tiny)

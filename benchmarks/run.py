@@ -11,11 +11,13 @@ import time
 import traceback
 
 from . import (bench_glq_compile, bench_hyperparams, bench_memory,
-               bench_offline, bench_online_micro, bench_preagg,
-               bench_rtp_topn, bench_skew, bench_window_union)
+               bench_offline, bench_online_batch, bench_online_micro,
+               bench_preagg, bench_rtp_topn, bench_skew,
+               bench_window_union)
 
 SUITES = {
     "fig6_online_micro": bench_online_micro.main,
+    "online_batch": bench_online_batch.main,
     "fig7_rtp_topn": bench_rtp_topn.main,
     "table2_memory": bench_memory.main,
     "fig8_offline_micro": bench_offline.main,

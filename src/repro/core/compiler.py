@@ -30,7 +30,7 @@ import numpy as np
 
 from ..storage import timestore
 from .expr import AggCall, ColumnRef, Expr, collect_columns, eval_scalar
-from .functions import Aggregator, build_aggregator
+from .functions import AddLeaf, Aggregator, build_aggregator
 from .plan import (FeaturePlan, FeatureScript, LastJoinSpec, WindowAgg,
                    build_plan)
 from .preagg import PreAgg
@@ -333,23 +333,185 @@ class CompiledScript:
                preagg_states: Optional[Dict[int, Any]] = None
                ) -> Dict[str, np.ndarray]:
         """Compute features for one request tuple (virtually inserted)."""
-        states = store.tables
         use_pre = preagg_states is not None
-        # hot path: per-instance fn cache keyed by store identity
-        local_key = (id(store), store.capacity, use_pre)
+        fn = self._store_fn(
+            store, "online", (use_pre,),
+            lambda: jax.jit(functools.partial(
+                self._online_fn, use_preagg=use_pre)))
+        vals = {k: jnp.asarray(v, jnp.float32) for k, v in values.items()}
+        out = fn(store.tables, jnp.int32(key), jnp.int32(ts), vals,
+                 preagg_states if use_pre else {})
+        if use_pre:
+            self._observe_queries([int(ts)])
+        return {k: np.asarray(v) for k, v in out.items()}
+
+    def _store_fn(self, store: "timestore.OnlineStore", kind: str,
+                  extra: Tuple, builder):
+        """Two-level jitted-fn cache: a per-store-identity hot path over
+        the global compilation cache (§4.2) keyed by plan fingerprint +
+        store shape signature."""
+        local_key = (id(store), store.capacity, kind) + extra
         fn = self._online_fns.get(local_key)
         if fn is None:
             sig = tuple(sorted((t, s["keys"].shape[0]) for t, s in
-                               states.items()))
-            cache_key = ("online", self._fingerprint, sig, use_pre)
-            fn = _cached(cache_key,
-                         lambda: jax.jit(functools.partial(
-                             self._online_fn, use_preagg=use_pre)))
+                               store.tables.items()))
+            cache_key = (kind, self._fingerprint, sig) + extra
+            fn = _cached(cache_key, builder)
             self._online_fns[local_key] = fn
-        vals = {k: jnp.asarray(v, jnp.float32) for k, v in values.items()}
-        out = fn(states, jnp.int32(key), jnp.int32(ts), vals,
+        return fn
+
+    @staticmethod
+    def _pad_batch(keys, ts, values):
+        """Pad a request batch to the next power of two by replicating
+        the last request (per-request computations are independent, so
+        padding never changes real rows' results and recompiles stay
+        logarithmic in batch size).  Returns (keys, ts, values, b_real).
+        """
+        keys = np.asarray(keys, np.int32)
+        tsa = np.asarray(ts, np.int32)
+        b = keys.shape[0]
+        if b == 0:
+            raise ValueError("empty request batch")
+        b_pad = timestore.next_pow2(b)
+        vals = {k: np.asarray(v, np.float32) for k, v in values.items()}
+        if b_pad > b:
+            pad = [(0, b_pad - b)]
+            keys = np.pad(keys, pad, mode="edge")
+            tsa = np.pad(tsa, pad, mode="edge")
+            vals = {k: np.pad(v, pad, mode="edge")
+                    for k, v in vals.items()}
+        return keys, tsa, vals, b
+
+    def online_batch(self, store: "timestore.OnlineStore",
+                     keys: Sequence[int], ts: Sequence[int],
+                     values: Dict[str, Sequence[float]],
+                     preagg_states: Optional[Dict[int, Any]] = None
+                     ) -> Dict[str, np.ndarray]:
+        """Features for B requests in ONE jitted call (vmapped online
+        driver).
+
+        ``keys``/``ts`` are length-B vectors and every entry of
+        ``values`` is a length-B column.  The whole request path —
+        range search, window gather, merge/sort, leaf folds, pre-agg
+        bucket combines, LAST JOINs, scalar items — runs as
+        (B, buffer)-shaped ops with a single host->device round trip,
+        so dispatch and transfer costs amortize across the batch.
+        Per-request results are bit-identical to B scalar ``online``
+        calls (the vmapped trace applies the same elementwise ops and
+        explicit fold orders).  Batches are padded to the next power of
+        two (replicating the last request; padded outputs are sliced
+        off) so recompiles stay logarithmic in batch size.
+        """
+        keys, tsa, vals_np, b = self._pad_batch(keys, ts, values)
+        use_pre = preagg_states is not None
+        fn = self._store_fn(
+            store, "online_batch", (use_pre, keys.shape[0]),
+            lambda: jax.jit(jax.vmap(
+                functools.partial(self._online_fn, use_preagg=use_pre),
+                in_axes=(None, 0, 0, 0, None))))
+        vals = {k: jnp.asarray(v) for k, v in vals_np.items()}
+        out = fn(store.tables, jnp.asarray(keys), jnp.asarray(tsa), vals,
                  preagg_states if use_pre else {})
-        return {k: np.asarray(v) for k, v in out.items()}
+        if use_pre:
+            self._observe_queries(tsa[:b].tolist())
+        return {k: np.asarray(v)[:b] for k, v in out.items()}
+
+    def _observe_queries(self, ts_list: Sequence[int]):
+        """§5.1 adaptive hierarchy: host-side per-query level stats."""
+        for w in self.windows:
+            if w.preagg is None:
+                continue
+            for t in ts_list:
+                w.preagg.observe_query(int(t))
+
+    # -- fused additive fast path (kernels/batch_windowfold) ---------------
+    def fast_batch_eligible(self) -> Tuple[bool, str]:
+        """Whether every feature folds through additive leaves over pure
+        RANGE frames — the precondition for the fused mask-matmul path."""
+        if self.script.last_joins:
+            return False, "LAST JOINs need per-request point lookups"
+        for w in self.windows:
+            spec = w.node.spec
+            if spec.frame_rows:
+                return False, f"window {spec.name} uses a ROWS frame"
+            if spec.maxsize:
+                return False, f"window {spec.name} has MAXSIZE"
+            for leaf in _unique_leaves(w.aggs).values():
+                if not isinstance(leaf, AddLeaf):
+                    return False, f"non-additive leaf {leaf.key}"
+        return True, ""
+
+    def online_batch_fast(self, store: "timestore.OnlineStore",
+                          keys: Sequence[int], ts: Sequence[int],
+                          values: Dict[str, Sequence[float]],
+                          use_pallas: bool = False, interpret: bool = True
+                          ) -> Dict[str, np.ndarray]:
+        """Fused invertible-leaf fast path: one masked-matmul kernel per
+        (window, source) replaces per-request search + gather + fold
+        (kernels/batch_windowfold).
+
+        Exact (no buffer truncation: the mask covers the whole store), but
+        reduction order differs from the tree fold, so results match
+        ``online_batch`` to float tolerance rather than bit-exactly.
+        Raises ValueError for scripts with non-additive leaves, ROWS
+        frames, MAXSIZE, or LAST JOINs — callers fall back to
+        ``online_batch``.
+        """
+        ok, why = self.fast_batch_eligible()
+        if not ok:
+            raise ValueError(f"script not eligible for fused path: {why}")
+        keys, tsa, vals_np, b = self._pad_batch(keys, ts, values)
+        fn = self._store_fn(
+            store, "online_fast", (keys.shape[0], use_pallas, interpret),
+            lambda: jax.jit(functools.partial(
+                self._online_fast_fn, use_pallas=use_pallas,
+                interpret=interpret)))
+        vals = {k: jnp.asarray(v) for k, v in vals_np.items()}
+        out = fn(store.tables, jnp.asarray(keys), jnp.asarray(tsa), vals)
+        return {k: np.asarray(v)[:b] for k, v in out.items()}
+
+    def _online_fast_fn(self, states, keys, ts, values, use_pallas=False,
+                        interpret=True):
+        from ..kernels.batch_windowfold import store_windowfold
+
+        b = keys.shape[0]
+        out: Dict[str, jnp.ndarray] = {}
+        for w in self.windows:
+            spec = w.node.spec
+            leaves = _unique_leaves(w.aggs)
+            qt1 = ts
+            qt0 = ts - jnp.int32(min(spec.preceding, 2**30))
+            sizes = [int(np.prod(leaf.shape)) if leaf.shape else 1
+                     for leaf in leaves.values()]
+            total = jnp.zeros((b, sum(sizes)), jnp.float32)
+            for tname in w.sources:
+                st = states[tname]
+                env = dict(st["cols"])
+                env[spec.order_by] = st["ts"]
+                mats = [leaf.lift(env).reshape(st["ts"].shape[0], -1)
+                        for leaf in leaves.values()]
+                total = total + store_windowfold(
+                    st, jnp.concatenate(mats, axis=1), keys, qt0, qt1,
+                    use_pallas=use_pallas, interpret=interpret)
+            if not spec.instance_not_in_window:
+                env_r = dict(values)
+                env_r[spec.order_by] = ts
+                req = [leaf.lift(env_r).reshape(b, -1)
+                       for leaf in leaves.values()]
+                total = total + jnp.concatenate(req, axis=1)
+            folded, off = {}, 0
+            for (k, leaf), size in zip(leaves.items(), sizes):
+                folded[k] = total[:, off:off + size].reshape(
+                    (b,) + leaf.shape)
+                off += size
+            for name, agg in zip(w.feature_names, w.aggs):
+                out[name] = agg.finalize(folded)
+
+        env = dict(values)
+        env[self.script.order_column] = ts
+        for item in self.plan.scalar_items:
+            out[item.name] = jnp.asarray(eval_scalar(item.expr, env))
+        return {it.name: out[it.name] for it in self.script.select}
 
     def _online_fn(self, states, key, ts, values, preagg_states,
                    use_preagg=False):
@@ -498,6 +660,17 @@ class CompiledScript:
             pre_states[wi] = w.preagg.update(
                 pre_states[wi], jnp.int32(key), jnp.int32(ts),
                 {k: jnp.asarray(v, jnp.float32) for k, v in values.items()})
+        return pre_states
+
+    def preagg_update_many(self, pre_states: Dict[int, Any], table: str,
+                           keys, ts, values: Dict[str, Any]):
+        """Batched pre-agg maintenance: fold N ingested rows per window
+        with one segment-fold + scatter (see PreAgg.update_many)."""
+        for wi, w in enumerate(self.windows):
+            if w.preagg is None or table not in w.sources:
+                continue
+            pre_states[wi] = w.preagg.update_many(pre_states[wi], keys, ts,
+                                                  values)
         return pre_states
 
 

@@ -29,9 +29,11 @@ from typing import Any, Callable, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from ..storage.timestore import next_pow2
 from .functions import Leaf
-from .window import WindowSpec
+from .window import WindowSpec, segmented_inclusive_scan
 
 __all__ = ["PreAgg"]
 
@@ -55,6 +57,7 @@ class PreAgg:
         # static count of coarse buckets a window can span
         self.max_coarse_q = self.window_ms // self.coarse_ms + 2
         self._update_jit = jax.jit(self._update_impl)
+        self._update_many_jit = jax.jit(self._update_many_impl)
         # §5.1 "aggregator hierarchy enhancement": per-level query stats
         self.query_stats = {"fine": 0, "coarse": 0, "raw_edge": 0,
                             "queries": 0}
@@ -87,7 +90,9 @@ class PreAgg:
         advice = "keep"
         if coarse_pq < 0.5 and q >= 16:
             advice = "drop-coarse-level"
-        elif fine_pq > 4 * self.fanout:
+        elif coarse_pq > 4 * self.fanout or fine_pq > 4 * self.fanout:
+            # many combines per query at the top existing level => an even
+            # coarser level would shrink per-query work by ~fanout
             advice = "add-coarser-level"
         return {"fine_per_query": fine_pq, "coarse_per_query": coarse_pq,
                 "advice": advice}
@@ -137,6 +142,76 @@ class PreAgg:
             key, fine_id % self.n_fine].set(fine_id)
         out["coarse_epoch"] = state["coarse_epoch"].at[
             key, coarse_id % self.n_coarse].set(coarse_id)
+        return out
+
+    # -------------------------------------------------------- batched update
+    def update_many(self, state, keys, ts, values: Dict[str, Any]):
+        """Fold M ingested rows into the buckets with one segment-fold +
+        one scatter per level (vs M sequential ``update`` scatters).
+
+        Per (key, bucket) the rows are combined in (ts, arrival) order —
+        identical to sequential updates whenever rows arrive in timestamp
+        order (the binlog/bulk-load case).  When a batch spans more
+        bucket ids than the ring capacity, the newest bucket aliasing
+        each slot wins (same steady state the sequential epoch check
+        converges to).  Batches are padded to the next power of two to
+        bound jit recompiles.
+        """
+        keys = np.asarray(keys, np.int32)
+        ts = np.asarray(ts, np.int32)
+        n = keys.shape[0]
+        if n == 0:
+            return state
+        m = next_pow2(n)
+        kp = np.zeros((m,), np.int32)
+        tp = np.zeros((m,), np.int32)
+        valid = np.zeros((m,), bool)
+        kp[:n], tp[:n], valid[:n] = keys, ts, True
+        vals = {}
+        for c in self.value_cols:
+            v = np.zeros((m,), np.float32)
+            if c in values:
+                v[:n] = np.asarray(values[c], np.float32)
+            vals[c] = jnp.asarray(v)
+        return self._update_many_jit(state, jnp.asarray(kp),
+                                     jnp.asarray(tp), vals,
+                                     jnp.asarray(valid))
+
+    def _update_many_impl(self, state, keys, ts, values, valid):
+        m = keys.shape[0]
+        env = {c: values[c] for c in self.value_cols}
+        env[self.spec.order_by] = ts
+        env["__valid__"] = valid          # padding rows lift to identity
+        # invalid rows get key == n_keys: they sort last, form their own
+        # groups, and their scatters fall out of bounds (dropped)
+        key_eff = jnp.where(valid, jnp.clip(keys, 0, self.n_keys - 1),
+                            jnp.int32(self.n_keys))
+        # one (key, ts, arrival) sort serves both levels: bucket ids are
+        # monotone in ts, so buckets are contiguous within each key run
+        pos = jnp.arange(m, dtype=jnp.int32)
+        perm = jnp.lexsort((pos, ts, key_eff))
+        k_s = jnp.take(key_eff, perm)
+        ts_s = jnp.take(ts, perm)
+        fine_info = _group_info(k_s, ts_s // jnp.int32(self.bucket_ms),
+                                self.n_fine, self.n_keys)
+        coarse_info = _group_info(k_s, ts_s // jnp.int32(self.coarse_ms),
+                                  self.n_coarse, self.n_keys)
+
+        out = dict(state)
+        out["fine"] = dict(state["fine"])
+        out["coarse"] = dict(state["coarse"])
+        for k, leaf in self.leaves.items():
+            lf = jnp.take(leaf.lift(env), perm, axis=0)
+            out["fine"][k] = _scatter_level(
+                state["fine"][k], state["fine_epoch"], leaf, lf, fine_info,
+                self.n_keys)
+            out["coarse"][k] = _scatter_level(
+                state["coarse"][k], state["coarse_epoch"], leaf, lf,
+                coarse_info, self.n_keys)
+        out["fine_epoch"] = _scatter_epoch(state["fine_epoch"], fine_info,
+                                           self.n_keys)
+        out["coarse_epoch"] = _scatter_epoch(state["coarse_epoch"],
+                                             coarse_info, self.n_keys)
         return out
 
     # ------------------------------------------------------------------ query
@@ -206,6 +281,58 @@ class PreAgg:
         for i in range(max_q):                 # static, small
             acc = leaf.combine(acc, st[i])
         return acc
+
+
+def _group_info(k_s, b_s, capacity: int, n_keys: int):
+    """Group structure of (key, bucket)-sorted rows for one bucket level.
+
+    ``seg_flag`` marks group starts (feeds the segmented ordered scan);
+    ``perm2``/``win`` pick, per ring slot, the single scatter winner: the
+    last (== newest-bucket) group among those aliasing the slot, so the
+    one-shot scatter below has no duplicate destinations.
+    """
+    m = k_s.shape[0]
+    slot = b_s % jnp.int32(capacity)
+    changed = (k_s[1:] != k_s[:-1]) | (b_s[1:] != b_s[:-1])
+    seg_flag = jnp.concatenate([jnp.ones((1,), bool), changed])
+    is_last = jnp.concatenate([changed, jnp.ones((1,), bool)])
+    big = jnp.int32(n_keys * capacity + 1)
+    slot_key = jnp.where(is_last & (k_s < n_keys),
+                         k_s * jnp.int32(capacity) + slot, big)
+    pos = jnp.arange(m, dtype=jnp.int32)
+    perm2 = jnp.lexsort((pos, slot_key))
+    sk2 = jnp.take(slot_key, perm2)
+    last_in_run = jnp.concatenate([sk2[1:] != sk2[:-1],
+                                   jnp.ones((1,), bool)])
+    return {
+        "seg_flag": seg_flag,
+        "perm2": perm2,
+        "win": (sk2 != big) & last_in_run,
+        "keys": jnp.take(k_s, perm2),
+        "slots": jnp.take(slot, perm2),
+        "buckets": jnp.take(b_s, perm2),
+    }
+
+
+def _scatter_level(buckets, epochs, leaf: Leaf, lifted_sorted, info,
+                   n_keys: int):
+    """One scatter of per-(key, bucket) group totals into a bucket level."""
+    incl = segmented_inclusive_scan(leaf, lifted_sorted, info["seg_flag"])
+    total = jnp.take(incl, info["perm2"], axis=0)  # group fold at is_last
+    k_c = jnp.clip(info["keys"], 0, n_keys - 1)
+    cur = buckets[k_c, info["slots"]]
+    stale = epochs[k_c, info["slots"]] != info["buckets"]
+    cur = jnp.where(_b(stale, cur),
+                    jnp.broadcast_to(leaf.identity(), cur.shape), cur)
+    newv = leaf.combine(cur, total)
+    row_idx = jnp.where(info["win"], info["keys"], jnp.int32(n_keys))
+    return buckets.at[row_idx, info["slots"]].set(newv, mode="drop")
+
+
+def _scatter_epoch(epochs, info, n_keys: int):
+    row_idx = jnp.where(info["win"], info["keys"], jnp.int32(n_keys))
+    return epochs.at[row_idx, info["slots"]].set(info["buckets"],
+                                                 mode="drop")
 
 
 def _fold_slot(buckets, epochs, leaf: Leaf, lifted, key, bucket_id,

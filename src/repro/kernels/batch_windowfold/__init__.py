@@ -1,0 +1,3 @@
+"""Fused batched request-window fold (gather + masked time-frame sum)."""
+
+from .ops import batch_windowfold, store_windowfold  # noqa: F401

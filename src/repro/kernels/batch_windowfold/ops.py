@@ -1,0 +1,40 @@
+"""Public op: batched request-window fold with kernel/ref dispatch."""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax.numpy as jnp
+
+from .kernel import batch_windowfold_pallas
+from .ref import batch_windowfold_ref
+
+
+def batch_windowfold(keys: jnp.ndarray, ts: jnp.ndarray, vals: jnp.ndarray,
+                     qkey: jnp.ndarray, qt0: jnp.ndarray, qt1: jnp.ndarray,
+                     use_pallas: bool = False, interpret: bool = True
+                     ) -> jnp.ndarray:
+    """Per-request masked window sums: (C, F) x (B,) queries -> (B, F).
+
+    ``use_pallas=False`` routes to the XLA reference (CPU hosts and
+    dry-run lowering); the Pallas path targets TPU (validated against the
+    ref in interpret mode by tests/test_online_batch.py).
+    """
+    if use_pallas:
+        return batch_windowfold_pallas(keys, ts, vals, qkey, qt0, qt1,
+                                       interpret=interpret)
+    return batch_windowfold_ref(keys, ts, vals, qkey, qt0, qt1)
+
+
+def store_windowfold(state: Dict, vals: jnp.ndarray, qkey: jnp.ndarray,
+                     qt0: jnp.ndarray, qt1: jnp.ndarray,
+                     use_pallas: bool = False, interpret: bool = True
+                     ) -> jnp.ndarray:
+    """Fold pre-lifted store rows ``vals`` (capacity, F) against a batch
+    of request frames, masking rows beyond the live count (their lifted
+    values may be garbage computed from zero padding)."""
+    count = state["count"]
+    live = jnp.arange(vals.shape[0], dtype=jnp.int32) < count
+    vals = jnp.where(live[:, None], vals, 0.0)
+    return batch_windowfold(state["keys"], state["ts"], vals, qkey, qt0,
+                            qt1, use_pallas=use_pallas, interpret=interpret)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the batched window fold.
+
+For request b and store row i the membership predicate is
+
+    m[b, i] = (keys[i] == qkey[b]) & (qt0[b] <= ts[i] <= qt1[b])
+
+(the same [t0, ts]-inclusive RANGE-frame predicate ``range_bounds`` +
+``gather_window`` implement with binary search + gather), and the fold of
+every additive (invertible) leaf is one masked matrix product:
+
+    out[b, f] = sum_i m[b, i] * vals[i, f]
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def batch_windowfold_ref(keys: jnp.ndarray, ts: jnp.ndarray,
+                         vals: jnp.ndarray, qkey: jnp.ndarray,
+                         qt0: jnp.ndarray, qt1: jnp.ndarray) -> jnp.ndarray:
+    """keys/ts: (C,) int32 store columns (padding rows carry INT32_MAX
+    keys and match no request); vals: (C, F) f32 lifted leaf values;
+    qkey/qt0/qt1: (B,) int32 per-request key and inclusive time frame.
+    Returns (B, F) f32 window sums."""
+    mask = (keys[None, :] == qkey[:, None]) & \
+        (ts[None, :] >= qt0[:, None]) & (ts[None, :] <= qt1[:, None])
+    return jnp.dot(mask.astype(jnp.float32), vals.astype(jnp.float32))

@@ -21,6 +21,11 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+try:                                   # jax >= 0.5 top-level API
+    _shard_map = jax.shard_map
+except AttributeError:                 # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
 _NEG = -1e30
 
 
@@ -102,7 +107,7 @@ def sharded_decode_attention(q, cache_k, cache_v, k_new, v_new, pos,
 
     cache_spec = P(bspec, axis, None, None)
     rep = P(bspec, None, None, None)
-    fn = jax.shard_map(
+    fn = _shard_map(
         shard_fn, mesh=mesh,
         in_specs=(rep, cache_spec, cache_spec, rep, rep, P(bspec)),
         out_specs=(rep, cache_spec, cache_spec))

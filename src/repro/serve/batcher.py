@@ -2,8 +2,19 @@
 
 Groups incoming requests into fixed-size batches (padding the tail) with
 a max-wait deadline — the standard online-serving trade: larger batches
-amortize the decode step, the deadline bounds tail latency.  The paper's
-workloads (200M req/min) live or die on this amortization.
+amortize per-call costs (host->device transfer, jit dispatch, kernel
+launch), the deadline bounds tail latency.  The paper's workloads
+(200M req/min) live or die on this amortization.
+
+Choosing ``batch_size``: per-request cost on the batched feature path
+falls roughly as 1/B until the device is compute-bound (see
+benchmarks/bench_online_batch.py), but a request admitted first waits up
+to ``max_wait_ms`` (or until B-1 peers arrive) before its batch launches.
+Under heavy traffic large batches are nearly free (the queue fills faster
+than the deadline); under sparse traffic the deadline dominates and small
+batches / ``max_wait_ms ~ p99 budget`` keep tails bounded.  Padded slots
+(tail batches) recompute the last real request — wasted work that the
+``padded_slots`` counter makes observable.
 """
 
 from __future__ import annotations
@@ -52,8 +63,14 @@ class RequestBatcher:
     def next_batch(self, pad_with: Any = None,
                    now: Optional[float] = None
                    ) -> Tuple[List[int], List[Any], int]:
-        """Returns (request ids, payloads padded to batch_size, n_real)."""
+        """Returns (request ids, payloads padded to batch_size, n_real).
+
+        An empty queue yields ``([], [], 0)`` — nothing to pad from (and
+        with ``pad_with=None`` there is no last payload to replicate).
+        """
         n = min(self.batch_size, len(self.queue))
+        if n == 0:
+            return [], [], 0
         items = [self.queue.popleft() for _ in range(n)]
         ids = [it.request_id for it in items]
         payloads = [it.payload for it in items]

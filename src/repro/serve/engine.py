@@ -5,14 +5,25 @@ deployed feature script + live store + pre-aggregation states behind a
 ``request()`` call (Figure 3's Online Request Mode), with TTL eviction
 and §8.2 memory guarding.
 
+Batched serving: ``submit_request()`` enqueues a request into a
+``RequestBatcher`` and ``flush()`` drains the queue through
+``CompiledScript.online_batch`` — B requests share one jitted call, one
+host->device transfer, and one dispatch, so per-request cost falls
+roughly as 1/B until the device saturates.  ``request_batch()`` computes
+a caller-assembled batch directly.  The trade-off knobs (batch size vs
+tail latency) are documented on ``RequestBatcher``; bulk ingest
+(``ingest_many``) amortizes the same way on the write path via
+``OnlineStore.put_many`` + ``PreAgg.update_many``.
+
 ``ServingEngine`` wraps a model's prefill/decode for batched requests —
 the "online ML" consumer of the features.
 """
 
 from __future__ import annotations
 
+import collections
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Deque, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +33,7 @@ from ..core.compiler import CompiledScript, compile_script
 from ..core.types import Table
 from ..storage.memest import MemoryGuard
 from ..storage.timestore import OnlineStore
+from .batcher import RequestBatcher
 
 __all__ = ["FeatureEngine", "ServingEngine"]
 
@@ -32,13 +44,25 @@ class FeatureEngine:
     def __init__(self, script_sql: str, tables: Dict[str, Table],
                  capacity: int = 4096, use_preagg: bool = False,
                  ttl_ms: int = 0, time_unit: str = "ms",
-                 max_memory_bytes: int = 1 << 34):
+                 max_memory_bytes: int = 1 << 34,
+                 batch_size: int = 64, max_wait_ms: float = 5.0,
+                 latency_window: int = 16384):
         self.cs: CompiledScript = compile_script(
             _parse(script_sql, time_unit), tables=tables)
         self.use_preagg = use_preagg
         self.ttl_ms = ttl_ms
         self.store = OnlineStore(capacity=capacity)
         self.guard = MemoryGuard(max_memory_bytes)
+        # resolve the partition column ONCE: every window must agree (a
+        # per-request next(iter(set)) is both wasted work and
+        # nondeterministic under multiple partition columns)
+        part_cols = sorted({w.node.spec.partition_by
+                            for w in self.cs.windows})
+        if len(part_cols) > 1:
+            raise ValueError(
+                f"script partitions windows by multiple columns "
+                f"{part_cols}; one shared key column is required")
+        self.key_col: Optional[str] = part_cols[0] if part_cols else None
         need = self.cs.required_store_columns()
         for tname, cols in need.items():
             table = tables[tname]
@@ -51,14 +75,17 @@ class FeatureEngine:
         self.pre_states = (self.cs.init_preagg_states()
                            if use_preagg else None)
         self.dicts = {name: t.dicts for name, t in tables.items()}
+        self.batcher = RequestBatcher(batch_size, max_wait_ms=max_wait_ms)
         self.n_requests = 0
-        self.latencies_ms: List[float] = []
+        # bounded: sustained traffic must not grow host memory without
+        # limit; percentiles are over the most recent window
+        self.latencies_ms: Deque[float] = collections.deque(
+            maxlen=latency_window)
 
+    # ------------------------------------------------------------- ingest
     def ingest(self, table: str, row: Dict[str, Any]):
         """Insert an event (Put path + async pre-agg via binlog)."""
-        key_col = next(iter(
-            {w.node.spec.partition_by for w in self.cs.windows}))
-        key = self._encode(table, key_col, row[key_col])
+        key = self._encode(table, self._key_col(), row[self._key_col()])
         ts = int(row[self.cs.script.order_column])
         values = {c: float(self._encode(table, c, row[c]))
                   for c in self._need[table]}
@@ -70,23 +97,101 @@ class FeatureEngine:
         if self.ttl_ms:
             self.store.evict(table, ts - self.ttl_ms)
 
+    def ingest_many(self, table: str, rows: Sequence[Dict[str, Any]]):
+        """Bulk insert of N events with one store sort-merge
+        (``put_many``) and one batched pre-agg fold (``update_many``)
+        instead of N O(capacity) shifts + N scatters."""
+        if not rows:
+            return
+        kc = self._key_col()
+        keys = np.asarray([self._encode(table, kc, r[kc]) for r in rows],
+                          np.int32)
+        ts = np.asarray([int(r[self.cs.script.order_column])
+                         for r in rows], np.int32)
+        cols = {c: np.asarray([float(self._encode(table, c, r[c]))
+                               for r in rows], np.float32)
+                for c in self._need[table]}
+        nbytes = len(rows) * (64 + 8 * len(cols))
+        self.guard.charge(nbytes)
+        try:
+            self.store.put_many(table, keys, ts, cols)
+        except Exception:
+            self.guard.release(nbytes)   # nothing was stored
+            raise
+        if self.use_preagg:
+            self.pre_states = self.cs.preagg_update_many(
+                self.pre_states, table, keys, ts, cols)
+        if self.ttl_ms:
+            self.store.evict(table, int(ts.max()) - self.ttl_ms)
+
+    # ------------------------------------------------------------ request
     def request(self, row: Dict[str, Any]) -> Dict[str, np.ndarray]:
         """Online request mode: features for one (virtually inserted)
         tuple of the base table."""
         t0 = time.perf_counter()
-        base = self.cs.script.base_table
-        key_col = next(iter(
-            {w.node.spec.partition_by for w in self.cs.windows}))
-        key = self._encode(base, key_col, row[key_col])
-        ts = int(row[self.cs.script.order_column])
-        values = {c: float(self._encode(base, c, row[c]))
-                  for c in self._need[base]}
+        key, ts, values = self._encode_request(row)
         feats = self.cs.online(self.store, key, ts, values,
                                preagg_states=self.pre_states
                                if self.use_preagg else None)
         self.n_requests += 1
         self.latencies_ms.append((time.perf_counter() - t0) * 1e3)
         return feats
+
+    def request_batch(self, rows: Sequence[Dict[str, Any]]
+                      ) -> List[Dict[str, np.ndarray]]:
+        """Features for B requests in one jitted call (batched driver)."""
+        if not rows:
+            return []
+        t0 = time.perf_counter()
+        enc = [self._encode_request(r) for r in rows]
+        keys = [e[0] for e in enc]
+        ts = [e[1] for e in enc]
+        values = {c: [e[2][c] for e in enc]
+                  for c in self._need[self.cs.script.base_table]}
+        feats = self.cs.online_batch(
+            self.store, keys, ts, values,
+            preagg_states=self.pre_states if self.use_preagg else None)
+        dt_ms = (time.perf_counter() - t0) * 1e3
+        self.n_requests += len(rows)
+        per_req = dt_ms / len(rows)   # amortized per-request latency
+        self.latencies_ms.extend([per_req] * len(rows))
+        return [{k: v[i] for k, v in feats.items()}
+                for i in range(len(rows))]
+
+    def submit_request(self, row: Dict[str, Any]) -> int:
+        """Enqueue a request for batched execution; returns its id."""
+        return self.batcher.submit(row)
+
+    def flush(self) -> Dict[int, Dict[str, np.ndarray]]:
+        """Drain the request queue through the batched path.
+
+        Only real requests are handed to the batched driver (it pads
+        internally for shape stability and slices the padding off), so
+        latency samples, ``n_requests``, and pre-agg query stats count
+        real traffic only.  Returns {request_id: features}.
+        """
+        out: Dict[int, Dict[str, np.ndarray]] = {}
+        while self.batcher.queue:
+            ids, payloads, n_real = self.batcher.next_batch()
+            feats = self.request_batch(payloads[:n_real])
+            for rid, f in zip(ids, feats):
+                out[rid] = f
+        return out
+
+    # ------------------------------------------------------------ helpers
+    def _key_col(self) -> str:
+        if self.key_col is None:
+            raise ValueError("script has no window partition column; "
+                             "store ingest needs a key")
+        return self.key_col
+
+    def _encode_request(self, row: Dict[str, Any]):
+        base = self.cs.script.base_table
+        key = self._encode(base, self._key_col(), row[self._key_col()])
+        ts = int(row[self.cs.script.order_column])
+        values = {c: float(self._encode(base, c, row[c]))
+                  for c in self._need[base]}
+        return key, ts, values
 
     def _encode(self, table: str, col: str, v):
         d = self.dicts.get(table, {}).get(col)
@@ -108,12 +213,10 @@ class FeatureEngine:
 
     def bulk_load(self, table: str, rows_table: Table):
         """LOAD DATA: ingest a whole historical table at once."""
-        key_col = next(iter(
-            {w.node.spec.partition_by for w in self.cs.windows}))
         cols = {c: rows_table.columns[c].astype(np.float32)
                 for c in self._need[table]}
         self.store.bulk_load(
-            table, rows_table.columns[key_col],
+            table, rows_table.columns[self._key_col()],
             rows_table.columns[self.cs.script.order_column], cols)
 
 

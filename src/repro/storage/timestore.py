@@ -36,8 +36,14 @@ import numpy as np
 
 INT_MAX = np.int32(2**31 - 1)
 
-__all__ = ["StoreState", "OnlineStore", "insert", "range_bounds",
-           "evict_before", "gather_window"]
+__all__ = ["StoreState", "OnlineStore", "insert", "insert_many",
+           "range_bounds", "evict_before", "gather_window", "next_pow2"]
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (>= 1): batch-size padding that keeps
+    jit recompiles logarithmic in batch size."""
+    return 1 << max(0, (n - 1).bit_length())
 
 # StoreState is a plain pytree: dict with fixed structure.
 StoreState = Dict
@@ -114,6 +120,43 @@ def insert(state: StoreState, key, ts, values: Dict[str, jnp.ndarray]
         "ts": shifted(state["ts"], ts),
         "cols": new_cols,
         "count": state["count"] + 1,
+    }
+
+
+@jax.jit
+def insert_many(state: StoreState, keys, ts, values: Dict[str, jnp.ndarray],
+                n_new) -> StoreState:
+    """Sorted insert of a padded batch of rows with ONE merge.
+
+    ``keys``/``ts`` are (M,) int32 with padding rows carrying INT_MAX in
+    both; ``n_new`` is the number of real rows.  Cost is one
+    O((capacity+M) log) lexsort instead of M O(capacity) suffix shifts —
+    the bulk-ingest analogue of the skiplist's batch build.
+
+    Ordering matches M sequential ``insert`` calls: new rows land *after*
+    existing peers with equal (key, ts) (existing rows carry smaller
+    arrival ranks), and arrival order among the new rows themselves is
+    preserved (rank = capacity + j).  Rows sorted beyond ``capacity`` are
+    dropped — the host wrapper guarantees they are padding only.
+    """
+    cap = state["keys"].shape[0]
+    m = keys.shape[0]
+    rank = jnp.concatenate([jnp.arange(cap, dtype=jnp.int32),
+                            cap + jnp.arange(m, dtype=jnp.int32)])
+    all_keys = jnp.concatenate([state["keys"], jnp.asarray(keys, jnp.int32)])
+    all_ts = jnp.concatenate([state["ts"], jnp.asarray(ts, jnp.int32)])
+    perm = jnp.lexsort((rank, all_ts, all_keys))[:cap]
+
+    new_cols = {}
+    for name, arr in state["cols"].items():
+        v = jnp.asarray(values.get(name, jnp.zeros((m,), arr.dtype)),
+                        arr.dtype)
+        new_cols[name] = jnp.take(jnp.concatenate([arr, v]), perm, axis=0)
+    return {
+        "keys": jnp.take(all_keys, perm),
+        "ts": jnp.take(all_ts, perm),
+        "cols": new_cols,
+        "count": state["count"] + jnp.asarray(n_new, jnp.int32),
     }
 
 
@@ -237,6 +280,47 @@ class OnlineStore:
         off = self._binlog_offset
         self.binlog.append((table, int(key), int(ts), dict(values)))
         self._binlog_offset += 1
+        return off
+
+    def put_many(self, table: str, keys, ts,
+                 cols: Dict[str, "np.ndarray"]) -> int:
+        """Bulk insert of N rows with one sort-merge (vs N O(capacity)
+        shifts for sequential ``put``); returns the first binlog offset.
+
+        Equivalent to ``put``-ing the rows in order: rows are appended to
+        the binlog in arrival order and land after existing (key, ts)
+        peers in the store.  Batches are padded to the next power of two
+        so jit recompiles stay logarithmic in batch size.
+        """
+        keys = np.asarray(keys, np.int32)
+        ts = np.asarray(ts, np.int32)
+        n = keys.shape[0]
+        if n == 0:
+            return self._binlog_offset
+        if self.n_rows(table) + n > self.capacity:
+            raise ValueError(f"bulk put of {n} rows overflows capacity "
+                             f"{self.capacity}")
+        m = next_pow2(n)
+        k_pad = np.full((m,), INT_MAX, np.int32)
+        t_pad = np.full((m,), INT_MAX, np.int32)
+        k_pad[:n] = keys
+        t_pad[:n] = ts
+        specs = self.col_specs[table]
+        vals = {}
+        for name, dtype in specs.items():
+            v = np.zeros((m,), dtype)
+            if name in cols:
+                v[:n] = np.asarray(cols[name], dtype)
+            vals[name] = jnp.asarray(v)
+        self.tables[table] = insert_many(
+            self.tables[table], jnp.asarray(k_pad), jnp.asarray(t_pad),
+            vals, n)
+        off = self._binlog_offset
+        kl, tl = keys.tolist(), ts.tolist()
+        self.binlog.extend(
+            (table, kl[i], tl[i],
+             {c: float(cols[c][i]) for c in cols}) for i in range(n))
+        self._binlog_offset += n
         return off
 
     def read_binlog(self, from_offset: int):

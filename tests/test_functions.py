@@ -13,7 +13,9 @@ are semantics-preserving by algebra.
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.expr import AggCall, ColumnRef, Literal
 from repro.core.functions import (AddLeaf, DrawdownLeaf, EWLeaf, MaxLeaf,
