@@ -1,0 +1,161 @@
+"""Key-sharded online serving: per-request cost vs shard count.
+
+The paper scales its online engine by key-partitioning state across
+workers (§5) — here the partitions are devices on a
+``jax.sharding.Mesh`` axis.  A B-request batch is routed to its owning
+shards and each shard runs the batched window-fold driver over only its
+~B/S sub-batch against only its local store block.
+
+Two scaling regimes are reported:
+
+* **weak scaling** (headline, B = 64·S): each shard serves a fixed
+  sub-batch while total traffic grows with the fleet — the paper's
+  scale-out story (more tablets => more total QPS).  Per-request cost
+  must fall as shards are added.
+* **strong scaling** (fixed B): splits a fixed batch across shards.
+  Informative about dispatch overhead, but its wall-clock gain is
+  bounded by the PHYSICAL core count — with
+  ``--xla_force_host_platform_device_count=8`` on a 2-core CI box the 8
+  "devices" time-share 2 cores, so don't expect 8x here.
+
+    PYTHONPATH=src python -m benchmarks.bench_sharded_online [--tiny|--quick]
+
+(the module sets XLA_FLAGS before jax initializes; on a real multi-chip
+platform the flag is ignored and the physical devices are used).
+"""
+
+from __future__ import annotations
+
+import os
+
+# must precede ANY jax initialization (see launch/mesh.py).  Single-
+# threaded eigen: at feature-fold op sizes the per-op thread handoff
+# costs more than it buys, and 8 multi-threaded virtual devices thrash
+# a small host — one thread per device program measures ~2x faster even
+# at 1 shard on a 2-core box.
+os.environ.setdefault(
+    "XLA_FLAGS", "--xla_force_host_platform_device_count=8 "
+    "--xla_cpu_multi_thread_eigen=false")
+
+import numpy as np  # noqa: E402
+
+from repro.data.synthetic import make_action_tables  # noqa: E402
+from repro.distributed.sharding import key_shard_mesh  # noqa: E402
+from repro.serve.engine import FeatureEngine  # noqa: E402
+
+from .common import emit, timeit  # noqa: E402
+
+SQL = """
+SELECT
+  sum(price) OVER w AS s, avg(price) OVER w AS a,
+  count(price) OVER w AS c,
+  distinct_count(category) OVER w AS dc,
+  avg_cate_where(price, quantity > 1, category) OVER w AS ca
+FROM actions
+WINDOW w AS (PARTITION BY userid ORDER BY ts
+             ROWS_RANGE BETWEEN 60s PRECEDING AND CURRENT ROW)
+"""
+
+SHARD_COUNTS = (1, 2, 4, 8)
+
+
+def _engine(tables, capacity, **kw):
+    eng = FeatureEngine(SQL, tables, capacity=capacity, **kw)
+    eng.bulk_load("actions", tables["actions"])
+    if eng.sharded:
+        # LPT rebalance from the observed bulk-load key distribution:
+        # flattens per-shard row counts AND per-shard request sub-batch
+        # padding (b_pad tracks the hottest shard)
+        eng.rebalance()
+    return eng
+
+
+def main(quick: bool = False, tiny: bool = False):
+    import jax
+
+    n_act = 2_000 if tiny else (20_000 if quick else 60_000)
+    batch = 64 if tiny else 256
+    sub = 32 if tiny else 64           # weak-scaling per-shard sub-batch
+    iters = 5 if tiny else 15
+    n_dev = len(jax.devices())
+    emit("sharded_env_devices", float(n_dev),
+         f"physical_cores={os.cpu_count()} (strong-scaling wall-clock "
+         f"is bounded by physical cores, not virtual devices)")
+    tables = make_action_tables(n_actions=n_act, n_orders=0,
+                                n_users=256, horizon_ms=30_000_000,
+                                seed=0, with_profile=False)
+    a = tables["actions"]
+
+    base = _engine(tables, capacity=n_act + 512)
+    need = base._need["actions"]
+
+    def batch_args(b):
+        enc = [base._encode_request(dict(a.row(n_act - 1 - i)))
+               for i in range(b)]
+        return ([e[0] for e in enc], [e[1] for e in enc],
+                {c: [e[2][c] for e in enc] for c in need})
+
+    engines = {}
+    for n_shards in SHARD_COUNTS:
+        if n_shards <= n_dev:
+            engines[n_shards] = _engine(tables, capacity=n_act + 512,
+                                        mesh=key_shard_mesh(n_shards))
+
+    # ---- weak scaling: B = sub * S ------------------------------------
+    for n_shards, eng in engines.items():
+        b = sub * n_shards
+        keys, ts, values = batch_args(b)
+        ref = base.cs.online_batch(base.store, keys, ts, values)
+        out = eng.cs.online_sharded_batch(eng.store, keys, ts, values)
+        for k in ref:   # parity gate: a fast wrong answer is no answer
+            np.testing.assert_array_equal(np.asarray(out[k]),
+                                          np.asarray(ref[k]), err_msg=k)
+        us = timeit(lambda: eng.cs.online_sharded_batch(
+            eng.store, keys, ts, values), warmup=2, iters=iters)
+        emit(f"sharded_weak_s{n_shards}_us_per_req", us / b,
+             f"B={b} call_us={us:.0f} qps={b * 1e6 / us:.0f}")
+
+    # ---- strong scaling: fixed B --------------------------------------
+    keys, ts, values = batch_args(batch)
+    us_unsharded = timeit(
+        lambda: base.cs.online_batch(base.store, keys, ts, values),
+        warmup=2, iters=iters)
+    emit("sharded_strong_baseline_us_per_req", us_unsharded / batch,
+         f"B={batch} unsharded call_us={us_unsharded:.0f}")
+    for n_shards, eng in engines.items():
+        us = timeit(lambda: eng.cs.online_sharded_batch(
+            eng.store, keys, ts, values), warmup=2, iters=iters)
+        emit(f"sharded_strong_s{n_shards}_us_per_req", us / batch,
+             f"B={batch} call_us={us:.0f} "
+             f"vs_unsharded={us_unsharded / us:.2f}x")
+
+    # ---- sharded bulk ingest ------------------------------------------
+    n_ing = 256 if tiny else 1024
+    rows_k = np.asarray([a.row(i)["userid"] for i in range(n_ing)],
+                        np.int32)
+    rows_t = np.asarray([a.row(i)["ts"] for i in range(n_ing)], np.int32)
+    rows_c = {c: np.asarray([float(a.row(i)[c]) for i in range(n_ing)],
+                            np.float32) for c in need}
+
+    def _ingest(n_shards):
+        eng = FeatureEngine(SQL, tables, capacity=4 * n_ing,
+                            mesh=key_shard_mesh(n_shards))
+        eng.store.put_many("actions", rows_k, rows_t, rows_c)
+
+    for n_shards in (1, min(8, n_dev)):
+        us = timeit(lambda: _ingest(n_shards), warmup=1,
+                    iters=max(2, iters // 2))
+        emit(f"sharded_put_many_s{n_shards}_us_per_row", us / n_ing,
+             f"rows={n_ing}")
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke sizes (seconds, not minutes)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    main(quick=args.quick, tiny=args.tiny)

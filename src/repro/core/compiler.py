@@ -416,6 +416,130 @@ class CompiledScript:
             self._observe_queries(tsa[:b].tolist())
         return {k: np.asarray(v)[:b] for k, v in out.items()}
 
+    # -- key-sharded batch driver (mesh-distributed serving) ---------------
+    def sharded_eligible(self) -> Tuple[bool, str]:
+        """Whether the script can serve from a key-sharded store: every
+        row a request touches must live on the request key's shard, i.e.
+        all windows partition by one column (engine-enforced already) and
+        every LAST JOIN routes by that same column."""
+        part = {w.node.spec.partition_by for w in self.windows}
+        if not part:
+            return False, "no window partition column to shard by"
+        if len(part) > 1:
+            return (False,
+                    f"windows partition by multiple columns "
+                    f"{sorted(part)}: requests can only be routed by "
+                    f"one key")
+        for js in self.script.last_joins:
+            if js.left_key not in part:
+                return (False,
+                        f"LAST JOIN keys on {js.left_key!r}, not the "
+                        f"window partition column {sorted(part)[0]!r}: "
+                        f"the joined row may live on another shard")
+        return True, ""
+
+    def online_sharded_batch(self, store, keys: Sequence[int],
+                             ts: Sequence[int],
+                             values: Dict[str, Sequence[float]],
+                             preagg_states: Optional[Dict[int, Any]] = None
+                             ) -> Dict[str, np.ndarray]:
+        """Features for B requests against a ``ShardedOnlineStore``.
+
+        Host side routes each request to its key's owning shard, packing
+        per-shard sub-batches into (n_shards, b_pad) blocks (padding
+        replicates a real request; padded outputs are discarded).  Device
+        side, one jitted call fans the blocks out across the store's mesh
+        axis with ``shard_map``: each shard runs the SAME vmapped
+        ``_online_fn`` trace as ``online_batch``, against only its local
+        (capacity,) store block and pre-agg planes — window folds never
+        gather across shards, which is what keeps results bit-exact vs
+        the unsharded path.  Results are re-assembled in request order.
+        With ``store.mesh is None`` the identical computation runs as a
+        vmap over the stacked shard dim on one device.
+        """
+        ok, why = self.sharded_eligible()
+        if not ok:
+            raise ValueError(f"script not shardable by key: {why}")
+        keys = np.asarray(keys, np.int32)
+        tsa = np.asarray(ts, np.int32)
+        b = keys.shape[0]
+        if b == 0:
+            raise ValueError("empty request batch")
+        use_pre = preagg_states is not None
+        if use_pre:
+            # same bounded-universe contract as the sharded pre-agg
+            # update: a request routed by a raw key >= n_keys would read
+            # another shard's alias plane (see PreAgg.update_many_sharded)
+            nks = [w.preagg.n_keys for w in self.windows
+                   if w.preagg is not None]
+            if nks and (int(keys.max()) >= min(nks)
+                        or int(keys.min()) < 0):
+                raise ValueError(
+                    f"request key outside the pre-agg key universe "
+                    f"[0, {min(nks)}) — not servable bit-exactly from "
+                    f"key-sharded bucket planes")
+        vals_np = {k: np.asarray(v, np.float32) for k, v in values.items()}
+        n_shards = store.n_shards
+        owner = store.owner_of_keys(keys)
+        counts = np.bincount(owner, minlength=n_shards)
+        # pad the per-shard sub-batch: pow2 while small, then multiples
+        # of 32 — near-balanced routing (max count ~ B/S) would waste up
+        # to 2x work under pure pow2 padding, and recompile count stays
+        # bounded (one fn per bucket)
+        c_max = int(max(1, counts.max()))
+        b_pad = (timestore.next_pow2(c_max) if c_max <= 32
+                 else ((c_max + 31) // 32) * 32)
+        # req_idx[s, j] = which request shard s computes in slot j;
+        # padding replicates the shard's last real request (empty shards
+        # recompute request 0 — discarded either way)
+        req_idx = np.zeros((n_shards, b_pad), np.int64)
+        slot = np.empty(b, np.int64)
+        for s in range(n_shards):
+            sel = np.flatnonzero(owner == s)
+            slot[sel] = np.arange(sel.size)
+            req_idx[s, :sel.size] = sel
+            if sel.size:
+                req_idx[s, sel.size:] = sel[-1]
+        fn = self._sharded_fn(store, use_pre, b_pad)
+        vals = {c: jnp.asarray(v[req_idx]) for c, v in vals_np.items()}
+        out = fn(store.tables, jnp.asarray(keys[req_idx]),
+                 jnp.asarray(tsa[req_idx]), vals,
+                 preagg_states if use_pre else {})
+        if use_pre:
+            self._observe_queries(tsa.tolist())
+        return {k: np.asarray(v)[owner, slot] for k, v in out.items()}
+
+    def _sharded_fn(self, store, use_pre: bool, b_pad: int):
+        """Jitted (shard_map or stacked-vmap) driver, cached per
+        (store identity, preagg mode, padded sub-batch size)."""
+        local_key = (id(store), "sharded", use_pre, b_pad)
+        fn = self._online_fns.get(local_key)
+        if fn is not None:
+            return fn
+        one = functools.partial(self._online_fn, use_preagg=use_pre)
+        per_shard = jax.vmap(one, in_axes=(None, 0, 0, 0, None))
+        if store.mesh is None:
+            fn = jax.jit(jax.vmap(per_shard, in_axes=(0, 0, 0, 0, 0)))
+        else:
+            from ..distributed.sharding import shard_map_compat
+            from jax.sharding import PartitionSpec as P
+
+            tm = jax.tree_util.tree_map
+
+            def mapped(states, kb, tb, vb, pre):
+                local = tm(lambda x: x[0], states)
+                out = per_shard(local, kb[0], tb[0],
+                                tm(lambda x: x[0], vb),
+                                tm(lambda x: x[0], pre))
+                return tm(lambda x: x[None], out)
+
+            spec = P(store.axis)
+            fn = jax.jit(shard_map_compat(
+                mapped, mesh=store.mesh, in_specs=(spec,) * 5,
+                out_specs=spec))
+        self._online_fns[local_key] = fn
+        return fn
+
     def _observe_queries(self, ts_list: Sequence[int]):
         """§5.1 adaptive hierarchy: host-side per-query level stats."""
         for w in self.windows:
@@ -649,6 +773,47 @@ class CompiledScript:
     def init_preagg_states(self) -> Dict[int, Any]:
         return {wi: w.preagg.init_state()
                 for wi, w in enumerate(self.windows) if w.preagg is not None}
+
+    def init_preagg_states_sharded(self, n_shards: int) -> Dict[int, Any]:
+        """Per-shard bucket states (leading shard dim on every leaf)."""
+        return {wi: w.preagg.init_state_stacked(n_shards)
+                for wi, w in enumerate(self.windows) if w.preagg is not None}
+
+    def preagg_owned_masks(self, owner_fn, n_shards: int
+                           ) -> Dict[int, np.ndarray]:
+        """Per-window one-hot (n_shards, n_keys) ownership masks.
+
+        ``owner_fn(key_indices) -> shard ids`` is the store's routing
+        (``ShardedOnlineStore.owner_of_keys``), evaluated over each
+        window's bounded key universe [0, n_keys).  Masks change only on
+        rebalance — callers cache the result against the store's
+        assignment version (see FeatureEngine._preagg_owned) instead of
+        rebuilding on the hot write path.
+        """
+        masks = {}
+        for wi, w in enumerate(self.windows):
+            if w.preagg is None:
+                continue
+            nk = w.preagg.n_keys
+            owners = np.asarray(owner_fn(np.arange(nk)))
+            owned = np.zeros((n_shards, nk), bool)
+            owned[owners, np.arange(nk)] = True
+            masks[wi] = jnp.asarray(owned)
+        return masks
+
+    def preagg_update_many_sharded(self, pre_states: Dict[int, Any],
+                                   table: str, keys, ts,
+                                   values: Dict[str, Any],
+                                   owned_masks: Dict[int, Any]):
+        """Batched pre-agg maintenance on key-sharded states: each
+        window's ownership mask restricts every shard's bucket scatter
+        to the planes it owns (see PreAgg.update_many_sharded)."""
+        for wi, w in enumerate(self.windows):
+            if w.preagg is None or table not in w.sources:
+                continue
+            pre_states[wi] = w.preagg.update_many_sharded(
+                pre_states[wi], keys, ts, values, owned_masks[wi])
+        return pre_states
 
     def preagg_update(self, pre_states: Dict[int, Any], table: str,
                       key: int, ts: int, values: Dict[str, float]):

@@ -11,7 +11,15 @@ This module provides the *execution policy*: run the independent
 independent subgraphs concurrently across cores — the TPU/host analogue
 of the paper's thread-level window parallelism), or serially with a hard
 dependency barrier between branches (the baseline the paper compares
-against).  benchmarks/bench_multiwindow.py measures the gap.
+against).
+
+Where the policy is consumed today: ``run_parallel`` is simply the fused
+``CompiledScript.offline`` path (the default everywhere — examples,
+``benchmarks/bench_offline.py``, consistency replay), and the online
+drivers inherit the same fusion because ``_online_fn`` traces every
+window branch into one jit program — including per shard under
+``online_sharded_batch``'s shard_map.  ``run_serial`` exists only as the
+measured baseline in ``benchmarks/bench_offline.py``.
 """
 
 from __future__ import annotations

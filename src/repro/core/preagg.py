@@ -58,6 +58,10 @@ class PreAgg:
         self.max_coarse_q = self.window_ms // self.coarse_ms + 2
         self._update_jit = jax.jit(self._update_impl)
         self._update_many_jit = jax.jit(self._update_many_impl)
+        # vmapped over a leading shard dim (see update_many_sharded)
+        self._update_sharded_jit = jax.jit(jax.vmap(
+            self._update_many_impl,
+            in_axes=(0, None, None, None, None, 0)))
         # §5.1 "aggregator hierarchy enhancement": per-level query stats
         self.query_stats = {"fine": 0, "coarse": 0, "raw_edge": 0,
                             "queries": 0}
@@ -177,7 +181,8 @@ class PreAgg:
                                      jnp.asarray(tp), vals,
                                      jnp.asarray(valid))
 
-    def _update_many_impl(self, state, keys, ts, values, valid):
+    def _update_many_impl(self, state, keys, ts, values, valid,
+                          owned=None):
         m = keys.shape[0]
         env = {c: values[c] for c in self.value_cols}
         env[self.spec.order_by] = ts
@@ -196,6 +201,15 @@ class PreAgg:
                                 self.n_fine, self.n_keys)
         coarse_info = _group_info(k_s, ts_s // jnp.int32(self.coarse_ms),
                                   self.n_coarse, self.n_keys)
+        if owned is not None:
+            # key-sharded mode: EVERY shard folds the identical sorted
+            # row array (same associative-scan combine tree => group
+            # totals bit-identical to the unsharded update), and
+            # ownership only filters the scatter — non-owned groups'
+            # writes are dropped
+            for info in (fine_info, coarse_info):
+                kk = jnp.clip(info["keys"], 0, self.n_keys - 1)
+                info["win"] = info["win"] & jnp.take(owned, kk)
 
         out = dict(state)
         out["fine"] = dict(state["fine"])
@@ -212,6 +226,88 @@ class PreAgg:
                                            self.n_keys)
         out["coarse_epoch"] = _scatter_epoch(state["coarse_epoch"],
                                              coarse_info, self.n_keys)
+        return out
+
+    # ------------------------------------------------------- sharded state
+    def init_state_stacked(self, n_shards: int) -> Dict[str, Any]:
+        """Per-shard bucket states: every leaf gains a leading shard dim.
+        Shard s only ever receives rows for the keys it owns, so its
+        (n_keys, slots) plane is the global state restricted to owned keys
+        (non-owned rows stay identity / epoch -1)."""
+        base = self.init_state()
+        return jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (n_shards,) + x.shape), base)
+
+    def update_many_sharded(self, state, keys, ts, values: Dict[str, Any],
+                            owned):
+        """Fold M ingested rows into per-shard buckets in ONE vmapped
+        segment-fold + scatter.
+
+        The row batch is broadcast to every shard (mirroring binlog
+        replication) and every shard runs the SAME segmented fold over
+        the same sorted array — bit-identical group totals to the
+        unsharded ``update_many`` — while ``owned`` ((n_shards, n_keys)
+        bool, one-hot over shards per key) restricts each shard's
+        scatter to the bucket planes it owns.  Shard s's (key, slot)
+        plane therefore stays bitwise equal to the global state
+        restricted to owned keys.
+
+        Keys must live inside the bounded universe [0, n_keys): the
+        unsharded ``update_many`` silently clips out-of-range keys into
+        the shared alias plane ``n_keys - 1``, but under sharding a
+        request routes by the RAW key while the alias plane lives on
+        ``owner(n_keys - 1)`` — no mask assignment can make that
+        bit-exact, so out-of-range keys raise instead of serving
+        silently short aggregates.
+        """
+        keys = np.asarray(keys, np.int32)
+        ts = np.asarray(ts, np.int32)
+        n = keys.shape[0]
+        if n == 0:
+            return state
+        if int(keys.max()) >= self.n_keys or int(keys.min()) < 0:
+            raise ValueError(
+                f"key outside the bounded universe [0, {self.n_keys}): "
+                f"sharded pre-agg routes by raw key, so clip-aliasing "
+                f"would break shard locality — raise the cardinality "
+                f"(CompileContext) or dictionary-encode the key column")
+        m = next_pow2(n)
+        kp = np.zeros((m,), np.int32)
+        tp = np.zeros((m,), np.int32)
+        valid = np.zeros((m,), bool)
+        kp[:n], tp[:n], valid[:n] = keys, ts, True
+        vals = {}
+        for c in self.value_cols:
+            v = np.zeros((m,), np.float32)
+            if c in values:
+                v[:n] = np.asarray(values[c], np.float32)
+            vals[c] = jnp.asarray(v)
+        return self._update_sharded_jit(state, jnp.asarray(kp),
+                                        jnp.asarray(tp), vals,
+                                        jnp.asarray(valid),
+                                        jnp.asarray(owned))
+
+    def migrate_state_sharded(self, state, old_owner, new_owner):
+        """Move per-key bucket planes between shards after a routing
+        change (host-side control path): key k's (slots, *shape) plane
+        relocates from ``old_owner[k]`` to ``new_owner[k]``; everything
+        else resets to identity / epoch -1."""
+        old_owner = np.asarray(old_owner)
+        new_owner = np.asarray(new_owner)
+        idx = np.arange(self.n_keys)
+        out = {"fine": {}, "coarse": {}}
+        for lvl in ("fine", "coarse"):
+            for k, leaf in self.leaves.items():
+                arr = np.asarray(jax.device_get(state[lvl][k]))
+                moved = np.empty_like(arr)
+                moved[:] = np.asarray(leaf.identity())
+                moved[new_owner, idx] = arr[old_owner, idx]
+                out[lvl][k] = jnp.asarray(moved)
+        for lvl in ("fine_epoch", "coarse_epoch"):
+            ep = np.asarray(jax.device_get(state[lvl]))
+            moved = np.full_like(ep, -1)
+            moved[new_owner, idx] = ep[old_owner, idx]
+            out[lvl] = jnp.asarray(moved)
         return out
 
     # ------------------------------------------------------------------ query

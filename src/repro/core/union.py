@@ -14,6 +14,20 @@ Two mechanisms, mapped from threads to mesh shards:
    window fold per key and, on each arriving tuple, evicts expired rows by
    prefix-difference (Subtract-and-Evict [58]) instead of re-folding the
    window: O(1) amortized per tuple vs O(window).
+
+Where these policies are consumed today:
+
+* ``storage.timestore.ShardedOnlineStore`` owns a ``LoadBalancer`` over
+  its hash-route slots: ``rebalance()`` (also exposed as
+  ``serve.engine.FeatureEngine.rebalance``) re-runs the greedy LPT over
+  observed ingest load and migrates resident rows + pre-agg planes to
+  their new shards.  The serving store moves keys *whole* — the split-key
+  fan-out above is only sound for order-INsensitive merges, while the
+  sharded request path's bit-exactness relies on one shard holding a
+  key's full ordered history.
+* ``benchmarks/bench_skew.py`` and ``benchmarks/bench_window_union.py``
+  measure LPT-vs-static imbalance and Subtract-and-Evict-vs-refold work;
+  ``tests/test_union_skew.py`` pins both behaviors.
 """
 
 from __future__ import annotations

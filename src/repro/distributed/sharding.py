@@ -1,4 +1,5 @@
-"""Sharding rules for params, batches and decode caches.
+"""Sharding rules for params, batches, decode caches, and the key-sharded
+online store.
 
 Strategy (DESIGN.md §5): TP over ``model`` (output-feature / vocab /
 expert / KV-sequence dims), ZeRO-3-style weight sharding over ``data``
@@ -13,6 +14,15 @@ among remaining dims, assign ``model`` to the largest divisible dim
 to the largest remaining divisible dim of at least ``min_shard`` rows.
 Overrides handle the cases where the heuristic is wrong (routers,
 norms, per-head tables).
+
+Feature-store sharding (paper §5 / §7.2 tablet partitioning): the online
+store is *key*-partitioned — every row of a given partition key lives on
+exactly one shard, so window folds never cross shards.  ``key_shard_mesh``
+builds the 1-D mesh, ``stacked_store_sharding`` places a shard-stacked
+store pytree (leading dim = shard) with one shard per device, and
+``shard_map_compat`` papers over the jax 0.4/0.5 shard_map location.
+Routing itself (key -> shard) is host-side hash + rebalance, owned by
+``storage.timestore.ShardedOnlineStore``.
 """
 
 from __future__ import annotations
@@ -25,7 +35,41 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = ["auto_pspec", "param_pspecs", "batch_pspec", "cache_pspecs",
-           "named_shardings"]
+           "named_shardings", "key_shard_mesh", "stacked_store_sharding",
+           "shard_map_compat"]
+
+try:                                   # jax >= 0.5 top-level API
+    _shard_map = jax.shard_map
+except AttributeError:                 # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def shard_map_compat(*args, **kwargs):
+    """``jax.shard_map`` / ``jax.experimental.shard_map`` shim."""
+    return _shard_map(*args, **kwargs)
+
+
+def key_shard_mesh(n_shards: Optional[int] = None,
+                   axis: str = "shard") -> Mesh:
+    """1-D device mesh for the key-sharded online store.
+
+    Defaults to one shard per visible device.  Raises if ``n_shards``
+    exceeds the device count — callers wanting more *logical* shards than
+    devices use ``ShardedOnlineStore(mesh=None)`` (stacked/vmap mode).
+    """
+    devs = jax.devices()
+    n = n_shards or len(devs)
+    if n > len(devs):
+        raise ValueError(
+            f"{n} shards > {len(devs)} devices; use mesh=None for "
+            f"logical sharding on fewer devices")
+    return Mesh(np.asarray(devs[:n]), (axis,))
+
+
+def stacked_store_sharding(mesh: Mesh, axis: str = "shard"):
+    """NamedSharding placing dim 0 (the shard dim) of every leaf of a
+    shard-stacked pytree on the mesh axis — one store shard per device."""
+    return NamedSharding(mesh, P(axis))
 
 # tensors whose name matches are always replicated (small / per-layer
 # scalars / norm scales / routing tables)

@@ -21,10 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-try:                                   # jax >= 0.5 top-level API
-    _shard_map = jax.shard_map
-except AttributeError:                 # jax 0.4.x
-    from jax.experimental.shard_map import shard_map as _shard_map
+from ..distributed.sharding import shard_map_compat as _shard_map
 
 _NEG = -1e30
 

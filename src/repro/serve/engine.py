@@ -6,14 +6,27 @@ deployed feature script + live store + pre-aggregation states behind a
 and §8.2 memory guarding.
 
 Batched serving: ``submit_request()`` enqueues a request into a
-``RequestBatcher`` and ``flush()`` drains the queue through
-``CompiledScript.online_batch`` — B requests share one jitted call, one
-host->device transfer, and one dispatch, so per-request cost falls
-roughly as 1/B until the device saturates.  ``request_batch()`` computes
-a caller-assembled batch directly.  The trade-off knobs (batch size vs
-tail latency) are documented on ``RequestBatcher``; bulk ingest
-(``ingest_many``) amortizes the same way on the write path via
-``OnlineStore.put_many`` + ``PreAgg.update_many``.
+``RequestBatcher`` and ``flush()`` drains the queue through the batched
+driver — B requests share one jitted call, one host->device transfer,
+and one dispatch, so per-request cost falls roughly as 1/B until the
+device saturates.  ``request_batch()`` computes a caller-assembled batch
+directly.  The trade-off knobs (batch size vs tail latency) are
+documented on ``RequestBatcher``; bulk ingest (``ingest_many``)
+amortizes the same way on the write path via ``put_many`` +
+``PreAgg.update_many``.
+
+Sharded serving (paper §5 tablet partitioning): constructing the engine
+with ``mesh=`` (a 1-D ``jax.sharding.Mesh``, see
+``distributed.sharding.key_shard_mesh``) or ``n_shards=`` swaps the
+store for a ``ShardedOnlineStore`` that hash-partitions keys across
+shards, keeps per-shard pre-agg bucket planes, and transparently routes
+``request`` / ``request_batch`` / ``submit_request`` / ``ingest_many``
+through ``CompiledScript.online_sharded_batch`` — a ``shard_map`` fan-out
+whose per-shard window folds are bit-exact vs the unsharded path
+(tests/test_sharded_online.py).  ``rebalance()`` migrates hot keys
+between shards (``core.union.LoadBalancer`` greedy LPT) together with
+their pre-agg state.  With ``n_shards`` but no mesh, the same stacked
+computation runs as a vmap over logical shards on one device.
 
 ``ServingEngine`` wraps a model's prefill/decode for batched requests —
 the "online ML" consumer of the features.
@@ -32,7 +45,7 @@ import numpy as np
 from ..core.compiler import CompiledScript, compile_script
 from ..core.types import Table
 from ..storage.memest import MemoryGuard
-from ..storage.timestore import OnlineStore
+from ..storage.timestore import OnlineStore, ShardedOnlineStore
 from .batcher import RequestBatcher
 
 __all__ = ["FeatureEngine", "ServingEngine"]
@@ -46,12 +59,23 @@ class FeatureEngine:
                  ttl_ms: int = 0, time_unit: str = "ms",
                  max_memory_bytes: int = 1 << 34,
                  batch_size: int = 64, max_wait_ms: float = 5.0,
-                 latency_window: int = 16384):
+                 latency_window: int = 16384,
+                 mesh=None, n_shards: Optional[int] = None,
+                 shard_axis: str = "shard", route_slots: int = 1024):
         self.cs: CompiledScript = compile_script(
             _parse(script_sql, time_unit), tables=tables)
         self.use_preagg = use_preagg
         self.ttl_ms = ttl_ms
-        self.store = OnlineStore(capacity=capacity)
+        self.sharded = mesh is not None or (n_shards or 0) > 1
+        if self.sharded:
+            ok, why = self.cs.sharded_eligible()
+            if not ok:
+                raise ValueError(f"script not shardable by key: {why}")
+            self.store = ShardedOnlineStore(
+                capacity=capacity, n_shards=n_shards, mesh=mesh,
+                axis=shard_axis, n_route_slots=route_slots)
+        else:
+            self.store = OnlineStore(capacity=capacity)
         self.guard = MemoryGuard(max_memory_bytes)
         # resolve the partition column ONCE: every window must agree (a
         # per-request next(iter(set)) is both wasted work and
@@ -72,8 +96,13 @@ class FeatureEngine:
                 specs[c] = np.float32 if dd.kind == "f" else np.int32
             self.store.create_table(tname, specs)
         self._need = need
-        self.pre_states = (self.cs.init_preagg_states()
-                           if use_preagg else None)
+        if not use_preagg:
+            self.pre_states = None
+        elif self.sharded:
+            self.pre_states = self._place_pre(
+                self.cs.init_preagg_states_sharded(self.store.n_shards))
+        else:
+            self.pre_states = self.cs.init_preagg_states()
         self.dicts = {name: t.dicts for name, t in tables.items()}
         self.batcher = RequestBatcher(batch_size, max_wait_ms=max_wait_ms)
         self.n_requests = 0
@@ -85,6 +114,8 @@ class FeatureEngine:
     # ------------------------------------------------------------- ingest
     def ingest(self, table: str, row: Dict[str, Any]):
         """Insert an event (Put path + async pre-agg via binlog)."""
+        if self.sharded:   # same routing path as bulk ingest
+            return self.ingest_many(table, [row])
         key = self._encode(table, self._key_col(), row[self._key_col()])
         ts = int(row[self.cs.script.order_column])
         values = {c: float(self._encode(table, c, row[c]))
@@ -119,8 +150,13 @@ class FeatureEngine:
             self.guard.release(nbytes)   # nothing was stored
             raise
         if self.use_preagg:
-            self.pre_states = self.cs.preagg_update_many(
-                self.pre_states, table, keys, ts, cols)
+            if self.sharded:
+                self.pre_states = self.cs.preagg_update_many_sharded(
+                    self.pre_states, table, keys, ts, cols,
+                    self._preagg_owned())
+            else:
+                self.pre_states = self.cs.preagg_update_many(
+                    self.pre_states, table, keys, ts, cols)
         if self.ttl_ms:
             self.store.evict(table, int(ts.max()) - self.ttl_ms)
 
@@ -128,6 +164,8 @@ class FeatureEngine:
     def request(self, row: Dict[str, Any]) -> Dict[str, np.ndarray]:
         """Online request mode: features for one (virtually inserted)
         tuple of the base table."""
+        if self.sharded:   # single-request batch through the shard fan-out
+            return self.request_batch([row])[0]
         t0 = time.perf_counter()
         key, ts, values = self._encode_request(row)
         feats = self.cs.online(self.store, key, ts, values,
@@ -148,7 +186,9 @@ class FeatureEngine:
         ts = [e[1] for e in enc]
         values = {c: [e[2][c] for e in enc]
                   for c in self._need[self.cs.script.base_table]}
-        feats = self.cs.online_batch(
+        driver = (self.cs.online_sharded_batch if self.sharded
+                  else self.cs.online_batch)
+        feats = driver(
             self.store, keys, ts, values,
             preagg_states=self.pre_states if self.use_preagg else None)
         dt_ms = (time.perf_counter() - t0) * 1e3
@@ -177,6 +217,57 @@ class FeatureEngine:
             for rid, f in zip(ids, feats):
                 out[rid] = f
         return out
+
+    # ---------------------------------------------------------- rebalance
+    def rebalance(self) -> bool:
+        """Hot-key rebalancing for the sharded engine: recompute the
+        key->shard map from observed ingest load (greedy LPT over the
+        ``LoadBalancer`` cost EMA) and migrate both resident store rows
+        and per-shard pre-agg bucket planes to the new owners.  Returns
+        True if any key moved.  Served results are unchanged — only the
+        placement moves (tests/test_sharded_online.py asserts parity
+        across a rebalance)."""
+        if not self.sharded:
+            return False
+        store: ShardedOnlineStore = self.store
+        n_keys = {wi: w.preagg.n_keys
+                  for wi, w in enumerate(self.cs.windows)
+                  if w.preagg is not None and self.use_preagg}
+        old_owner = {wi: store.owner_of_keys(np.arange(nk))
+                     for wi, nk in n_keys.items()}
+        if not store.rebalance():
+            return False
+        if self.use_preagg and self.pre_states:
+            for wi, w in enumerate(self.cs.windows):
+                if w.preagg is None:
+                    continue
+                new_owner = store.owner_of_keys(np.arange(n_keys[wi]))
+                self.pre_states[wi] = w.preagg.migrate_state_sharded(
+                    self.pre_states[wi], old_owner[wi], new_owner)
+            self.pre_states = self._place_pre(self.pre_states)
+        return True
+
+    def _preagg_owned(self):
+        """Per-window ownership masks, cached against the store's
+        assignment version (masks only change on rebalance — rebuilding
+        the one-hot per ingest would tax the hot write path)."""
+        ver = self.store.n_rebalances
+        cached = getattr(self, "_owned_cache", None)
+        if cached is None or cached[0] != ver:
+            masks = self.cs.preagg_owned_masks(self.store.owner_of_keys,
+                                               self.store.n_shards)
+            cached = (ver, masks)
+            self._owned_cache = cached
+        return cached[1]
+
+    def _place_pre(self, pre_states):
+        """Co-locate stacked pre-agg planes with their store shards."""
+        if self.store.mesh is None:
+            return pre_states
+        from ..distributed.sharding import stacked_store_sharding
+
+        sh = stacked_store_sharding(self.store.mesh, self.store.axis)
+        return jax.device_put(pre_states, sh)
 
     # ------------------------------------------------------------ helpers
     def _key_col(self) -> str:
@@ -212,12 +303,27 @@ class FeatureEngine:
         self.n_requests = 0
 
     def bulk_load(self, table: str, rows_table: Table):
-        """LOAD DATA: ingest a whole historical table at once."""
+        """LOAD DATA: ingest a whole historical table at once.
+
+        Pre-agg bucket states fold the loaded rows too (one
+        ``update_many`` / sharded scatter) — otherwise a ``use_preagg``
+        engine would serve long-window queries from empty bucket planes
+        over its bulk-loaded history."""
         cols = {c: rows_table.columns[c].astype(np.float32)
                 for c in self._need[table]}
-        self.store.bulk_load(
-            table, rows_table.columns[self._key_col()],
-            rows_table.columns[self.cs.script.order_column], cols)
+        keys_arr = rows_table.columns[self._key_col()]
+        ts_arr = rows_table.columns[self.cs.script.order_column]
+        self.store.bulk_load(table, keys_arr, ts_arr, cols)
+        if self.use_preagg:
+            keys_np = np.asarray(keys_arr, np.int32)
+            ts_np = np.asarray(ts_arr, np.int32)
+            if self.sharded:
+                self.pre_states = self.cs.preagg_update_many_sharded(
+                    self.pre_states, table, keys_np, ts_np, cols,
+                    self._preagg_owned())
+            else:
+                self.pre_states = self.cs.preagg_update_many(
+                    self.pre_states, table, keys_np, ts_np, cols)
 
 
 def _parse(sql, time_unit):

@@ -1,6 +1,7 @@
 """Compact time-series data management (paper §7, §8)."""
 
-from .timestore import OnlineStore, StoreState  # noqa: F401
+from .timestore import (OnlineStore, ShardedOnlineStore,  # noqa: F401
+                        StoreState)
 from .encoding import (CompactRowCodec, SparkRowCodec,  # noqa: F401
                        row_size_compact, row_size_spark)
 from .memest import estimate_memory, MemoryGuard  # noqa: F401

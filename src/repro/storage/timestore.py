@@ -36,8 +36,9 @@ import numpy as np
 
 INT_MAX = np.int32(2**31 - 1)
 
-__all__ = ["StoreState", "OnlineStore", "insert", "insert_many",
-           "range_bounds", "evict_before", "gather_window", "next_pow2"]
+__all__ = ["StoreState", "OnlineStore", "ShardedOnlineStore", "insert",
+           "insert_many", "insert_many_stacked", "range_bounds",
+           "evict_before", "gather_window", "next_pow2"]
 
 
 def next_pow2(n: int) -> int:
@@ -158,6 +159,25 @@ def insert_many(state: StoreState, keys, ts, values: Dict[str, jnp.ndarray],
         "cols": new_cols,
         "count": state["count"] + jnp.asarray(n_new, jnp.int32),
     }
+
+
+@jax.jit
+def insert_many_stacked(states: StoreState, keys, ts,
+                        values: Dict[str, jnp.ndarray], n_new) -> StoreState:
+    """``insert_many`` vmapped over a leading shard dim.
+
+    ``states`` leaves carry shape (n_shards, capacity, ...); ``keys``/``ts``
+    are (n_shards, M) blocks whose non-owned slots hold INT_MAX padding and
+    ``n_new`` is the per-shard real-row count.  Every op is elementwise
+    along the shard dim, so under a sharded-in/sharded-out jit the merge
+    stays local to each shard's device (no cross-shard traffic).
+    """
+    return jax.vmap(insert_many)(states, keys, ts, values, n_new)
+
+
+@jax.jit
+def evict_before_stacked(states: StoreState, horizon_ts) -> StoreState:
+    return jax.vmap(evict_before, in_axes=(0, None))(states, horizon_ts)
 
 
 def range_bounds(state: StoreState, key, t0, t1) -> Tuple[jnp.ndarray,
@@ -332,3 +352,272 @@ class OnlineStore:
 
     def n_rows(self, table: str) -> int:
         return int(self.tables[table]["count"])
+
+
+class ShardedOnlineStore:
+    """Key-sharded online store: the paper's tablet partitioning (§5, §7.2)
+    mapped onto a ``jax.sharding.Mesh`` axis.
+
+    Layout: every per-table ``StoreState`` leaf gains a leading shard dim —
+    ``keys: (n_shards, capacity)`` etc. — and *all rows of a given
+    partition key live on exactly one shard*, so window folds over a key
+    never cross shards (the locality invariant the paper's key-partitioned
+    workers rely on; arXiv:2305.20077 makes the same argument at
+    datacenter scale).  With ``mesh`` given, the stacked pytree is placed
+    one-shard-per-device and the query path runs under ``shard_map``
+    (``CompiledScript.online_sharded_batch``); with ``mesh=None`` the same
+    stacked layout runs as a vmap over logical shards on one device —
+    bit-identical results either way.
+
+    Routing: key -> route slot (splitmix64 hash mod ``n_route_slots``) ->
+    shard (host-side assignment table).  The table starts as the static
+    hash baseline and is recomputed from observed per-slot load by
+    ``core.union.LoadBalancer`` greedy LPT on ``rebalance()``, which also
+    migrates resident rows to their new owners.  Keys are always moved
+    *whole* (LoadBalancer's hot-key splitting is not used here: splitting
+    one key's rows across shards would break the ordered-fold locality
+    that makes sharded results bit-exact).
+
+    ``capacity`` is PER SHARD: total resident rows = n_shards * capacity,
+    and a skewed key distribution needs per-shard headroom.
+    """
+
+    def __init__(self, capacity: int, n_shards: Optional[int] = None,
+                 mesh=None, axis: str = "shard",
+                 n_route_slots: int = 1024):
+        from ..core.union import LoadBalancer
+
+        if mesh is not None:
+            if axis not in mesh.shape:
+                raise ValueError(f"mesh has no axis {axis!r}")
+            mesh_n = mesh.shape[axis]
+            if n_shards is not None and n_shards != mesh_n:
+                raise ValueError(f"n_shards={n_shards} != mesh axis "
+                                 f"{axis!r} size {mesh_n}")
+            n_shards = mesh_n
+        if not n_shards or n_shards < 1:
+            raise ValueError("need n_shards >= 1 or a mesh")
+        self.capacity = capacity
+        self.n_shards = int(n_shards)
+        self.mesh = mesh
+        self.axis = axis
+        self.n_route_slots = n_route_slots
+        # split_threshold=inf: hot-slot splitting must stay OFF so LPT's
+        # load accounting matches the whole-key placement rebalance()
+        # actually performs (see class docstring)
+        self.balancer = LoadBalancer(n_route_slots, self.n_shards,
+                                     split_threshold=float("inf"))
+        self.assignment = self.balancer.assignment.copy()
+        self._slot_counts = np.zeros(n_route_slots, np.float64)
+        self.tables: Dict[str, StoreState] = {}
+        self.col_specs: Dict[str, Dict[str, jnp.dtype]] = {}
+        self.binlog: List[Tuple[str, int, int, Dict[str, float]]] = []
+        self._binlog_offset = 0
+        self.n_rebalances = 0
+
+    # ----------------------------------------------------------- routing
+    def route_slots(self, keys) -> np.ndarray:
+        """Key -> route slot (hash-bounded key universe for balancing)."""
+        from ..core.hll import splitmix64
+
+        k = np.atleast_1d(np.asarray(keys)).astype(np.uint64)
+        return (splitmix64(k) % np.uint64(self.n_route_slots)).astype(
+            np.int64)
+
+    def owner_of_keys(self, keys) -> np.ndarray:
+        """Key -> owning shard under the current assignment."""
+        return self.assignment[self.route_slots(keys)].astype(np.int64)
+
+    # ------------------------------------------------------------ tables
+    def _place(self, state: StoreState) -> StoreState:
+        if self.mesh is None:
+            return state
+        from ..distributed.sharding import stacked_store_sharding
+
+        return jax.device_put(state,
+                              stacked_store_sharding(self.mesh, self.axis))
+
+    def create_table(self, name: str, col_specs: Dict[str, jnp.dtype]):
+        base = make_state(self.capacity, col_specs)
+        stacked = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (self.n_shards,) + x.shape),
+            base)
+        self.tables[name] = self._place(stacked)
+        self.col_specs[name] = dict(col_specs)
+
+    def n_rows_per_shard(self, table: str) -> np.ndarray:
+        return np.asarray(self.tables[table]["count"])
+
+    def n_rows(self, table: str) -> int:
+        return int(self.n_rows_per_shard(table).sum())
+
+    # ------------------------------------------------------------ ingest
+    def put(self, table: str, key: int, ts: int,
+            values: Dict[str, float]) -> int:
+        """Single-row insert: a 1-row ``put_many`` (same routing path)."""
+        cols = {c: np.asarray([v], np.float32) for c, v in values.items()}
+        return self.put_many(table, np.asarray([key], np.int32),
+                             np.asarray([ts], np.int32), cols)
+
+    def put_many(self, table: str, keys, ts,
+                 cols: Dict[str, "np.ndarray"]) -> int:
+        """Bulk insert routed by key: rows are grouped per owning shard
+        (arrival order preserved within a shard) and merged with ONE
+        vmapped sort-merge across all shards (``insert_many_stacked``).
+        Non-owned slots of each shard's block carry INT_MAX padding, so
+        they sort into the dead tail exactly like capacity padding.
+        """
+        keys = np.asarray(keys, np.int32)
+        ts = np.asarray(ts, np.int32)
+        n = keys.shape[0]
+        if n == 0:
+            return self._binlog_offset
+        slots = self.route_slots(keys)
+        owner = self.assignment[slots]
+        counts = np.bincount(owner, minlength=self.n_shards)
+        live = self.n_rows_per_shard(table)
+        over = np.flatnonzero(live + counts > self.capacity)
+        if over.size:
+            s = int(over[0])
+            raise ValueError(
+                f"bulk put overflows shard {s}: {int(live[s])} live + "
+                f"{int(counts[s])} new > per-shard capacity "
+                f"{self.capacity}")
+        m = next_pow2(int(max(1, counts.max())))
+        k_blk = np.full((self.n_shards, m), INT_MAX, np.int32)
+        t_blk = np.full((self.n_shards, m), INT_MAX, np.int32)
+        pos = np.empty(n, np.int64)
+        for s in range(self.n_shards):
+            sel = np.flatnonzero(owner == s)
+            pos[sel] = np.arange(sel.size)
+        k_blk[owner, pos] = keys
+        t_blk[owner, pos] = ts
+        vals = {}
+        for name, dtype in self.col_specs[table].items():
+            v = np.zeros((self.n_shards, m), dtype)
+            if name in cols:
+                v[owner, pos] = np.asarray(cols[name], dtype)
+            vals[name] = jnp.asarray(v)
+        self.tables[table] = insert_many_stacked(
+            self.tables[table], jnp.asarray(k_blk), jnp.asarray(t_blk),
+            vals, jnp.asarray(counts, jnp.int32))
+        self._slot_counts += np.bincount(slots,
+                                         minlength=self.n_route_slots)
+        off = self._binlog_offset
+        kl, tl = keys.tolist(), ts.tolist()
+        self.binlog.extend(
+            (table, kl[i], tl[i],
+             {c: float(cols[c][i]) for c in cols}) for i in range(n))
+        self._binlog_offset += n
+        return off
+
+    def bulk_load(self, table: str, keys, ts, cols: Dict[str, "np.ndarray"]
+                  ) -> int:
+        """LOAD DATA: route once, sort each shard once, overwrite."""
+        keys = np.asarray(keys, np.int32)
+        ts = np.asarray(ts, np.int32)
+        n = keys.shape[0]
+        arrival = np.arange(n)
+        slots = self.route_slots(keys)
+        owner = self.assignment[slots]
+        state = self._build_state(table, keys, ts,
+                                  {c: np.asarray(cols[c]) for c in
+                                   self.col_specs[table] if c in cols},
+                                  owner, arrival)
+        self.tables[table] = state
+        # after _build_state: a per-shard overflow must not leave
+        # phantom load in the balancer (put_many orders the same way)
+        self._slot_counts += np.bincount(slots,
+                                         minlength=self.n_route_slots)
+        order = np.lexsort((arrival, ts, keys))
+        ko, tso = keys[order].tolist(), ts[order].tolist()
+        self.binlog.extend((table, ko[i], tso[i], {}) for i in range(n))
+        self._binlog_offset += n
+        return n
+
+    def _build_state(self, table: str, keys, ts, cols, owner, arrival
+                     ) -> StoreState:
+        """Stacked state from host rows: per-shard (key, ts, arrival)
+        lexsort — the same order per-shard sequential inserts produce."""
+        counts = np.bincount(owner, minlength=self.n_shards)
+        if counts.max(initial=0) > self.capacity:
+            s = int(np.argmax(counts))
+            raise ValueError(f"shard {s} gets {int(counts[s])} rows > "
+                             f"per-shard capacity {self.capacity}")
+        specs = self.col_specs[table]
+        k_st = np.full((self.n_shards, self.capacity), INT_MAX, np.int32)
+        t_st = np.full((self.n_shards, self.capacity), INT_MAX, np.int32)
+        c_st = {c: np.zeros((self.n_shards, self.capacity), dt)
+                for c, dt in specs.items()}
+        for s in range(self.n_shards):
+            sel = np.flatnonzero(owner == s)
+            if not sel.size:
+                continue
+            order = sel[np.lexsort((arrival[sel], ts[sel], keys[sel]))]
+            k_st[s, :order.size] = keys[order]
+            t_st[s, :order.size] = ts[order]
+            for c in c_st:
+                if c in cols:
+                    c_st[c][s, :order.size] = np.asarray(cols[c])[order]
+        return self._place({
+            "keys": jnp.asarray(k_st),
+            "ts": jnp.asarray(t_st),
+            "cols": {c: jnp.asarray(v) for c, v in c_st.items()},
+            "count": jnp.asarray(counts, jnp.int32),
+        })
+
+    def read_binlog(self, from_offset: int):
+        return self.binlog[from_offset:], self._binlog_offset
+
+    def evict(self, table: str, horizon_ts: int):
+        self.tables[table] = evict_before_stacked(self.tables[table],
+                                                  jnp.int32(horizon_ts))
+
+    # --------------------------------------------------------- rebalance
+    def rebalance(self) -> bool:
+        """Hot-key rebalancing (§5.2 mapped to shards): fold accumulated
+        per-slot load into the LoadBalancer EMA, recompute the slot->shard
+        map with greedy LPT, and migrate resident rows whose owner
+        changed.  Whole-key moves only (see class docstring).  Returns
+        True if the assignment changed (callers owning per-shard derived
+        state — pre-agg buckets — must migrate it too; see
+        ``serve.engine.FeatureEngine.rebalance``).
+        """
+        self.balancer.observe(self._slot_counts)
+        # counts are folded into the EMA exactly once: zero them NOW so a
+        # retry after a failed migration doesn't double-count the load
+        self._slot_counts[:] = 0.0
+        new_assign = self.balancer.rebalance().copy()
+        if np.array_equal(new_assign, self.assignment):
+            return False
+        # two-phase: build EVERY table's migrated state before committing
+        # anything — a per-shard capacity overflow mid-migration must not
+        # leave some tables routed by the new assignment while
+        # self.assignment still routes by the old one
+        new_tables: Dict[str, StoreState] = {}
+        for table in self.tables:
+            st = jax.device_get(self.tables[table])
+            counts = np.asarray(st["count"])
+            rows_k, rows_t, rows_c, rows_pos = [], [], {c: [] for c in
+                                                        st["cols"]}, []
+            for s in range(self.n_shards):
+                c = int(counts[s])
+                rows_k.append(np.asarray(st["keys"][s, :c]))
+                rows_t.append(np.asarray(st["ts"][s, :c]))
+                for col in rows_c:
+                    rows_c[col].append(np.asarray(st["cols"][col][s, :c]))
+                # global source position: preserves per-key arrival order
+                # (all rows of one key live on one source shard)
+                rows_pos.append(s * self.capacity + np.arange(c))
+            keys = np.concatenate(rows_k)
+            ts = np.concatenate(rows_t)
+            cols = {c: np.concatenate(v) for c, v in rows_c.items()}
+            pos = np.concatenate(rows_pos)
+            owner = new_assign[self.route_slots(keys)] if keys.size else \
+                np.zeros(0, np.int64)
+            new_tables[table] = self._build_state(table, keys, ts, cols,
+                                                  owner, pos)
+        self.tables.update(new_tables)
+        self.assignment = new_assign
+        self.n_rebalances += 1
+        return True

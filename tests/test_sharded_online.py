@@ -1,0 +1,317 @@
+"""Key-sharded online serving: ShardedOnlineStore routing/migration and
+``CompiledScript.online_sharded_batch`` parity vs the unsharded path.
+
+Parity contract (ISSUE 2): with the same rows ingested through the same
+batched path, the sharded driver is BIT-EXACT vs ``online_batch`` —
+pre-agg on and off, skewed keys, empty shards, across a rebalance, and
+on the real ``shard_map`` mesh path.  (The only known non-bitwise pair
+in the repo is scalar ``PreAgg.update`` vs batched ``update_many`` —
+a seed-era reduction-order difference tested with allclose in
+test_online_batch.py; both engines here ingest through the batched
+path, so everything below asserts exact equality.)
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import compile_script, parse
+from repro.data.synthetic import make_action_tables
+from repro.distributed.sharding import key_shard_mesh
+from repro.serve.engine import FeatureEngine
+from repro.storage.timestore import ShardedOnlineStore
+
+PREAGG_SQL = """
+SELECT sum(price) OVER w AS s, count(price) OVER w AS c,
+       min(price) OVER w AS mn, max(price) OVER w AS mx,
+       ew_avg(price, 0.5) OVER w AS ew
+FROM actions
+WINDOW w AS (PARTITION BY userid ORDER BY ts
+             ROWS_RANGE BETWEEN 3000s PRECEDING AND CURRENT ROW)
+OPTIONS (long_windows = "w:100s")
+"""
+
+
+def _pair(sql, tables, n_ingest, n_shards=4, use_preagg=False,
+          capacity=1024, mesh=None, tables_to_load=("actions",)):
+    """(unsharded, sharded) engines fed identical bulk ingests."""
+    ref = FeatureEngine(sql, tables, capacity=capacity,
+                        use_preagg=use_preagg)
+    sh = FeatureEngine(sql, tables, capacity=capacity,
+                       use_preagg=use_preagg, n_shards=n_shards,
+                       mesh=mesh)
+    for tname in tables_to_load:
+        t = tables[tname]
+        rows = [t.row(i) for i in range(min(n_ingest, len(t)))]
+        ref.ingest_many(tname, rows)
+        sh.ingest_many(tname, rows)
+    return ref, sh
+
+
+def _assert_batch_parity(ref, sh, rows):
+    r1 = ref.request_batch([dict(r) for r in rows])
+    r2 = sh.request_batch([dict(r) for r in rows])
+    for i in range(len(rows)):
+        for k in r1[i]:
+            np.testing.assert_array_equal(
+                np.asarray(r1[i][k]), np.asarray(r2[i][k]),
+                err_msg=f"req {i} feature {k}")
+    return r1
+
+
+# ------------------------------------------------------------- parity
+
+
+def test_sharded_parity_raw(action_tables, micro_sql):
+    ref, sh = _pair(micro_sql, action_tables, 60,
+                    tables_to_load=("orders", "actions"))
+    a = action_tables["actions"]
+    _assert_batch_parity(ref, sh, [a.row(100 + i) for i in range(9)])
+    # every row landed on some shard, none were lost
+    assert sh.store.n_rows("actions") == ref.store.n_rows("actions")
+    assert sh.store.n_rows("orders") == ref.store.n_rows("orders")
+
+
+def test_sharded_parity_preagg():
+    tables = make_action_tables(n_actions=200, n_orders=0, n_users=4,
+                                horizon_ms=12_000_000, seed=4,
+                                with_profile=False)
+    ref, sh = _pair(PREAGG_SQL, tables, 120, use_preagg=True,
+                    capacity=512)
+    a = tables["actions"]
+    _assert_batch_parity(ref, sh, [a.row(150 + i) for i in range(5)])
+    # adaptive-hierarchy stats count real requests on the sharded path
+    assert sh.cs.windows[0].preagg.query_stats["queries"] >= 5
+
+
+def test_sharded_parity_skewed_keys(skewed_tables):
+    """Zipf-skewed key distribution: one hot key dominates, several
+    shards end up empty — results still bit-exact."""
+    sql = """
+    SELECT sum(price) OVER w AS s, count(price) OVER w AS c
+    FROM actions
+    WINDOW w AS (PARTITION BY userid ORDER BY ts
+                 ROWS_RANGE BETWEEN 60s PRECEDING AND CURRENT ROW)
+    """
+    ref, sh = _pair(sql, skewed_tables, 200, n_shards=8)
+    per_shard = sh.store.n_rows_per_shard("actions")
+    assert per_shard.sum() == 200
+    a = skewed_tables["actions"]
+    _assert_batch_parity(ref, sh, [a.row(250 + i) for i in range(16)])
+
+
+def test_sharded_empty_shard_edge():
+    """All keys collapse onto few shards; requests also hit keys whose
+    shard holds zero rows (cold key) — no crash, parity holds."""
+    tables = make_action_tables(n_actions=80, n_orders=0, n_users=2,
+                                horizon_ms=60_000, seed=7,
+                                with_profile=False)
+    sql = """
+    SELECT sum(price) OVER w AS s, count(price) OVER w AS c
+    FROM actions
+    WINDOW w AS (PARTITION BY userid ORDER BY ts
+                 ROWS_RANGE BETWEEN 10s PRECEDING AND CURRENT ROW)
+    """
+    ref, sh = _pair(sql, tables, 60, n_shards=8, capacity=256)
+    assert (sh.store.n_rows_per_shard("actions") == 0).any()
+    a = tables["actions"]
+    _assert_batch_parity(ref, sh, [a.row(70 + i) for i in range(4)])
+
+
+def test_sharded_shard_map_mesh_path(action_tables, micro_sql):
+    """The real shard_map driver (1-device mesh on CPU CI) is bit-exact
+    vs both the unsharded path and the stacked-vmap fallback."""
+    mesh = key_shard_mesh()
+    ref, sh = _pair(micro_sql, action_tables, 50, mesh=mesh,
+                    n_shards=None, tables_to_load=("orders", "actions"))
+    assert sh.store.mesh is mesh
+    a = action_tables["actions"]
+    _assert_batch_parity(ref, sh, [a.row(90 + i) for i in range(5)])
+
+
+def test_sharded_rebalance_migrates_and_preserves(skewed_tables):
+    ref, sh = _pair(PREAGG_SQL.replace("3000s", "30s"), skewed_tables,
+                    200, n_shards=4, use_preagg=True, capacity=512)
+    a = skewed_tables["actions"]
+    rows = [a.row(250 + i) for i in range(8)]
+    before = _assert_batch_parity(ref, sh, rows)
+    changed = sh.rebalance()   # skew guarantees LPT != static hash
+    assert changed and sh.store.n_rebalances == 1
+    assert sh.store.n_rows("actions") == 200   # no row lost in migration
+    after = _assert_batch_parity(ref, sh, rows)
+    for b, c in zip(before, after):
+        for k in b:
+            np.testing.assert_array_equal(np.asarray(b[k]),
+                                          np.asarray(c[k]))
+
+
+# -------------------------------------------------- engine transparency
+
+
+def test_engine_sharded_submit_flush_and_scalar_request(action_tables,
+                                                        micro_sql):
+    ref, sh = _pair(micro_sql, action_tables, 40, n_shards=4,
+                    tables_to_load=("orders",))
+    sh.batcher.batch_size = 4
+    a = action_tables["actions"]
+    reqs = [a.row(10 + i) for i in range(6)]
+    expect = ref.request_batch([dict(r) for r in reqs])
+    # scalar request routes through the shard fan-out transparently
+    single = sh.request(dict(reqs[0]))
+    for k in single:
+        np.testing.assert_array_equal(np.asarray(single[k]),
+                                      np.asarray(expect[0][k]), err_msg=k)
+    rids = [sh.submit_request(dict(r)) for r in reqs]
+    out = sh.flush()
+    assert sorted(out) == sorted(rids)
+    for rid, exp in zip(rids, expect):
+        for k in exp:
+            np.testing.assert_array_equal(np.asarray(out[rid][k]),
+                                          np.asarray(exp[k]), err_msg=k)
+    assert sh.n_requests == 1 + 6
+
+
+def test_sharded_rejects_misrouted_last_join(action_tables):
+    """A LAST JOIN keyed off a non-partition column cannot be served
+    from a key-sharded store (the joined row may live elsewhere)."""
+    sql = """
+    SELECT price, profile.age AS age, sum(price) OVER w AS s
+    FROM actions
+    LAST JOIN profile ORDER BY ts ON actions.category = profile.userid
+    WINDOW w AS (PARTITION BY userid ORDER BY ts
+                 ROWS_RANGE BETWEEN 5s PRECEDING AND CURRENT ROW)
+    """
+    cs = compile_script(parse(sql), tables=action_tables)
+    ok, why = cs.sharded_eligible()
+    assert not ok and "category" in why
+    with pytest.raises(ValueError):
+        FeatureEngine(sql, action_tables, capacity=64, n_shards=2)
+
+
+def test_sharded_last_join_on_partition_key(action_tables):
+    sql = """
+    SELECT price, profile.age AS age, sum(price) OVER w AS s
+    FROM actions
+    LAST JOIN profile ORDER BY ts ON actions.userid = profile.userid
+    WINDOW w AS (PARTITION BY userid ORDER BY ts
+                 ROWS_RANGE BETWEEN 5s PRECEDING AND CURRENT ROW)
+    """
+    ref, sh = _pair(sql, action_tables, 30, n_shards=4,
+                    tables_to_load=("profile", "actions"))
+    a = action_tables["actions"]
+    _assert_batch_parity(ref, sh, [a.row(40 + i) for i in range(4)])
+
+
+# ----------------------------------------------------------- store unit
+
+
+def test_sharded_store_routing_is_total_and_stable():
+    st = ShardedOnlineStore(capacity=64, n_shards=4)
+    keys = np.arange(1000)
+    owner = st.owner_of_keys(keys)
+    assert owner.min() >= 0 and owner.max() < 4
+    np.testing.assert_array_equal(owner, st.owner_of_keys(keys))
+
+
+def test_sharded_store_put_and_bulk_load_agree():
+    rng = np.random.default_rng(0)
+    s1 = ShardedOnlineStore(capacity=64, n_shards=4)
+    s2 = ShardedOnlineStore(capacity=64, n_shards=4)
+    for s in (s1, s2):
+        s.create_table("t", {"v": np.float32})
+    keys = rng.integers(0, 16, size=40).astype(np.int32)
+    ts = np.sort(rng.integers(0, 1000, size=40)).astype(np.int32)
+    vals = rng.normal(size=40).astype(np.float32)
+    s1.put_many("t", keys, ts, {"v": vals})
+    s2.bulk_load("t", keys, ts, {"v": vals})
+    import jax
+
+    t1, t2 = jax.device_get(s1.tables["t"]), jax.device_get(s2.tables["t"])
+    np.testing.assert_array_equal(np.asarray(t1["keys"]),
+                                  np.asarray(t2["keys"]))
+    np.testing.assert_array_equal(np.asarray(t1["ts"]),
+                                  np.asarray(t2["ts"]))
+    np.testing.assert_array_equal(np.asarray(t1["cols"]["v"]),
+                                  np.asarray(t2["cols"]["v"]))
+
+
+def test_sharded_store_per_shard_overflow():
+    st = ShardedOnlineStore(capacity=4, n_shards=2)
+    st.create_table("t", {"v": np.float32})
+    keys = np.zeros(6, np.int32)   # one key -> one shard -> overflow
+    with pytest.raises(ValueError, match="overflows shard"):
+        st.put_many("t", keys, np.arange(6, dtype=np.int32),
+                    {"v": np.zeros(6, np.float32)})
+
+
+def test_bulk_load_folds_preagg_states():
+    """Engine bulk_load must populate pre-agg bucket planes: features
+    over bulk-loaded history equal features over the same rows
+    ingest_many'd — unsharded and sharded alike."""
+    tables = make_action_tables(n_actions=200, n_orders=0, n_users=4,
+                                horizon_ms=12_000_000, seed=4,
+                                with_profile=False)
+    a = tables["actions"]
+    rows = [a.row(i) for i in range(len(a))]
+    probe = [dict(a.row(180 + i)) for i in range(3)]
+    outs = {}
+    for mode in ("ingest", "bulk"):
+        for n_shards in (None, 4):
+            eng = FeatureEngine(PREAGG_SQL, tables, capacity=512,
+                                use_preagg=True, n_shards=n_shards)
+            if mode == "ingest":
+                eng.ingest_many("actions", rows)
+            else:
+                eng.bulk_load("actions", a)
+            outs[(mode, n_shards)] = eng.request_batch(probe)
+    ref = outs[("ingest", None)]
+    for key, got in outs.items():
+        for i in range(len(probe)):
+            for k in ref[i]:
+                np.testing.assert_array_equal(
+                    np.asarray(ref[i][k]), np.asarray(got[i][k]),
+                    err_msg=f"{key} req {i} {k}")
+
+
+def test_sharded_preagg_rejects_out_of_universe_keys():
+    """Raw-key routing + clipped-key bucket planes cannot agree for
+    keys >= n_keys — the sharded path raises instead of silently
+    serving short aggregates (the unsharded path clip-aliases)."""
+    import jax.numpy as jnp
+
+    from repro.core.functions import AddLeaf
+    from repro.core.preagg import PreAgg
+    from repro.core.window import WindowSpec
+
+    spec = WindowSpec("w", "k", "ts", preceding=10_000)
+    pa = PreAgg(spec=spec,
+                leaves={"sum:x": AddLeaf(
+                    "sum:x", lambda env: jnp.asarray(env["x"]))},
+                bucket_ms=100, window_ms=10_000, n_keys=8,
+                value_cols=("x",))
+    owned = np.ones((2, 8), bool)
+    with pytest.raises(ValueError, match="bounded universe"):
+        pa.update_many_sharded(pa.init_state_stacked(2),
+                               np.asarray([9], np.int32),
+                               np.asarray([0], np.int32),
+                               {"x": np.ones(1, np.float32)}, owned)
+
+
+def test_sharded_rejects_multi_partition_script(action_tables):
+    sql = """
+    SELECT sum(price) OVER w1 AS s1, sum(quantity) OVER w2 AS s2
+    FROM actions
+    WINDOW w1 AS (PARTITION BY userid ORDER BY ts
+                  ROWS_RANGE BETWEEN 5s PRECEDING AND CURRENT ROW),
+          w2 AS (PARTITION BY category ORDER BY ts
+                 ROWS_RANGE BETWEEN 5s PRECEDING AND CURRENT ROW)
+    """
+    cs = compile_script(parse(sql), tables=action_tables)
+    ok, why = cs.sharded_eligible()
+    assert not ok and "multiple" in why
+
+
+def test_key_shard_mesh_rejects_oversubscription():
+    import jax
+
+    with pytest.raises(ValueError):
+        key_shard_mesh(len(jax.devices()) + 1)

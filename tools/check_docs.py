@@ -1,0 +1,72 @@
+"""Docs sanity gate: every ``repro.*`` dotted path named in README.md or
+docs/*.md must resolve against the actual package.
+
+A path resolves when its longest importable module prefix imports and
+any remaining components resolve as attributes (classes, functions,
+methods) — so ``repro.core.compiler.CompiledScript.online_sharded_batch``
+is checked end-to-end, and a doc that drifts from a rename fails CI.
+
+    PYTHONPATH=src python tools/check_docs.py
+"""
+
+from __future__ import annotations
+
+import importlib
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+DOC_FILES = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+PATTERN = re.compile(r"\brepro(?:\.[A-Za-z_][A-Za-z0-9_]*)+")
+
+
+def resolve(path: str) -> str | None:
+    """Return an error string, or None if the dotted path resolves."""
+    parts = path.split(".")
+    obj = None
+    mod_err = None
+    for i in range(len(parts), 0, -1):
+        try:
+            obj = importlib.import_module(".".join(parts[:i]))
+            rest = parts[i:]
+            break
+        except ImportError as e:
+            mod_err = str(e)
+    else:
+        return f"no importable module prefix ({mod_err})"
+    for attr in rest:
+        try:
+            obj = getattr(obj, attr)
+        except AttributeError:
+            return f"{type(obj).__name__} has no attribute {attr!r}"
+    return None
+
+
+def main() -> int:
+    failures = []
+    n_paths = 0
+    for doc in DOC_FILES:
+        if not doc.exists():
+            failures.append((str(doc), "(file missing)"))
+            continue
+        seen = set()
+        for m in PATTERN.finditer(doc.read_text()):
+            path = m.group(0).rstrip(".")
+            if path in seen:
+                continue
+            seen.add(path)
+            n_paths += 1
+            err = resolve(path)
+            if err is not None:
+                failures.append((f"{doc.relative_to(ROOT)}: {path}", err))
+    for where, err in failures:
+        print(f"FAIL {where}: {err}")
+    print(f"checked {n_paths} repro.* paths across "
+          f"{len(DOC_FILES)} docs: "
+          f"{'OK' if not failures else f'{len(failures)} broken'}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
