@@ -1,20 +1,40 @@
-"""Fig 8 — offline MicroBench: single-window / multi-window / skewed.
+"""Fig 8 — offline MicroBench: single/multi-window, skewed + sharded.
 
-Ours = the fused offline driver (window merging + parallel branches +
-leaf CSE); baseline = serial per-window execution with host barriers
-(the structural shape of Spark's serialized window operators).  Skewed
-column: §6.2 repartitioning vs single-partition critical path.
+Ours = the fused offline schedule (window merging + parallel branches +
+leaf CSE over the unified lowering); baseline = the serial per-branch
+schedule with host barriers (the structural shape of Spark's serialized
+window operators).  The headline column is the §6 offline engine on a
+zipf-skewed multi-window workload: partition units (hot keys time-sliced
+with halos, §6.2) fanned out over a forced 8-device host mesh via
+``CompiledScript.offline_sharded`` — every timed configuration first
+passes a bit-exact parity gate vs the fused single-device result.
+
+    PYTHONPATH=src python -m benchmarks.bench_offline [--tiny|--quick]
+
+(the module sets XLA_FLAGS before jax initializes; on a real multi-chip
+platform the forced device count is ignored).
 """
 
 from __future__ import annotations
 
-import numpy as np
+import os
 
-from repro.core import compile_script, parse
-from repro.core.multiwindow import run_parallel, run_serial
-from repro.data.synthetic import make_action_tables
+# must precede ANY jax initialization — same rationale as
+# bench_sharded_online: one thread per virtual device measures faster
+# than 8 multi-threaded devices time-sharing 2 cores.
+os.environ.setdefault(
+    "XLA_FLAGS", "--xla_force_host_platform_device_count=8 "
+    "--xla_cpu_multi_thread_eigen=false")
 
-from .common import emit, timeit
+import numpy as np  # noqa: E402
+
+from repro.core import compile_script, parse  # noqa: E402
+from repro.core.multiwindow import (run_parallel,  # noqa: E402
+                                    run_reference_serial, run_serial)
+from repro.data.synthetic import make_action_tables  # noqa: E402
+from repro.distributed.sharding import key_shard_mesh  # noqa: E402
+
+from .common import emit, timeit  # noqa: E402
 
 MULTI_SQL = """
 SELECT
@@ -41,8 +61,15 @@ WINDOW w1 AS (PARTITION BY userid ORDER BY ts
 """
 
 
-def main(quick: bool = False):
-    n = 5_000 if quick else 20_000
+def _parity_gate(ref, got, label):
+    for k in ref:
+        np.testing.assert_array_equal(np.asarray(ref[k]),
+                                      np.asarray(got[k]),
+                                      err_msg=f"{label}:{k}")
+
+
+def main(quick: bool = False, tiny: bool = False):
+    n = 2_000 if tiny else (5_000 if quick else 20_000)
     tables = make_action_tables(n_actions=n, n_orders=0, n_users=32,
                                 horizon_ms=3_600_000, seed=0,
                                 with_profile=False)
@@ -53,10 +80,47 @@ def main(quick: bool = False):
 
     csm = compile_script(parse(MULTI_SQL), tables=tables)
     us_par = timeit(lambda: run_parallel(csm, tables), warmup=1, iters=5)
-    us_ser = timeit(lambda: run_serial(csm, tables), warmup=1, iters=3)
+    us_ser = timeit(lambda: run_reference_serial(csm, tables),
+                    warmup=1, iters=3)
+    us_sched = timeit(lambda: run_serial(csm, tables), warmup=1, iters=3)
     emit("fig8_multi_window_parallel_us", us_par,
-         f"serial_us={us_ser:.0f} speedup={us_ser / us_par:.2f}x")
+         f"serial_us={us_ser:.0f} speedup={us_ser / us_par:.2f}x "
+         f"serial_sched_us={us_sched:.0f}")
+
+    # ---- §6 sharded offline engine on a skewed multi-window workload ----
+    # Baseline = the SEED path (per-branch in-trace lexsort + global
+    # folds + host barriers, no §6.2 units, no layout sharing); every
+    # timed new-engine configuration is first gated bit-exact vs the
+    # fused single-device schedule.
+    n_sk = 2_000 if tiny else (10_000 if quick else 40_000)
+    sk_tables = make_action_tables(n_actions=n_sk, n_orders=0, n_users=32,
+                                   horizon_ms=3_600_000, zipf_alpha=1.4,
+                                   seed=1, with_profile=False)
+    cs_sk = compile_script(parse(MULTI_SQL), tables=sk_tables,
+                           offline_slice_rows=max(128, n_sk // 64),
+                           offline_max_slices=32)
+    ref = cs_sk.offline(sk_tables)
+    us_sk_ser = timeit(lambda: run_reference_serial(cs_sk, sk_tables),
+                       warmup=1, iters=3)
+    us_sk_fused = timeit(lambda: cs_sk.offline(sk_tables),
+                         warmup=1, iters=5)
+    emit("fig8_skewed_serial_us", us_sk_ser,
+         f"rows={n_sk} zipf=1.4 (seed path)")
+    emit("fig8_skewed_fused_us", us_sk_fused,
+         f"speedup_vs_serial={us_sk_ser / us_sk_fused:.2f}x")
+
+    mesh = key_shard_mesh()          # all forced/visible devices
+    got = cs_sk.offline_sharded(sk_tables, mesh=mesh)
+    _parity_gate(ref, got, "sharded")
+    us_sk_sh = timeit(lambda: cs_sk.offline_sharded(sk_tables, mesh=mesh),
+                      warmup=1, iters=5)
+    emit("fig8_skewed_sharded_us", us_sk_sh,
+         f"shards={mesh.devices.size} "
+         f"speedup_vs_serial={us_sk_ser / us_sk_sh:.2f}x "
+         f"speedup_vs_fused={us_sk_fused / us_sk_sh:.2f}x bitexact=yes")
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+
+    main(quick="--quick" in sys.argv, tiny="--tiny" in sys.argv)

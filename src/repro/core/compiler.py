@@ -1,75 +1,48 @@
-"""Unified query plan compiler (§4) — one plan, two execution drivers.
+"""Unified query plan compiler (§4) — one plan, one lowering, thin drivers.
 
-The consistency mechanism: a FeaturePlan lowers to *one* set of traced jnp
-computations (window folds over (key, ts)-ordered streams).  The offline
-driver applies them to whole historical tables (vectorized over every base
-row); the online driver applies the same folds to a single request tuple
-against the live store.  Same trace => bitwise-identical features, so the
-paper's months-long online/offline verification collapses to a unit test
-(tests/test_consistency.py).
+The consistency mechanism: a FeaturePlan lowers ONCE (``core.lowering``)
+to per-window folds, LAST JOIN resolution, and scalar evaluation; the
+offline schedules (fused / serial / key-sharded, ``lowering.drivers``)
+and the online request drivers (scalar / vmapped batch / fused kernel /
+key-sharded) are thin executors over that shared lowering.  Same
+lowering => the paper's months-long online/offline verification
+collapses to a unit test (tests/test_consistency.py), and the sharded
+offline engine is bit-exact against the single-device one by
+construction (tests/test_offline_sharded.py).
 
 Compilation-level optimizations reproduced from §4.2:
 
   * window merging      — done in plan.build_plan (canonical WindowSpec);
-  * cycle binding       — leaf-level CSE in window.fold_windows (shared
-                          sum/count accumulators across aggregates);
-  * compilation cache   — module-level cache keyed by (plan fingerprint,
-                          mode, shape signature); cache hits skip tracing
-                          and XLA compilation entirely (bench_compile_cache).
+  * cycle binding       — leaf-level CSE (lowering.windows.unique_leaves);
+  * compilation cache   — lowering.cache, keyed by (plan fingerprint,
+                          driver, shape/plan signature); cache hits skip
+                          tracing and XLA compilation entirely
+                          (bench_glq_compile).
+
+This module is the stable facade: ``CompiledScript``'s API is unchanged
+from the pre-lowering compiler.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..storage import timestore
-from .expr import AggCall, ColumnRef, Expr, collect_columns, eval_scalar
-from .functions import AddLeaf, Aggregator, build_aggregator
-from .plan import (FeaturePlan, FeatureScript, LastJoinSpec, WindowAgg,
-                   build_plan)
-from .preagg import PreAgg
+from .expr import ColumnRef, Expr
+from .lowering import drivers as _drv
+from .lowering import windows as _lw
+from .lowering.cache import cache_stats, cached, clear_cache  # noqa: F401
+from .lowering.joins import join_columns
+from .plan import FeaturePlan, FeatureScript, build_plan
 from .types import Table
-from .window import (WindowSpec, first_geq, fold_windows, segment_starts,
-                     window_bounds)
 
 __all__ = ["CompileContext", "CompiledScript", "compile_script",
            "cache_stats", "clear_cache"]
 
-INT_MIN = -(2**31) + 2
-
-# ---------------------------------------------------------------------------
-# Compilation cache (§4.2)
-# ---------------------------------------------------------------------------
-
-_CACHE: Dict[Tuple, Any] = {}
-_STATS = {"hits": 0, "misses": 0}
-
-
-def cache_stats() -> Dict[str, int]:
-    return dict(_STATS)
-
-
-def clear_cache():
-    _CACHE.clear()
-    _STATS["hits"] = 0
-    _STATS["misses"] = 0
-
-
-def _cached(key, builder):
-    fn = _CACHE.get(key)
-    if fn is None:
-        _STATS["misses"] += 1
-        fn = builder()
-        _CACHE[key] = fn
-    else:
-        _STATS["hits"] += 1
-    return fn
+INT_MIN = _lw.INT_MIN
 
 
 # ---------------------------------------------------------------------------
@@ -78,18 +51,27 @@ def _cached(key, builder):
 
 
 class CompileContext:
-    """Static compile-time info: category cardinalities, buffer sizes."""
+    """Static compile-time info: category cardinalities, buffer sizes,
+    offline partition-unit parameters (§6.2)."""
 
     def __init__(self, tables: Optional[Dict[str, Table]] = None,
                  default_cardinality: int = 32,
                  max_cardinality: int = 256,
                  online_buffer: int = 256,
-                 cardinality_overrides: Optional[Dict[str, int]] = None):
+                 cardinality_overrides: Optional[Dict[str, int]] = None,
+                 offline_slice_rows: int = 1024,
+                 offline_max_slices: int = 8):
         self.tables = tables or {}
         self.default_cardinality = default_cardinality
         self.max_cardinality = max_cardinality
         self.online_buffer = online_buffer
         self.overrides = dict(cardinality_overrides or {})
+        # §6.2 unit planning: hot keys with more than offline_slice_rows
+        # rows are cut into at most offline_max_slices time slices.  The
+        # parameters are part of the *plan*, so every offline schedule
+        # (single-device or sharded) folds identical units.
+        self.offline_slice_rows = offline_slice_rows
+        self.offline_max_slices = offline_max_slices
 
     def cardinality(self, expr: Expr) -> int:
         if isinstance(expr, ColumnRef):
@@ -108,25 +90,13 @@ def _round8(x: int) -> int:
 
 
 # ---------------------------------------------------------------------------
-# Compiled script
+# Compiled script — the stable facade over core.lowering
 # ---------------------------------------------------------------------------
 
 
-@dataclasses.dataclass
-class _WindowPhys:
-    """Everything the drivers need for one physical window."""
-
-    node: WindowAgg
-    aggs: List[Aggregator]
-    feature_names: List[str]
-    sources: Tuple[str, ...]        # union tables first, base LAST
-    needed_cols: Tuple[str, ...]    # agg-arg columns (value columns)
-    online_buffer: int
-    preagg: Optional[PreAgg]
-
-
 class CompiledScript:
-    """A deployed feature script: offline + online drivers sharing folds."""
+    """A deployed feature script: offline + online drivers sharing one
+    lowering."""
 
     def __init__(self, script: FeatureScript, ctx: CompileContext):
         self.script = script
@@ -134,55 +104,14 @@ class CompiledScript:
         self.plan: FeaturePlan = build_plan(script)
         self._fingerprint = script.fingerprint()   # hashed once
         self._online_fns: Dict[Tuple, Any] = {}
-        self._build_windows()
-        self._build_join_info()
+        self.windows: List[_lw.LoweredWindow] = _lw.lower_windows(
+            self.plan, script, ctx)
+        self.join_cols: Dict[str, List[str]] = join_columns(self.plan,
+                                                            script)
 
-    # -- static analysis ----------------------------------------------------
-    def _build_windows(self):
-        self.windows: List[_WindowPhys] = []
-        for node in self.plan.physical_windows:
-            spec = node.spec
-            aggs, names = [], []
-            for fname, call in node.agg_items:
-                aggs.append(build_aggregator(call, self.ctx))
-                names.append(fname)
-            needed = set()
-            for _, call in node.agg_items:
-                for a in call.args:
-                    needed |= collect_columns(a)
-            needed.discard(spec.partition_by)
-            needed.discard(spec.order_by)
-            if spec.frame_rows:
-                buf = min(4096, spec.preceding + 1)
-            else:
-                buf = spec.maxsize or self.ctx.online_buffer
-            preagg = None
-            if node.long_window_bucket_ms > 0 and not spec.frame_rows:
-                preagg = PreAgg(
-                    spec=spec,
-                    leaves=_unique_leaves(aggs),
-                    bucket_ms=node.long_window_bucket_ms,
-                    n_keys=self.ctx.cardinality(
-                        ColumnRef(spec.partition_by)),
-                    window_ms=spec.preceding,
-                    value_cols=tuple(sorted(needed)),
-                )
-            self.windows.append(_WindowPhys(
-                node=node, aggs=aggs, feature_names=names,
-                sources=tuple(spec.union_tables) + (self.script.base_table,),
-                needed_cols=tuple(sorted(needed)),
-                online_buffer=buf, preagg=preagg))
-
-    def _build_join_info(self):
-        """Columns each LAST JOIN must expose (referenced as table.col)."""
-        self.join_cols: Dict[str, List[str]] = {}
-        for item in self.plan.scalar_items:
-            for e in _walk(item.expr):
-                if isinstance(e, ColumnRef) and e.table and \
-                        e.table != self.script.base_table:
-                    self.join_cols.setdefault(e.table, []).append(e.name)
-        for js in self.script.last_joins:
-            self.join_cols.setdefault(js.right_table, [])
+    @property
+    def fingerprint(self) -> str:
+        return self._fingerprint
 
     @property
     def feature_names(self) -> List[str]:
@@ -196,117 +125,21 @@ class CompiledScript:
     # ======================================================================
 
     def offline(self, tables: Dict[str, Table]) -> Dict[str, np.ndarray]:
-        base = tables[self.script.base_table]
-        arrays = {name: t.device_columns() for name, t in tables.items()}
-        shapes_sig = tuple(sorted(
-            (name, tuple((c, v.shape) for c, v in sorted(cols.items())))
-            for name, cols in arrays.items()))
-        key = ("offline", self._fingerprint, shapes_sig)
-        fn = _cached(key, lambda: jax.jit(self._offline_fn))
-        out = fn(arrays)
-        return {k: np.asarray(v) for k, v in out.items()}
+        """Default offline schedule: fused window-parallel branches."""
+        return _drv.offline_fused(self, tables)
 
-    def _offline_fn(self, arrays: Dict[str, Dict[str, jnp.ndarray]]
-                    ) -> Dict[str, jnp.ndarray]:
-        base_name = self.script.base_table
-        base_cols = arrays[base_name]
-        n_base = next(iter(base_cols.values())).shape[0]
-        out: Dict[str, jnp.ndarray] = {}
+    def offline_serial(self, tables: Dict[str, Table]
+                       ) -> Dict[str, np.ndarray]:
+        """Serialized-branch baseline schedule (bench_offline)."""
+        return _drv.offline_serial(self, tables)
 
-        # ---- window branches (the parallel segment of the plan) ----------
-        for w in self.windows:
-            spec = w.node.spec
-            feats = self._offline_window(arrays, w, n_base)
-            for name, val in zip(w.feature_names, feats):
-                out[name] = val
-
-        # ---- LAST JOINs ---------------------------------------------------
-        env = dict(base_cols)
-        for js in self.script.last_joins:
-            joined = self._offline_last_join(arrays, js)
-            env.update(joined)
-
-        # ---- scalar items ---------------------------------------------------
-        for item in self.plan.scalar_items:
-            out[item.name] = jnp.asarray(eval_scalar(item.expr, env))
-        # preserve select order
-        return {it.name: out[it.name] for it in self.script.select}
-
-    def _offline_window(self, arrays, w: _WindowPhys, n_base: int
-                        ) -> List[jnp.ndarray]:
-        spec = w.node.spec
-        cols_needed = set(w.needed_cols) | {spec.partition_by, spec.order_by}
-
-        parts = []  # (col dict, table_rank, orig_idx)
-        for rank, tname in enumerate(w.sources):
-            cols = arrays[tname]
-            n_t = next(iter(cols.values())).shape[0]
-            is_base = tname == self.script.base_table and \
-                rank == len(w.sources) - 1
-            part = {c: cols[c] for c in cols_needed}
-            part["__rank__"] = jnp.full((n_t,), rank, jnp.int32)
-            part["__arrival__"] = jnp.arange(n_t, dtype=jnp.int32)
-            part["__orig__"] = (jnp.arange(n_t, dtype=jnp.int32) if is_base
-                                else jnp.full((n_t,), n_base, jnp.int32))
-            parts.append(part)
-
-        merged = {k: jnp.concatenate([p[k] for p in parts])
-                  for k in parts[0]}
-        key_col = merged[spec.partition_by].astype(jnp.int32)
-        ts_col = merged[spec.order_by].astype(jnp.int32)
-        # stable (key, ts, rank, arrival) order; base rank sorts LAST among
-        # equal timestamps == online insert-after-peers (see timestore).
-        perm = jnp.lexsort((merged["__arrival__"], merged["__rank__"],
-                            ts_col, key_col))
-        env = {k: jnp.take(v, perm, axis=0) for k, v in merged.items()}
-        key_s = jnp.take(key_col, perm)
-        ts_s = jnp.take(ts_col, perm)
-
-        seg_start = segment_starts(key_s)
-        n = key_s.shape[0]
-        seg_flag = jnp.arange(n, dtype=jnp.int32) == seg_start
-        start, end = window_bounds(spec, key_s, ts_s, seg_start)
-
-        feats = fold_windows(w.aggs, env, start, end, seg_start, seg_flag)
-
-        # ConcatJoin on the index column: scatter back to base-row order
-        orig = env["__orig__"]  # n_base == out-of-bounds => dropped
-        outs = []
-        for f in feats:
-            shape = (n_base,) + f.shape[1:]
-            buf = jnp.zeros(shape, f.dtype)
-            outs.append(buf.at[orig].set(f, mode="drop"))
-        return outs
-
-    def _offline_last_join(self, arrays, js: LastJoinSpec
-                           ) -> Dict[str, jnp.ndarray]:
-        base = arrays[self.script.base_table]
-        right = arrays[js.right_table]
-        order = js.order_by or self.script.order_column
-        rk = right[js.right_key].astype(jnp.int32)
-        rts = right[order].astype(jnp.int32)
-        perm = jnp.lexsort((rts, rk))
-        rk_s = jnp.take(rk, perm)
-        rts_s = jnp.take(rts, perm)
-
-        lk = base[js.left_key].astype(jnp.int32)
-        lts = base[self.script.order_column].astype(jnp.int32)
-        lo = jnp.searchsorted(rk_s, lk, side="left").astype(jnp.int32)
-        hi = jnp.searchsorted(rk_s, lk, side="right").astype(jnp.int32)
-        if js.point_in_time:
-            pos = first_geq(rts_s, lts + 1, lo, hi) - 1
-        else:
-            pos = hi - 1
-        valid = pos >= lo
-        safe = jnp.clip(pos, 0, max(rk_s.shape[0] - 1, 0))
-
-        out: Dict[str, jnp.ndarray] = {}
-        for col in self.join_cols.get(js.right_table, []):
-            v = jnp.take(jnp.take(right[col], perm, axis=0), safe, axis=0)
-            out[f"{js.right_table}.{col}"] = jnp.where(
-                valid, v, jnp.zeros_like(v))
-        out[f"{js.right_table}.__matched__"] = valid
-        return out
+    def offline_sharded(self, tables: Dict[str, Table], mesh=None,
+                        n_shards: Optional[int] = None,
+                        axis: str = "shard") -> Dict[str, np.ndarray]:
+        """Key-partitioned, skew-aware offline execution on a device mesh
+        (bit-exact vs ``offline``; see lowering.drivers.offline_sharded)."""
+        return _drv.offline_sharded(self, tables, mesh=mesh,
+                                    n_shards=n_shards, axis=axis)
 
     # ======================================================================
     # ONLINE driver (request mode against the live store)
@@ -328,59 +161,24 @@ class CompiledScript:
         need.setdefault(self.script.base_table, set())
         return {t: sorted(cs - {"ts"}) for t, cs in need.items()}
 
+    def _online_fn(self, states, key, ts, values, preagg_states,
+                   use_preagg=False):
+        return _drv.online_fn(self, states, key, ts, values,
+                              preagg_states, use_preagg=use_preagg)
+
     def online(self, store: "timestore.OnlineStore", key: int, ts: int,
                values: Dict[str, float],
                preagg_states: Optional[Dict[int, Any]] = None
                ) -> Dict[str, np.ndarray]:
         """Compute features for one request tuple (virtually inserted)."""
-        use_pre = preagg_states is not None
-        fn = self._store_fn(
-            store, "online", (use_pre,),
-            lambda: jax.jit(functools.partial(
-                self._online_fn, use_preagg=use_pre)))
-        vals = {k: jnp.asarray(v, jnp.float32) for k, v in values.items()}
-        out = fn(store.tables, jnp.int32(key), jnp.int32(ts), vals,
-                 preagg_states if use_pre else {})
-        if use_pre:
-            self._observe_queries([int(ts)])
-        return {k: np.asarray(v) for k, v in out.items()}
+        return _drv.online(self, store, key, ts, values,
+                           preagg_states=preagg_states)
 
-    def _store_fn(self, store: "timestore.OnlineStore", kind: str,
-                  extra: Tuple, builder):
-        """Two-level jitted-fn cache: a per-store-identity hot path over
-        the global compilation cache (§4.2) keyed by plan fingerprint +
-        store shape signature."""
-        local_key = (id(store), store.capacity, kind) + extra
-        fn = self._online_fns.get(local_key)
-        if fn is None:
-            sig = tuple(sorted((t, s["keys"].shape[0]) for t, s in
-                               store.tables.items()))
-            cache_key = (kind, self._fingerprint, sig) + extra
-            fn = _cached(cache_key, builder)
-            self._online_fns[local_key] = fn
-        return fn
+    # kept as API for callers that pre-pad request batches themselves
+    _pad_batch = staticmethod(_drv.pad_batch)
 
-    @staticmethod
-    def _pad_batch(keys, ts, values):
-        """Pad a request batch to the next power of two by replicating
-        the last request (per-request computations are independent, so
-        padding never changes real rows' results and recompiles stay
-        logarithmic in batch size).  Returns (keys, ts, values, b_real).
-        """
-        keys = np.asarray(keys, np.int32)
-        tsa = np.asarray(ts, np.int32)
-        b = keys.shape[0]
-        if b == 0:
-            raise ValueError("empty request batch")
-        b_pad = timestore.next_pow2(b)
-        vals = {k: np.asarray(v, np.float32) for k, v in values.items()}
-        if b_pad > b:
-            pad = [(0, b_pad - b)]
-            keys = np.pad(keys, pad, mode="edge")
-            tsa = np.pad(tsa, pad, mode="edge")
-            vals = {k: np.pad(v, pad, mode="edge")
-                    for k, v in vals.items()}
-        return keys, tsa, vals, b
+    def _store_fn(self, store, kind: str, extra: Tuple, builder):
+        return _drv.store_fn(self, store, kind, extra, builder)
 
     def online_batch(self, store: "timestore.OnlineStore",
                      keys: Sequence[int], ts: Sequence[int],
@@ -388,33 +186,9 @@ class CompiledScript:
                      preagg_states: Optional[Dict[int, Any]] = None
                      ) -> Dict[str, np.ndarray]:
         """Features for B requests in ONE jitted call (vmapped online
-        driver).
-
-        ``keys``/``ts`` are length-B vectors and every entry of
-        ``values`` is a length-B column.  The whole request path —
-        range search, window gather, merge/sort, leaf folds, pre-agg
-        bucket combines, LAST JOINs, scalar items — runs as
-        (B, buffer)-shaped ops with a single host->device round trip,
-        so dispatch and transfer costs amortize across the batch.
-        Per-request results are bit-identical to B scalar ``online``
-        calls (the vmapped trace applies the same elementwise ops and
-        explicit fold orders).  Batches are padded to the next power of
-        two (replicating the last request; padded outputs are sliced
-        off) so recompiles stay logarithmic in batch size.
-        """
-        keys, tsa, vals_np, b = self._pad_batch(keys, ts, values)
-        use_pre = preagg_states is not None
-        fn = self._store_fn(
-            store, "online_batch", (use_pre, keys.shape[0]),
-            lambda: jax.jit(jax.vmap(
-                functools.partial(self._online_fn, use_preagg=use_pre),
-                in_axes=(None, 0, 0, 0, None))))
-        vals = {k: jnp.asarray(v) for k, v in vals_np.items()}
-        out = fn(store.tables, jnp.asarray(keys), jnp.asarray(tsa), vals,
-                 preagg_states if use_pre else {})
-        if use_pre:
-            self._observe_queries(tsa[:b].tolist())
-        return {k: np.asarray(v)[:b] for k, v in out.items()}
+        driver); bit-identical to B scalar ``online`` calls."""
+        return _drv.online_batch(self, store, keys, ts, values,
+                                 preagg_states=preagg_states)
 
     # -- key-sharded batch driver (mesh-distributed serving) ---------------
     def sharded_eligible(self) -> Tuple[bool, str]:
@@ -443,102 +217,16 @@ class CompiledScript:
                              values: Dict[str, Sequence[float]],
                              preagg_states: Optional[Dict[int, Any]] = None
                              ) -> Dict[str, np.ndarray]:
-        """Features for B requests against a ``ShardedOnlineStore``.
-
-        Host side routes each request to its key's owning shard, packing
-        per-shard sub-batches into (n_shards, b_pad) blocks (padding
-        replicates a real request; padded outputs are discarded).  Device
-        side, one jitted call fans the blocks out across the store's mesh
-        axis with ``shard_map``: each shard runs the SAME vmapped
-        ``_online_fn`` trace as ``online_batch``, against only its local
-        (capacity,) store block and pre-agg planes — window folds never
-        gather across shards, which is what keeps results bit-exact vs
-        the unsharded path.  Results are re-assembled in request order.
-        With ``store.mesh is None`` the identical computation runs as a
-        vmap over the stacked shard dim on one device.
-        """
-        ok, why = self.sharded_eligible()
-        if not ok:
-            raise ValueError(f"script not shardable by key: {why}")
-        keys = np.asarray(keys, np.int32)
-        tsa = np.asarray(ts, np.int32)
-        b = keys.shape[0]
-        if b == 0:
-            raise ValueError("empty request batch")
-        use_pre = preagg_states is not None
-        if use_pre:
-            # same bounded-universe contract as the sharded pre-agg
-            # update: a request routed by a raw key >= n_keys would read
-            # another shard's alias plane (see PreAgg.update_many_sharded)
-            nks = [w.preagg.n_keys for w in self.windows
-                   if w.preagg is not None]
-            if nks and (int(keys.max()) >= min(nks)
-                        or int(keys.min()) < 0):
-                raise ValueError(
-                    f"request key outside the pre-agg key universe "
-                    f"[0, {min(nks)}) — not servable bit-exactly from "
-                    f"key-sharded bucket planes")
-        vals_np = {k: np.asarray(v, np.float32) for k, v in values.items()}
-        n_shards = store.n_shards
-        owner = store.owner_of_keys(keys)
-        counts = np.bincount(owner, minlength=n_shards)
-        # pad the per-shard sub-batch: pow2 while small, then multiples
-        # of 32 — near-balanced routing (max count ~ B/S) would waste up
-        # to 2x work under pure pow2 padding, and recompile count stays
-        # bounded (one fn per bucket)
-        c_max = int(max(1, counts.max()))
-        b_pad = (timestore.next_pow2(c_max) if c_max <= 32
-                 else ((c_max + 31) // 32) * 32)
-        # req_idx[s, j] = which request shard s computes in slot j;
-        # padding replicates the shard's last real request (empty shards
-        # recompute request 0 — discarded either way)
-        req_idx = np.zeros((n_shards, b_pad), np.int64)
-        slot = np.empty(b, np.int64)
-        for s in range(n_shards):
-            sel = np.flatnonzero(owner == s)
-            slot[sel] = np.arange(sel.size)
-            req_idx[s, :sel.size] = sel
-            if sel.size:
-                req_idx[s, sel.size:] = sel[-1]
-        fn = self._sharded_fn(store, use_pre, b_pad)
-        vals = {c: jnp.asarray(v[req_idx]) for c, v in vals_np.items()}
-        out = fn(store.tables, jnp.asarray(keys[req_idx]),
-                 jnp.asarray(tsa[req_idx]), vals,
-                 preagg_states if use_pre else {})
-        if use_pre:
-            self._observe_queries(tsa.tolist())
-        return {k: np.asarray(v)[owner, slot] for k, v in out.items()}
+        """Features for B requests against a ``ShardedOnlineStore``:
+        host key-routing into (n_shards, b_pad) blocks, one jitted
+        ``shard_map`` fan-out running the same vmapped ``_online_fn``
+        per shard (bit-exact vs the unsharded path), request-order
+        reassembly (see lowering.drivers.online_sharded_batch)."""
+        return _drv.online_sharded_batch(self, store, keys, ts, values,
+                                         preagg_states=preagg_states)
 
     def _sharded_fn(self, store, use_pre: bool, b_pad: int):
-        """Jitted (shard_map or stacked-vmap) driver, cached per
-        (store identity, preagg mode, padded sub-batch size)."""
-        local_key = (id(store), "sharded", use_pre, b_pad)
-        fn = self._online_fns.get(local_key)
-        if fn is not None:
-            return fn
-        one = functools.partial(self._online_fn, use_preagg=use_pre)
-        per_shard = jax.vmap(one, in_axes=(None, 0, 0, 0, None))
-        if store.mesh is None:
-            fn = jax.jit(jax.vmap(per_shard, in_axes=(0, 0, 0, 0, 0)))
-        else:
-            from ..distributed.sharding import shard_map_compat
-            from jax.sharding import PartitionSpec as P
-
-            tm = jax.tree_util.tree_map
-
-            def mapped(states, kb, tb, vb, pre):
-                local = tm(lambda x: x[0], states)
-                out = per_shard(local, kb[0], tb[0],
-                                tm(lambda x: x[0], vb),
-                                tm(lambda x: x[0], pre))
-                return tm(lambda x: x[None], out)
-
-            spec = P(store.axis)
-            fn = jax.jit(shard_map_compat(
-                mapped, mesh=store.mesh, in_specs=(spec,) * 5,
-                out_specs=spec))
-        self._online_fns[local_key] = fn
-        return fn
+        return _drv._sharded_store_fn(self, store, use_pre, b_pad)
 
     def _observe_queries(self, ts_list: Sequence[int]):
         """§5.1 adaptive hierarchy: host-side per-query level stats."""
@@ -552,6 +240,8 @@ class CompiledScript:
     def fast_batch_eligible(self) -> Tuple[bool, str]:
         """Whether every feature folds through additive leaves over pure
         RANGE frames — the precondition for the fused mask-matmul path."""
+        from .functions import AddLeaf
+
         if self.script.last_joins:
             return False, "LAST JOINs need per-request point lookups"
         for w in self.windows:
@@ -560,7 +250,7 @@ class CompiledScript:
                 return False, f"window {spec.name} uses a ROWS frame"
             if spec.maxsize:
                 return False, f"window {spec.name} has MAXSIZE"
-            for leaf in _unique_leaves(w.aggs).values():
+            for leaf in _lw.unique_leaves(w.aggs).values():
                 if not isinstance(leaf, AddLeaf):
                     return False, f"non-additive leaf {leaf.key}"
         return True, ""
@@ -570,204 +260,14 @@ class CompiledScript:
                           values: Dict[str, Sequence[float]],
                           use_pallas: bool = False, interpret: bool = True
                           ) -> Dict[str, np.ndarray]:
-        """Fused invertible-leaf fast path: one masked-matmul kernel per
-        (window, source) replaces per-request search + gather + fold
-        (kernels/batch_windowfold).
-
-        Exact (no buffer truncation: the mask covers the whole store), but
-        reduction order differs from the tree fold, so results match
-        ``online_batch`` to float tolerance rather than bit-exactly.
-        Raises ValueError for scripts with non-additive leaves, ROWS
-        frames, MAXSIZE, or LAST JOINs — callers fall back to
-        ``online_batch``.
-        """
-        ok, why = self.fast_batch_eligible()
-        if not ok:
-            raise ValueError(f"script not eligible for fused path: {why}")
-        keys, tsa, vals_np, b = self._pad_batch(keys, ts, values)
-        fn = self._store_fn(
-            store, "online_fast", (keys.shape[0], use_pallas, interpret),
-            lambda: jax.jit(functools.partial(
-                self._online_fast_fn, use_pallas=use_pallas,
-                interpret=interpret)))
-        vals = {k: jnp.asarray(v) for k, v in vals_np.items()}
-        out = fn(store.tables, jnp.asarray(keys), jnp.asarray(tsa), vals)
-        return {k: np.asarray(v)[:b] for k, v in out.items()}
-
-    def _online_fast_fn(self, states, keys, ts, values, use_pallas=False,
-                        interpret=True):
-        from ..kernels.batch_windowfold import store_windowfold
-
-        b = keys.shape[0]
-        out: Dict[str, jnp.ndarray] = {}
-        for w in self.windows:
-            spec = w.node.spec
-            leaves = _unique_leaves(w.aggs)
-            qt1 = ts
-            qt0 = ts - jnp.int32(min(spec.preceding, 2**30))
-            sizes = [int(np.prod(leaf.shape)) if leaf.shape else 1
-                     for leaf in leaves.values()]
-            total = jnp.zeros((b, sum(sizes)), jnp.float32)
-            for tname in w.sources:
-                st = states[tname]
-                env = dict(st["cols"])
-                env[spec.order_by] = st["ts"]
-                mats = [leaf.lift(env).reshape(st["ts"].shape[0], -1)
-                        for leaf in leaves.values()]
-                total = total + store_windowfold(
-                    st, jnp.concatenate(mats, axis=1), keys, qt0, qt1,
-                    use_pallas=use_pallas, interpret=interpret)
-            if not spec.instance_not_in_window:
-                env_r = dict(values)
-                env_r[spec.order_by] = ts
-                req = [leaf.lift(env_r).reshape(b, -1)
-                       for leaf in leaves.values()]
-                total = total + jnp.concatenate(req, axis=1)
-            folded, off = {}, 0
-            for (k, leaf), size in zip(leaves.items(), sizes):
-                folded[k] = total[:, off:off + size].reshape(
-                    (b,) + leaf.shape)
-                off += size
-            for name, agg in zip(w.feature_names, w.aggs):
-                out[name] = agg.finalize(folded)
-
-        env = dict(values)
-        env[self.script.order_column] = ts
-        for item in self.plan.scalar_items:
-            out[item.name] = jnp.asarray(eval_scalar(item.expr, env))
-        return {it.name: out[it.name] for it in self.script.select}
-
-    def _online_fn(self, states, key, ts, values, preagg_states,
-                   use_preagg=False):
-        out: Dict[str, jnp.ndarray] = {}
-        for wi, w in enumerate(self.windows):
-            if use_preagg and w.preagg is not None:
-                folded = self._online_window_preagg(
-                    states, w, key, ts, values, preagg_states[wi])
-            else:
-                folded = self._online_window_raw(states, w, key, ts, values)
-            for name, agg in zip(w.feature_names, w.aggs):
-                out[name] = agg.finalize(folded)
-
-        env: Dict[str, jnp.ndarray] = dict(values)
-        env[self.script.order_column] = jnp.asarray(ts, jnp.int32)
-        for js in self.script.last_joins:
-            env.update(self._online_last_join(states, js, env, key, ts))
-        for item in self.plan.scalar_items:
-            out[item.name] = jnp.asarray(eval_scalar(item.expr, env))
-        return {it.name: out[it.name] for it in self.script.select}
-
-    def _gather_sources(self, states, w: _WindowPhys, key, ts,
-                        t0) -> Tuple[Dict[str, jnp.ndarray], jnp.ndarray,
-                                     jnp.ndarray, jnp.ndarray]:
-        """Fixed-size merged buffer of all window rows before the request."""
-        spec = w.node.spec
-        bufs = []
-        for rank, tname in enumerate(w.sources):
-            st = states[tname]
-            lo, hi = timestore.range_bounds(st, key, t0, ts)
-            cols, ts_arr, valid = timestore.gather_window(
-                st, lo, hi, w.online_buffer, list(w.needed_cols))
-            bufs.append((cols, ts_arr, valid,
-                         jnp.full_like(ts_arr, rank)))
-        cols = {c: jnp.concatenate([b[0][c] for b in bufs])
-                for c in w.needed_cols}
-        ts_all = jnp.concatenate([b[1] for b in bufs])
-        valid = jnp.concatenate([b[2] for b in bufs])
-        rank = jnp.concatenate([b[3] for b in bufs])
-        return cols, ts_all, valid, rank
-
-    def _merge_request(self, w: _WindowPhys, cols, ts_all, valid, rank,
-                       key, ts, values):
-        """Append the (virtually inserted) request row, sort by (ts, rank),
-        apply the ROWS-frame cap, return the env for leaf folds."""
-        spec = w.node.spec
-        n_src = len(w.sources)
-        req_valid = not spec.instance_not_in_window
-        cols = {c: jnp.concatenate(
-            [v, jnp.asarray(values.get(c, 0.0), v.dtype)[None]])
-            for c, v in cols.items()}
-        ts_all = jnp.concatenate([ts_all, jnp.asarray(ts, jnp.int32)[None]])
-        valid = jnp.concatenate(
-            [valid, jnp.asarray(req_valid, bool)[None]])
-        rank = jnp.concatenate(
-            [rank, jnp.full((1,), n_src, jnp.int32)])
-
-        sort_ts = jnp.where(valid, ts_all, jnp.int32(2**31 - 1))
-        pos0 = jnp.arange(ts_all.shape[0], dtype=jnp.int32)
-        perm = jnp.lexsort((pos0, rank, sort_ts))
-        env = {c: jnp.take(v, perm) for c, v in cols.items()}
-        keep = jnp.take(valid, perm)
-
-        if spec.frame_rows:
-            # valid rows sort before invalid (ts=MAX) rows, so the newest
-            # (preceding+1) valid rows occupy positions [n_keep-p-1, n_keep)
-            n_keep = jnp.sum(keep.astype(jnp.int32))
-            pos = jnp.arange(keep.shape[0], dtype=jnp.int32)
-            keep = keep & (pos >= n_keep - jnp.int32(spec.preceding + 1))
-        if spec.maxsize:
-            n_keep = jnp.sum(keep.astype(jnp.int32))
-            pos = jnp.arange(keep.shape[0], dtype=jnp.int32)
-            keep = keep & (pos >= n_keep - jnp.int32(spec.maxsize))
-        env["__valid__"] = keep
-        env[spec.order_by] = jnp.take(ts_all, perm)
-        return env
-
-    def _online_window_raw(self, states, w: _WindowPhys, key, ts, values
-                           ) -> Dict[str, jnp.ndarray]:
-        spec = w.node.spec
-        t0 = (ts - jnp.int32(min(spec.preceding, 2**30))) \
-            if not spec.frame_rows else jnp.int32(INT_MIN)
-        cols, ts_all, valid, rank = self._gather_sources(
-            states, w, key, ts, t0)
-        env = self._merge_request(w, cols, ts_all, valid, rank, key, ts,
-                                  values)
-        return _ordered_fold(_unique_leaves(w.aggs), env)
-
-    def _online_window_preagg(self, states, w: _WindowPhys, key, ts,
-                              values, pre_state) -> Dict[str, jnp.ndarray]:
-        """Long-window path (§5.1): interior from bucket partials, edges
-        raw, ordered combine edge_l ⊕ buckets ⊕ edge_r ⊕ request."""
-        return w.preagg.fold_online(
-            states, w, key, ts, values, pre_state,
-            gather=self._gather_edges, merge=self._merge_request)
-
-    def _gather_edges(self, states, w, key, t0, t1):
-        """Raw rows with ts in [t0, t1) across sources (edge buckets)."""
-        bufs = []
-        for rank, tname in enumerate(w.sources):
-            st = states[tname]
-            lo, hi = timestore.range_bounds(st, key, t0, t1 - 1)
-            cols, ts_arr, valid = timestore.gather_window(
-                st, lo, hi, w.preagg.max_bucket_rows, list(w.needed_cols))
-            bufs.append((cols, ts_arr, valid, jnp.full_like(ts_arr, rank)))
-        cols = {c: jnp.concatenate([b[0][c] for b in bufs])
-                for c in w.needed_cols}
-        ts_all = jnp.concatenate([b[1] for b in bufs])
-        valid = jnp.concatenate([b[2] for b in bufs])
-        rank = jnp.concatenate([b[3] for b in bufs])
-        sort_ts = jnp.where(valid, ts_all, jnp.int32(2**31 - 1))
-        pos0 = jnp.arange(ts_all.shape[0], dtype=jnp.int32)
-        perm = jnp.lexsort((pos0, rank, sort_ts))
-        env = {c: jnp.take(v, perm) for c, v in cols.items()}
-        env["__valid__"] = jnp.take(valid, perm)
-        return env
-
-    def _online_last_join(self, states, js: LastJoinSpec, env, key, ts):
-        st = states[js.right_table]
-        jk = env.get(js.left_key)
-        jk = key if jk is None else jnp.asarray(jk, jnp.int32)
-        lo, hi = timestore.range_bounds(st, jk, jnp.int32(INT_MIN), ts)
-        pos = hi - 1
-        valid = pos >= lo
-        safe = jnp.clip(pos, 0, st["keys"].shape[0] - 1)
-        out = {}
-        for col in self.join_cols.get(js.right_table, []):
-            v = st["cols"][col][safe]
-            out[f"{js.right_table}.{col}"] = jnp.where(valid, v,
-                                                       jnp.zeros_like(v))
-        out[f"{js.right_table}.__matched__"] = valid
-        return out
+        """Fused invertible-leaf fast path (see drivers.online_fast_fn).
+        Exact but reduction order differs from the tree fold, so results
+        match ``online_batch`` to float tolerance rather than bit-exactly.
+        Raises ValueError for ineligible scripts — callers fall back to
+        ``online_batch``."""
+        return _drv.online_batch_fast(self, store, keys, ts, values,
+                                      use_pallas=use_pallas,
+                                      interpret=interpret)
 
     # -- pre-aggregation plumbing -------------------------------------------
     def init_preagg_states(self) -> Dict[int, Any]:
@@ -823,8 +323,7 @@ class CompiledScript:
             if w.preagg is None or table not in w.sources:
                 continue
             pre_states[wi] = w.preagg.update(
-                pre_states[wi], jnp.int32(key), jnp.int32(ts),
-                {k: jnp.asarray(v, jnp.float32) for k, v in values.items()})
+                pre_states[wi], key, ts, values)
         return pre_states
 
     def preagg_update_many(self, pre_states: Dict[int, Any], table: str,
@@ -837,51 +336,6 @@ class CompiledScript:
             pre_states[wi] = w.preagg.update_many(pre_states[wi], keys, ts,
                                                   values)
         return pre_states
-
-
-# ---------------------------------------------------------------------------
-# helpers
-# ---------------------------------------------------------------------------
-
-
-def _unique_leaves(aggs: Sequence[Aggregator]):
-    uniq = {}
-    for a in aggs:
-        for leaf in a.leaves:
-            uniq.setdefault(leaf.key, leaf)
-    return uniq
-
-
-def _tree_fold(leaf, lifted: jnp.ndarray) -> jnp.ndarray:
-    """Ordered log-depth tree reduction (cheaper than a full prefix scan
-    when only the total fold is needed — the online request case)."""
-    n = lifted.shape[0]
-    n_pad = 1 << max(1, (n - 1).bit_length())
-    if n_pad > n:
-        ident = jnp.broadcast_to(leaf.identity(),
-                                 (n_pad - n,) + lifted.shape[1:])
-        lifted = jnp.concatenate([lifted, ident], axis=0)
-    while lifted.shape[0] > 1:
-        lifted = leaf.combine(lifted[0::2], lifted[1::2])
-    return lifted[0]
-
-
-def _ordered_fold(leaves: Dict[str, Any], env) -> Dict[str, jnp.ndarray]:
-    """Fold every (deduplicated) leaf over the ordered buffer."""
-    out = {}
-    for k, leaf in leaves.items():
-        out[k] = _tree_fold(leaf, leaf.lift(env))
-    return out
-
-
-def _walk(e: Expr):
-    yield e
-    for attr in ("lhs", "rhs", "operand"):
-        child = getattr(e, attr, None)
-        if child is not None:
-            yield from _walk(child)
-    for a in getattr(e, "args", ()) or ():
-        yield from _walk(a)
 
 
 def compile_script(script_or_sql, tables: Optional[Dict[str, Table]] = None,

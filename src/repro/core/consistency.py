@@ -23,7 +23,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from ..storage.timestore import OnlineStore
+from ..storage.timestore import OnlineStore, ShardedOnlineStore
 from .compiler import CompiledScript
 from .types import Table
 
@@ -90,17 +90,31 @@ def _event_stream(cs: CompiledScript, tables: Dict[str, Table]):
 
 def replay_online(cs: CompiledScript, tables: Dict[str, Table],
                   capacity: Optional[int] = None,
-                  use_preagg: bool = False
-                  ) -> Dict[str, np.ndarray]:
+                  use_preagg: bool = False,
+                  n_shards: Optional[int] = None,
+                  mesh=None) -> Dict[str, np.ndarray]:
     """Feed rows through the online store in arrival order; collect the
-    request-mode features of every base-table row."""
+    request-mode features of every base-table row.
+
+    With ``n_shards``/``mesh`` the replay drives the key-SHARDED serving
+    path instead: a ``ShardedOnlineStore`` with routed ingest, per-shard
+    pre-agg planes, and every request served through
+    ``online_sharded_batch`` — the store-side mirror of
+    ``offline_sharded``, so the two sharded executors can be gated
+    against each other end to end.
+    """
     base = cs.script.base_table
     need = cs.required_store_columns()
     tables = {k: v for k, v in tables.items() if k in need}
     total = sum(len(t) for t in tables.values())
     cap = capacity or max(64, total + 8)
 
-    store = OnlineStore(capacity=cap)
+    sharded = n_shards is not None or mesh is not None
+    if sharded:
+        store = ShardedOnlineStore(capacity=cap, n_shards=n_shards,
+                                   mesh=mesh)
+    else:
+        store = OnlineStore(capacity=cap)
     for tname, cols in need.items():
         table = tables[tname]
         specs = {}
@@ -109,7 +123,14 @@ def replay_online(cs: CompiledScript, tables: Dict[str, Table],
             specs[c] = np.float32 if dd.kind == "f" else np.int32
         store.create_table(tname, specs)
 
-    pre_states = cs.init_preagg_states() if use_preagg else None
+    owned = None
+    if not use_preagg:
+        pre_states = None
+    elif sharded:
+        pre_states = cs.init_preagg_states_sharded(store.n_shards)
+        owned = cs.preagg_owned_masks(store.owner_of_keys, store.n_shards)
+    else:
+        pre_states = cs.init_preagg_states()
 
     n_base = len(tables[base])
     outputs: Dict[str, List[np.ndarray]] = {}
@@ -127,12 +148,26 @@ def replay_online(cs: CompiledScript, tables: Dict[str, Table],
         values = {c: float(row[c]) for c in need[tname]}
 
         if tname == base:
-            feats = cs.online(store, key, ts, values,
-                              preagg_states=pre_states)
+            if sharded:
+                batch = cs.online_sharded_batch(
+                    store, [key], [ts], {c: [v] for c, v in values.items()},
+                    preagg_states=pre_states)
+                feats = {k: v[0] for k, v in batch.items()}
+            else:
+                feats = cs.online(store, key, ts, values,
+                                  preagg_states=pre_states)
             for k, v in feats.items():
                 outputs.setdefault(k, []).append(np.asarray(v))
         store.put(tname, key, ts, values)
-        if use_preagg:
+        if not use_preagg:
+            pass
+        elif sharded:
+            pre_states = cs.preagg_update_many_sharded(
+                pre_states, tname, np.asarray([key], np.int32),
+                np.asarray([ts], np.int32),
+                {c: np.asarray([v], np.float32) for c, v in values.items()},
+                owned)
+        else:
             pre_states = cs.preagg_update(pre_states, tname, key, ts,
                                           values)
 
@@ -154,9 +189,23 @@ def replay_online(cs: CompiledScript, tables: Dict[str, Table],
 def verify_consistency(cs: CompiledScript, tables: Dict[str, Table],
                        use_preagg: bool = False,
                        atol: float = 1e-3,
-                       rtol: float = 1e-4) -> ConsistencyReport:
-    offline = cs.offline(tables)
-    online = replay_online(cs, tables, use_preagg=use_preagg)
+                       rtol: float = 1e-4,
+                       n_shards: Optional[int] = None,
+                       mesh=None) -> ConsistencyReport:
+    """Offline-vs-online replay gate.
+
+    With ``n_shards``/``mesh`` BOTH executors run sharded: the offline
+    side through ``offline_sharded`` (whose results are bit-exact vs the
+    single-device ``offline`` by construction) and the online side
+    through the key-sharded serving path — the CI gate for the paper's
+    claim that one plan serves every deployment shape.
+    """
+    if n_shards is not None or mesh is not None:
+        offline = cs.offline_sharded(tables, mesh=mesh, n_shards=n_shards)
+    else:
+        offline = cs.offline(tables)
+    online = replay_online(cs, tables, use_preagg=use_preagg,
+                           n_shards=n_shards, mesh=mesh)
     mism: List[str] = []
     max_abs = 0.0
     max_rel = 0.0

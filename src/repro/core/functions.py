@@ -53,6 +53,10 @@ class Leaf:
     key: str
     shape: Tuple[int, ...]
     invertible: bool = False
+    # idempotent (and commutative) combines — min/max — admit
+    # overlapping-range folds: sparse-table queries answer any window in
+    # TWO combines instead of a log-depth tree walk, bitwise-exactly
+    idempotent: bool = False
 
     def lift(self, env) -> jnp.ndarray:
         """Per-row states: (rows, *shape)."""
@@ -110,6 +114,7 @@ class MinLeaf(Leaf):
     value_fn: Callable[[dict], jnp.ndarray] = None
     shape: Tuple[int, ...] = ()
     invertible: bool = False
+    idempotent: bool = True
 
     def lift(self, env):
         v = self.value_fn(env).astype(jnp.float32)
@@ -128,6 +133,7 @@ class MaxLeaf(Leaf):
     value_fn: Callable[[dict], jnp.ndarray] = None
     shape: Tuple[int, ...] = ()
     invertible: bool = False
+    idempotent: bool = True
 
     def lift(self, env):
         v = self.value_fn(env).astype(jnp.float32)

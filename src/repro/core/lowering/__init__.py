@@ -1,0 +1,26 @@
+"""Unified plan lowering (§4): one IR -> offline + online executors.
+
+``core.compiler`` used to hold two parallel implementations of every
+window fold and LAST JOIN — one traced for whole-table offline batches,
+one for online request tuples — and consistency between them was
+maintained by hand.  This package is the refactor the paper's unified
+plan generator actually calls for: the *lowering* of a FeaturePlan
+(per-window fold, join resolution, scalar evaluation) is defined once,
+and the drivers are thin executors over it:
+
+* ``windows``  — leaf algebra plumbing, the offline unit-fold engine
+                 (partition units from ``core.skew``), and the online
+                 buffer gather/merge;
+* ``joins``    — LAST JOIN resolution (one point-in-time lookup core
+                 shared by the offline batch and online store paths);
+* ``scalars``  — scalar select-item evaluation and output assembly;
+* ``drivers``  — the executors: fused / serial / sharded offline
+                 schedules and the scalar / batched / fused-kernel /
+                 sharded online request drivers;
+* ``cache``    — the §4.2 compilation cache shared by every driver.
+
+``core.compiler.CompiledScript`` remains the stable facade over this
+package.
+"""
+
+from . import cache, drivers, joins, scalars, windows  # noqa: F401

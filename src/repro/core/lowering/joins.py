@@ -1,0 +1,108 @@
+"""LAST JOIN lowering — one point-in-time lookup, two executors.
+
+A LAST JOIN resolves, per left row, the newest right-table row with the
+same key and (point-in-time) order value <= the left row's timestamp.
+``resolve_last`` is the shared tail of that lookup — position validity,
+safe gather, and zero-masking of unmatched rows — so the offline batch
+path (binary search over a sorted snapshot) and the online path (range
+lookup against the pre-ranked store) cannot drift apart.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax.numpy as jnp
+
+from ...storage import timestore
+from ..expr import ColumnRef, Expr
+from ..plan import FeaturePlan, FeatureScript, LastJoinSpec
+from ..window import first_geq
+from .windows import INT_MIN
+
+__all__ = ["join_columns", "resolve_last", "offline_last_join",
+           "online_last_join"]
+
+
+def join_columns(plan: FeaturePlan, script: FeatureScript
+                 ) -> Dict[str, List[str]]:
+    """Columns each LAST JOIN must expose (referenced as table.col)."""
+    out: Dict[str, List[str]] = {}
+    for item in plan.scalar_items:
+        for e in _walk(item.expr):
+            if isinstance(e, ColumnRef) and e.table and \
+                    e.table != script.base_table:
+                out.setdefault(e.table, []).append(e.name)
+    for js in script.last_joins:
+        out.setdefault(js.right_table, [])
+    return out
+
+
+def _walk(e: Expr):
+    yield e
+    for attr in ("lhs", "rhs", "operand"):
+        child = getattr(e, attr, None)
+        if child is not None:
+            yield from _walk(child)
+    for a in getattr(e, "args", ()) or ():
+        yield from _walk(a)
+
+
+def resolve_last(right_table: str, cols: Dict[str, jnp.ndarray],
+                 wanted: List[str], pos, lo, n_rows: int
+                 ) -> Dict[str, jnp.ndarray]:
+    """Shared lookup tail: ``pos`` is the candidate row (already the
+    newest in-range position), valid iff it did not fall below ``lo``.
+    Unmatched rows read zeros plus a ``__matched__`` flag the scalar
+    layer can branch on."""
+    valid = pos >= lo
+    safe = jnp.clip(pos, 0, max(n_rows - 1, 0))
+    out: Dict[str, jnp.ndarray] = {}
+    for col in wanted:
+        v = jnp.take(cols[col], safe, axis=0)
+        out[f"{right_table}.{col}"] = jnp.where(valid, v,
+                                                jnp.zeros_like(v))
+    out[f"{right_table}.__matched__"] = valid
+    return out
+
+
+def offline_last_join(arrays, js: LastJoinSpec, script: FeatureScript,
+                      join_cols: Dict[str, List[str]]
+                      ) -> Dict[str, jnp.ndarray]:
+    """Batch executor: sort the right table by (key, order), binary-search
+    every base row."""
+    base = arrays[script.base_table]
+    right = arrays[js.right_table]
+    order = js.order_by or script.order_column
+    rk = right[js.right_key].astype(jnp.int32)
+    rts = right[order].astype(jnp.int32)
+    perm = jnp.lexsort((rts, rk))
+    rk_s = jnp.take(rk, perm)
+    rts_s = jnp.take(rts, perm)
+
+    lk = base[js.left_key].astype(jnp.int32)
+    lts = base[script.order_column].astype(jnp.int32)
+    lo = jnp.searchsorted(rk_s, lk, side="left").astype(jnp.int32)
+    hi = jnp.searchsorted(rk_s, lk, side="right").astype(jnp.int32)
+    if js.point_in_time:
+        pos = first_geq(rts_s, lts + 1, lo, hi) - 1
+    else:
+        pos = hi - 1
+    cols = {c: jnp.take(right[c], perm, axis=0)
+            for c in join_cols.get(js.right_table, [])}
+    return resolve_last(js.right_table, cols,
+                        join_cols.get(js.right_table, []), pos, lo,
+                        int(rk_s.shape[0]))
+
+
+def online_last_join(states, js: LastJoinSpec, join_cols, env, key, ts):
+    """Request executor: the store is pre-ranked by (key, ts), so the
+    newest in-range row is one range lookup."""
+    st = states[js.right_table]
+    jk = env.get(js.left_key)
+    jk = key if jk is None else jnp.asarray(jk, jnp.int32)
+    lo, hi = timestore.range_bounds(st, jk, jnp.int32(INT_MIN), ts)
+    pos = hi - 1
+    return resolve_last(js.right_table, st["cols"],
+                        join_cols.get(js.right_table, []), pos, lo,
+                        int(st["keys"].shape[0]))

@@ -1,0 +1,32 @@
+"""Scalar select-item lowering and output assembly.
+
+Scalar items (row-level expressions, §4.1(4)(5)) evaluate against an
+environment of base columns plus LAST-JOINed columns; both drivers build
+that env and call the same evaluator, then assemble outputs in SELECT
+order.  Defined once so a scalar feature cannot mean different things
+offline and online.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+
+from ..expr import eval_scalar
+from ..plan import FeaturePlan, FeatureScript
+
+__all__ = ["eval_scalar_items", "select_outputs"]
+
+
+def eval_scalar_items(plan: FeaturePlan, env: Dict[str, jnp.ndarray]
+                      ) -> Dict[str, jnp.ndarray]:
+    """Evaluate every scalar select item against ``env``."""
+    return {item.name: jnp.asarray(eval_scalar(item.expr, env))
+            for item in plan.scalar_items}
+
+
+def select_outputs(script: FeatureScript, out: Dict[str, jnp.ndarray]
+                   ) -> Dict[str, jnp.ndarray]:
+    """Preserve SELECT order (the Output plan node's contract)."""
+    return {it.name: out[it.name] for it in script.select}

@@ -1,0 +1,478 @@
+"""Window-fold lowering — the one place fold semantics are defined.
+
+Both executors consume the same pieces:
+
+* **leaf plumbing** (``unique_leaves`` / ``tree_fold`` / ``ordered_fold``)
+  — leaf-level CSE (§4.2 cycle binding) and the ordered log-depth fold
+  the online request path and pre-aggregation edges use;
+* **offline unit engine** (``lower_group_offline`` → ``GroupLowering``,
+  ``fold_units``) — the offline input is merged ONCE per window group,
+  (key, ts, rank, arrival)-sorted, cut into partition units by
+  ``core.skew`` (whole cold keys; hot keys time-sliced with halo rows),
+  bucketed into power-of-two width classes, and folded as dense
+  (units, rows) blocks: invertible leaves by an inclusive combine-scan +
+  prefix difference (§5.2 subtract-and-evict), idempotent leaves
+  (min/max) by sparse-table lookups, order-sensitive non-invertible
+  leaves by per-unit ordered segment trees (§5.1's structure).  Because
+  the unit plan is derived from the data alone, every schedule — fused,
+  serial, shard_map — folds bit-identical blocks; *where* a unit runs
+  never changes *what* it computes;
+* **online buffer machinery** (``gather_sources`` / ``merge_request`` /
+  ``gather_edges``) — fixed-size store gathers + the (ts, rank, arrival)
+  merge order shared with the offline sort, so a replayed history folds
+  the same rows in the same order as the batch path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...storage import timestore
+from ..expr import ColumnRef, collect_columns
+from ..functions import Aggregator, Leaf, build_aggregator
+from ..plan import FeaturePlan, FeatureScript, WindowAgg
+from ..preagg import PreAgg
+from .. import skew
+from ..window import (first_geq, prefix_window_fold, sparse_levels,
+                      sparse_query, tree_fold, tree_levels, tree_query)
+
+__all__ = [
+    "LoweredWindow", "lower_windows", "unique_leaves", "tree_fold",
+    "ordered_fold", "GroupLowering", "UnitBlock", "group_windows",
+    "lower_group_offline", "fold_units", "gather_sources",
+    "merge_request", "gather_edges", "INT_MIN",
+]
+
+INT_MIN = -(2**31) + 2
+
+
+# ---------------------------------------------------------------------------
+# Leaf plumbing (shared by every driver)
+# ---------------------------------------------------------------------------
+
+
+def unique_leaves(aggs: Sequence[Aggregator]) -> Dict[str, Leaf]:
+    """Leaf-level CSE (§4.2 cycle binding): aggregators over the same
+    column share one accumulator state."""
+    uniq: Dict[str, Leaf] = {}
+    for a in aggs:
+        for leaf in a.leaves:
+            uniq.setdefault(leaf.key, leaf)
+    return uniq
+
+
+def ordered_fold(leaves: Dict[str, Leaf], env) -> Dict[str, jnp.ndarray]:
+    """Fold every (deduplicated) leaf over the ordered buffer."""
+    return {k: tree_fold(leaf, leaf.lift(env))
+            for k, leaf in leaves.items()}
+
+
+# ---------------------------------------------------------------------------
+# Static per-window lowering (shared by offline + online)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class LoweredWindow:
+    """Everything the drivers need for one physical window."""
+
+    node: WindowAgg
+    aggs: List[Aggregator]
+    feature_names: List[str]
+    sources: Tuple[str, ...]        # union tables first, base LAST
+    needed_cols: Tuple[str, ...]    # agg-arg columns (value columns)
+    online_buffer: int
+    preagg: Optional[PreAgg]
+
+
+def lower_windows(plan: FeaturePlan, script: FeatureScript, ctx
+                  ) -> List[LoweredWindow]:
+    """Static analysis of every physical window node."""
+    out: List[LoweredWindow] = []
+    for node in plan.physical_windows:
+        spec = node.spec
+        aggs, names = [], []
+        for fname, call in node.agg_items:
+            aggs.append(build_aggregator(call, ctx))
+            names.append(fname)
+        needed = set()
+        for _, call in node.agg_items:
+            for a in call.args:
+                needed |= collect_columns(a)
+        needed.discard(spec.partition_by)
+        needed.discard(spec.order_by)
+        if spec.frame_rows:
+            buf = min(4096, spec.preceding + 1)
+        else:
+            buf = spec.maxsize or ctx.online_buffer
+        preagg = None
+        if node.long_window_bucket_ms > 0 and not spec.frame_rows:
+            preagg = PreAgg(
+                spec=spec,
+                leaves=unique_leaves(aggs),
+                bucket_ms=node.long_window_bucket_ms,
+                n_keys=ctx.cardinality(ColumnRef(spec.partition_by)),
+                window_ms=spec.preceding,
+                value_cols=tuple(sorted(needed)),
+            )
+        out.append(LoweredWindow(
+            node=node, aggs=aggs, feature_names=names,
+            sources=tuple(spec.union_tables) + (script.base_table,),
+            needed_cols=tuple(sorted(needed)),
+            online_buffer=buf, preagg=preagg))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# OFFLINE unit engine: host plan (merge, sort, units) + device fold
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class UnitBlock:
+    """One padded (units, rows) class of a window's partition units.
+
+    Units are bucketed by row count into power-of-two width classes so
+    block padding stays bounded (< 2x) even when unit sizes are skewed —
+    without the bucketing, one big unit would widen every unit's padded
+    row.  The class boundaries depend only on unit sizes (data-derived),
+    so every schedule buckets identically.
+    """
+
+    unit_ids: np.ndarray            # (U,) indices into the window's units
+    idx: np.ndarray                 # (U, R) flat-row index (n_flat = pad)
+    valid: np.ndarray               # (U, R) row present
+    emit: np.ndarray                # (U, R) row emits output
+    sizes: np.ndarray               # (U,) real rows per unit
+
+
+@dataclasses.dataclass
+class GroupLowering:
+    """One window GROUP lowered against concrete tables.
+
+    Windows sharing (partition column, order column, sources) — the
+    common shape of multi-window feature scripts — share ONE merged
+    sort, ONE §6.2 unit plan (halos cover the widest member window), ONE
+    gathered dense layout, and one lift/scan/tree-build per deduplicated
+    leaf; only the per-row frame bounds and the final prefix-difference /
+    tree queries are member-specific.  This is §6.1 window-parallelism
+    realized as data-pass sharing plus §4.2 cycle binding ACROSS windows.
+
+    ``signature`` keys the compilation cache: two table sets with equal
+    signatures re-use one traced program.
+    """
+
+    members: List[LoweredWindow]
+    cols: Dict[str, np.ndarray]     # flat sorted value columns
+    key: np.ndarray                 # flat sorted partition column (int32)
+    ts: np.ndarray                  # flat sorted order column (int32)
+    orig: np.ndarray                # flat sorted base-row index (n_base=none)
+    blocks: List[UnitBlock]
+    n_sliced_units: int
+    _dev: Optional[Dict[str, Any]] = None
+
+    @property
+    def signature(self) -> Tuple:
+        return (tuple(m.node.spec.canonical() for m in self.members),
+                tuple(b.idx.shape for b in self.blocks),
+                self.ts.shape[0], tuple(sorted(self.cols)))
+
+    def device_args(self) -> Dict[str, Any]:
+        """Device copies of the plan arrays (cached: repeated offline
+        calls over the same tables re-use resident buffers, mirroring
+        the per-store-identity cache on the online path)."""
+        if self._dev is None:
+            self._dev = {
+                "cols": {c: jnp.asarray(v) for c, v in self.cols.items()},
+                "ts": jnp.asarray(self.ts),
+                "orig": jnp.asarray(self.orig),
+                "blocks": [{"idx": jnp.asarray(b.idx),
+                            "valid": jnp.asarray(b.valid),
+                            "emit": jnp.asarray(b.emit)}
+                           for b in self.blocks],
+            }
+        return self._dev
+
+
+def group_windows(windows: Sequence[LoweredWindow]
+                  ) -> List[List[LoweredWindow]]:
+    """Group physical windows that can share one offline layout."""
+    groups: Dict[Tuple, List[LoweredWindow]] = {}
+    for w in windows:
+        spec = w.node.spec
+        k = (spec.partition_by, spec.order_by, w.sources)
+        groups.setdefault(k, []).append(w)
+    return list(groups.values())
+
+
+def lower_group_offline(members: Sequence[LoweredWindow],
+                        arrays: Dict[str, Dict[str, Any]],
+                        base_table: str, n_base: int,
+                        target_rows: int = 1024, max_slices: int = 8
+                        ) -> GroupLowering:
+    """Merge the group's sources, sort, and cut into partition units.
+
+    The sort key is (key, ts, rank, arrival) with the base table ranking
+    LAST among equal timestamps — the same tie-break the online store's
+    insert-after-peers policy reconstructs, which is what keeps replay
+    consistent (core.consistency).
+    """
+    w = members[0]
+    spec = w.node.spec
+    cols_needed = sorted(
+        set().union(*(m.needed_cols for m in members)) -
+        {spec.partition_by, spec.order_by})
+
+    key_p, ts_p, rank_p, arr_p, orig_p = [], [], [], [], []
+    col_p: Dict[str, List[np.ndarray]] = {c: [] for c in cols_needed}
+    for rank, tname in enumerate(w.sources):
+        cols = arrays[tname]
+        n_t = next(iter(cols.values())).shape[0]
+        is_base = tname == base_table and rank == len(w.sources) - 1
+        key_p.append(np.asarray(cols[spec.partition_by], np.int64))
+        ts_p.append(np.asarray(cols[spec.order_by], np.int64))
+        rank_p.append(np.full((n_t,), rank, np.int64))
+        arr_p.append(np.arange(n_t, dtype=np.int64))
+        orig_p.append(np.arange(n_t, dtype=np.int32) if is_base
+                      else np.full((n_t,), n_base, np.int32))
+        for c in cols_needed:
+            col_p[c].append(np.asarray(cols[c]))
+
+    key = np.concatenate(key_p)
+    ts = np.concatenate(ts_p)
+    rank = np.concatenate(rank_p)
+    arrival = np.concatenate(arr_p)
+    orig = np.concatenate(orig_p)
+    perm = np.lexsort((arrival, rank, ts, key))
+
+    key_s = key[perm]
+    ts_s = ts[perm].astype(np.int32)
+    orig_s = orig[perm]
+    cols_s = {c: np.concatenate(col_p[c])[perm] for c in cols_needed}
+
+    units = skew.plan_window_units(
+        key_s, ts_s,
+        constraints=[(m.node.spec.frame_rows,
+                      min(m.node.spec.preceding, 2**30))
+                     for m in members],
+        target_rows=target_rows, max_slices=max_slices)
+
+    n_flat = key_s.shape[0]
+    # bucket units into power-of-two width classes (bounded <2x padding)
+    classes: Dict[int, List[int]] = {}
+    for ui, u in enumerate(units):
+        r = 16
+        while r < u.n_rows:
+            r *= 2
+        classes.setdefault(r, []).append(ui)
+    if not classes:
+        classes = {16: []}
+
+    blocks: List[UnitBlock] = []
+    for r_pad in sorted(classes):
+        uids = classes[r_pad]
+        u_count = max(1, len(uids))
+        idx = np.full((u_count, r_pad), n_flat, np.int64)
+        valid = np.zeros((u_count, r_pad), bool)
+        emit = np.zeros((u_count, r_pad), bool)
+        sizes = np.zeros((len(uids),), np.int64)
+        for bi, ui in enumerate(uids):
+            u = units[ui]
+            n_u = u.n_rows
+            idx[bi, :n_u] = np.arange(u.lo, u.hi)
+            valid[bi, :n_u] = True
+            emit[bi, u.emit_lo - u.lo:n_u] = True
+            # emit only base-table rows (union rows are fold context)
+            emit[bi, :n_u] &= orig_s[u.lo:u.hi] < n_base
+            sizes[bi] = n_u
+        blocks.append(UnitBlock(
+            unit_ids=np.asarray(uids, np.int64), idx=idx, valid=valid,
+            emit=emit, sizes=sizes))
+
+    # one sentinel pad row keeps the device gather branch-free
+    ts_pad = np.concatenate([ts_s, [np.int32(2**31 - 1)]])
+    orig_pad = np.concatenate([orig_s, [np.int32(n_base)]])
+    cols_pad = {c: np.concatenate([v, np.zeros((1,), v.dtype)])
+                for c, v in cols_s.items()}
+    key_pad = np.concatenate([key_s.astype(np.int32), [np.int32(-1)]])
+    return GroupLowering(
+        members=list(members), cols=cols_pad, key=key_pad, ts=ts_pad,
+        orig=orig_pad, blocks=blocks,
+        n_sliced_units=sum(1 for u in units if u.sliced))
+
+
+def _member_bounds(spec, pos, ts_d, end, r: int):
+    """Per-row [start, end) frame bounds for one member window."""
+    if spec.frame_rows:
+        start = jnp.maximum(0, pos - jnp.int32(min(spec.preceding, r)))
+    else:
+        pre = min(spec.preceding, 2**30)
+        target = ts_d - jnp.int32(pre)
+        zeros = jnp.zeros((r,), jnp.int32)
+        start = jax.vmap(first_geq, in_axes=(0, 0, None, 0))(
+            ts_d, target, zeros, end)
+    m_end = end
+    if spec.maxsize:
+        start = jnp.maximum(start, m_end - jnp.int32(spec.maxsize))
+    if spec.instance_not_in_window:
+        m_end = jnp.minimum(m_end, pos)
+        start = jnp.minimum(start, m_end)
+    return start, m_end
+
+
+def fold_units(members: Sequence[LoweredWindow], dev: Dict[str, Any]
+               ) -> List[Dict[str, jnp.ndarray]]:
+    """Device-side fold of one group's (U, R) unit block.
+
+    The gather through ``idx`` IS the §6.2 halo expansion: a hot key's
+    later time slices pull their window context rows into the unit
+    in-trace.  Lifts, inclusive scans, and segment-tree builds happen
+    once per deduplicated leaf ACROSS the group; each member window then
+    pays only its own bounds + prefix-difference / tree query.  Returns
+    each member's folded leaf states per (unit, row) — finalization
+    happens in the driver.
+    """
+    spec0 = members[0].node.spec
+    idx = dev["idx"]
+    valid = dev["valid"]
+    u, r = idx.shape
+    env = {c: jnp.take(v, idx, axis=0) for c, v in dev["cols"].items()}
+    ts_d = jnp.take(dev["ts"], idx)                      # (U, R)
+    env["__valid__"] = valid
+    env[spec0.order_by] = ts_d
+
+    pos = jnp.broadcast_to(jnp.arange(r, dtype=jnp.int32)[None, :], (u, r))
+    end = pos + 1
+    bounds = [_member_bounds(m.node.spec, pos, ts_d, end, r)
+              for m in members]
+
+    # one lift + scan / tree build per deduplicated leaf across members
+    group_leaves: Dict[str, Leaf] = {}
+    for m in members:
+        for k, leaf in unique_leaves(m.aggs).items():
+            group_leaves.setdefault(k, leaf)
+    zeros_r = jnp.zeros((r,), jnp.int32)
+    shared: Dict[str, Any] = {}
+    for k, leaf in group_leaves.items():
+        lifted = leaf.lift(env)                          # (U, R, *S)
+        if leaf.invertible:
+            # §5.2 subtract-and-evict: inclusive combine-scan + prefix
+            # difference, per unit (seg_start=0: one segment per unit)
+            shared[k] = jax.lax.associative_scan(leaf.combine, lifted,
+                                                 axis=1)
+        elif leaf.idempotent:
+            # min/max: sparse table — any window in two lookups
+            shared[k] = jax.vmap(
+                lambda lf, leaf=leaf: sparse_levels(leaf, lf))(lifted)
+        else:
+            shared[k] = jax.vmap(
+                lambda lf, leaf=leaf: tuple(tree_levels(leaf, lf)))(lifted)
+
+    out: List[Dict[str, jnp.ndarray]] = []
+    for m, (start, m_end) in zip(members, bounds):
+        folded: Dict[str, jnp.ndarray] = {}
+        for k, leaf in unique_leaves(m.aggs).items():
+            if leaf.invertible:
+                folded[k] = jax.vmap(
+                    lambda inc, s, e, leaf=leaf:
+                    prefix_window_fold(leaf, inc, s, e, zeros_r)
+                )(shared[k], start, m_end)
+            elif leaf.idempotent:
+                folded[k] = jax.vmap(
+                    lambda tb, s, e, leaf=leaf: sparse_query(leaf, tb, s, e)
+                )(shared[k], start, m_end)
+            else:
+                folded[k] = jax.vmap(
+                    lambda lv, s, e, leaf=leaf: tree_query(leaf, lv, s, e)
+                )(shared[k], start, m_end)
+        out.append(folded)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# ONLINE buffer machinery (request mode against the live store)
+# ---------------------------------------------------------------------------
+
+
+def gather_sources(states, w: LoweredWindow, key, ts, t0
+                   ) -> Tuple[Dict[str, jnp.ndarray], jnp.ndarray,
+                              jnp.ndarray, jnp.ndarray]:
+    """Fixed-size merged buffer of all window rows before the request."""
+    bufs = []
+    for rank, tname in enumerate(w.sources):
+        st = states[tname]
+        lo, hi = timestore.range_bounds(st, key, t0, ts)
+        cols, ts_arr, valid = timestore.gather_window(
+            st, lo, hi, w.online_buffer, list(w.needed_cols))
+        bufs.append((cols, ts_arr, valid, jnp.full_like(ts_arr, rank)))
+    cols = {c: jnp.concatenate([b[0][c] for b in bufs])
+            for c in w.needed_cols}
+    ts_all = jnp.concatenate([b[1] for b in bufs])
+    valid = jnp.concatenate([b[2] for b in bufs])
+    rank = jnp.concatenate([b[3] for b in bufs])
+    return cols, ts_all, valid, rank
+
+
+def merge_request(w: LoweredWindow, cols, ts_all, valid, rank, key, ts,
+                  values):
+    """Append the (virtually inserted) request row, sort by (ts, rank),
+    apply the ROWS-frame cap, return the env for leaf folds."""
+    spec = w.node.spec
+    n_src = len(w.sources)
+    req_valid = not spec.instance_not_in_window
+    cols = {c: jnp.concatenate(
+        [v, jnp.asarray(values.get(c, 0.0), v.dtype)[None]])
+        for c, v in cols.items()}
+    ts_all = jnp.concatenate([ts_all, jnp.asarray(ts, jnp.int32)[None]])
+    valid = jnp.concatenate(
+        [valid, jnp.asarray(req_valid, bool)[None]])
+    rank = jnp.concatenate(
+        [rank, jnp.full((1,), n_src, jnp.int32)])
+
+    sort_ts = jnp.where(valid, ts_all, jnp.int32(2**31 - 1))
+    pos0 = jnp.arange(ts_all.shape[0], dtype=jnp.int32)
+    perm = jnp.lexsort((pos0, rank, sort_ts))
+    env = {c: jnp.take(v, perm) for c, v in cols.items()}
+    keep = jnp.take(valid, perm)
+
+    if spec.frame_rows:
+        # valid rows sort before invalid (ts=MAX) rows, so the newest
+        # (preceding+1) valid rows occupy positions [n_keep-p-1, n_keep)
+        n_keep = jnp.sum(keep.astype(jnp.int32))
+        pos = jnp.arange(keep.shape[0], dtype=jnp.int32)
+        keep = keep & (pos >= n_keep - jnp.int32(spec.preceding + 1))
+    if spec.maxsize:
+        n_keep = jnp.sum(keep.astype(jnp.int32))
+        pos = jnp.arange(keep.shape[0], dtype=jnp.int32)
+        keep = keep & (pos >= n_keep - jnp.int32(spec.maxsize))
+    env["__valid__"] = keep
+    env[spec.order_by] = jnp.take(ts_all, perm)
+    return env
+
+
+def gather_edges(states, w: LoweredWindow, key, t0, t1):
+    """Raw rows with ts in [t0, t1) across sources (pre-agg edge
+    buckets, §5.1)."""
+    bufs = []
+    for rank, tname in enumerate(w.sources):
+        st = states[tname]
+        lo, hi = timestore.range_bounds(st, key, t0, t1 - 1)
+        cols, ts_arr, valid = timestore.gather_window(
+            st, lo, hi, w.preagg.max_bucket_rows, list(w.needed_cols))
+        bufs.append((cols, ts_arr, valid, jnp.full_like(ts_arr, rank)))
+    cols = {c: jnp.concatenate([b[0][c] for b in bufs])
+            for c in w.needed_cols}
+    ts_all = jnp.concatenate([b[1] for b in bufs])
+    valid = jnp.concatenate([b[2] for b in bufs])
+    rank = jnp.concatenate([b[3] for b in bufs])
+    sort_ts = jnp.where(valid, ts_all, jnp.int32(2**31 - 1))
+    pos0 = jnp.arange(ts_all.shape[0], dtype=jnp.int32)
+    perm = jnp.lexsort((pos0, rank, sort_ts))
+    env = {c: jnp.take(v, perm) for c, v in cols.items()}
+    env["__valid__"] = jnp.take(valid, perm)
+    return env

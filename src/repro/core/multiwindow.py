@@ -1,39 +1,34 @@
-"""Multi-window parallel optimization (§6.1).
+"""Multi-window parallel optimization (§6.1) — schedule shims.
 
-The plan builder (plan.py) already inserts the paper's node pair — a
+The plan builder (plan.py) inserts the paper's node pair — a
 ``SimpleProject`` that injects the ``__idx__`` column at the branches'
 nearest common ancestor, and a ``ConcatJoin`` that re-aligns branch
-outputs by that index (a LAST JOIN on a unique key degenerates to a
-gather, which is how the compiler executes it).
+outputs by that index.  The *execution policies* now live in
+``core.lowering.drivers`` as first-class offline schedules:
 
-This module provides the *execution policy*: run the independent
-``WindowAgg`` branches as one fused jit program (XLA schedules the
-independent subgraphs concurrently across cores — the TPU/host analogue
-of the paper's thread-level window parallelism), or serially with a hard
-dependency barrier between branches (the baseline the paper compares
-against).
+* fused   (``CompiledScript.offline``)          — all branches, one jit;
+* serial  (``CompiledScript.offline_serial``)   — per-branch jit + host
+  barrier, the baseline the paper compares against;
+* sharded (``CompiledScript.offline_sharded``)  — branches' partition
+  units fanned out over a device mesh.
 
-Where the policy is consumed today: ``run_parallel`` is simply the fused
-``CompiledScript.offline`` path (the default everywhere — examples,
-``benchmarks/bench_offline.py``, consistency replay), and the online
-drivers inherit the same fusion because ``_online_fn`` traces every
-window branch into one jit program — including per shard under
-``online_sharded_batch``'s shard_map.  ``run_serial`` exists only as the
-measured baseline in ``benchmarks/bench_offline.py``.
+This module keeps the original helper API as thin delegates for the
+benchmarks and tests that consume it (``benchmarks/bench_offline.py``,
+ConcatJoin alignment checks).
 """
 
 from __future__ import annotations
 
-from typing import Dict, List, Sequence
+from typing import Dict, List
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from .compiler import CompiledScript
+from .lowering import drivers as _drv
 from .types import Table
 
-__all__ = ["run_parallel", "run_serial", "branch_outputs"]
+__all__ = ["run_parallel", "run_serial", "run_reference_serial",
+           "branch_outputs"]
 
 
 def branch_outputs(cs: CompiledScript, tables: Dict[str, Table]
@@ -41,15 +36,8 @@ def branch_outputs(cs: CompiledScript, tables: Dict[str, Table]
     """Per-branch feature dicts (used by tests to check ConcatJoin
     alignment: every branch returns features in base-row order thanks to
     the injected index column)."""
-    arrays = {name: t.device_columns() for name, t in tables.items()}
-    n_base = len(tables[cs.script.base_table])
-    outs = []
-    for w in cs.windows:
-        feats = jax.jit(lambda a, w=w: cs._offline_window(a, w, n_base)
-                        )(arrays)
-        outs.append({name: np.asarray(v)
-                     for name, v in zip(w.feature_names, feats)})
-    return outs
+    return [_drv.offline_branch(cs, tables, wi)
+            for wi in range(len(cs.windows))]
 
 
 def run_parallel(cs: CompiledScript, tables: Dict[str, Table]
@@ -58,35 +46,18 @@ def run_parallel(cs: CompiledScript, tables: Dict[str, Table]
     return cs.offline(tables)
 
 
-_BRANCH_JIT_CACHE: Dict = {}
-
-
-def _branch_fn(cs: CompiledScript, wi: int, n_base: int):
-    key = (id(cs), wi, n_base)
-    fn = _BRANCH_JIT_CACHE.get(key)
-    if fn is None:
-        w = cs.windows[wi]
-        fn = jax.jit(lambda a: cs._offline_window(a, w, n_base))
-        _BRANCH_JIT_CACHE[key] = fn
-    return fn
-
-
 def run_serial(cs: CompiledScript, tables: Dict[str, Table]
                ) -> Dict[str, np.ndarray]:
-    """Baseline: execute branches one-by-one with a host barrier between
-    them (mimics engines that serialize window operators).  Branch
-    programs are jit-cached — the measured gap is scheduling, not
-    re-tracing."""
-    arrays = {name: t.device_columns() for name, t in tables.items()}
-    n_base = len(tables[cs.script.base_table])
-    out: Dict[str, np.ndarray] = {}
-    for wi, w in enumerate(cs.windows):
-        feats = _branch_fn(cs, wi, n_base)(arrays)
-        jax.block_until_ready(feats)  # hard barrier
-        for name, v in zip(w.feature_names, feats):
-            out[name] = np.asarray(v)
-    # scalars via the fused path (cheap)
-    full = cs.offline(tables)
-    for it in cs.plan.scalar_items:
-        out[it.name] = full[it.name]
-    return out
+    """Serialized schedule of the unified engine: window groups
+    one-by-one with a host barrier between them (bit-exact vs
+    ``run_parallel``)."""
+    return cs.offline_serial(tables)
+
+
+def run_reference_serial(cs: CompiledScript, tables: Dict[str, Table]
+                         ) -> Dict[str, np.ndarray]:
+    """The seed-algorithm baseline: per-branch in-trace merge + device
+    lexsort + global folds, serialized with host barriers (mimics
+    engines that serialize window operators; float results match the
+    unit engine to reduction-order tolerance)."""
+    return _drv.offline_reference_serial(cs, tables)

@@ -33,7 +33,7 @@ import numpy as np
 
 from ..storage.timestore import next_pow2
 from .functions import Leaf
-from .window import WindowSpec, segmented_inclusive_scan
+from .window import WindowSpec, tree_fold
 
 __all__ = ["PreAgg"]
 
@@ -56,7 +56,6 @@ class PreAgg:
         self.n_coarse = max(4, self.window_ms // self.coarse_ms + 4)
         # static count of coarse buckets a window can span
         self.max_coarse_q = self.window_ms // self.coarse_ms + 2
-        self._update_jit = jax.jit(self._update_impl)
         self._update_many_jit = jax.jit(self._update_many_impl)
         # vmapped over a leading shard dim (see update_many_sharded)
         self._update_sharded_jit = jax.jit(jax.vmap(
@@ -120,46 +119,38 @@ class PreAgg:
 
     # ----------------------------------------------------------------- update
     def update(self, state, key, ts, values):
-        return self._update_jit(state, key, ts, values)
+        """Fold ONE ingested row into the buckets.
 
-    def _update_impl(self, state, key, ts, values):
-        env = {c: jnp.asarray(values.get(c, 0.0), jnp.float32)
-               for c in self.value_cols}
-        env[self.spec.order_by] = jnp.asarray(ts, jnp.int32)
-        key = jnp.clip(key, 0, self.n_keys - 1)
-
-        fine_id = ts // jnp.int32(self.bucket_ms)
-        coarse_id = ts // jnp.int32(self.coarse_ms)
-        out = dict(state)
-        out["fine"] = dict(state["fine"])
-        out["coarse"] = dict(state["coarse"])
-
-        for k, leaf in self.leaves.items():
-            lifted = leaf.lift(env)  # scalar state
-            out["fine"][k] = _fold_slot(
-                state["fine"][k], state["fine_epoch"], leaf, lifted, key,
-                fine_id, self.n_fine)
-            out["coarse"][k] = _fold_slot(
-                state["coarse"][k], state["coarse_epoch"], leaf, lifted, key,
-                coarse_id, self.n_coarse)
-        out["fine_epoch"] = state["fine_epoch"].at[
-            key, fine_id % self.n_fine].set(fine_id)
-        out["coarse_epoch"] = state["coarse_epoch"].at[
-            key, coarse_id % self.n_coarse].set(coarse_id)
-        return out
+        The scalar path IS the batched path with B=1: both run the same
+        ordered cur-seeded segment fold (``_update_many_impl``), so a
+        sequence of scalar updates and one batched update of the same
+        in-order rows produce bitwise-identical bucket states — there is
+        no second single-row fold implementation to drift from
+        (tests/test_online_batch.py::test_preagg_update_many_equals_sequential).
+        """
+        return self.update_many(
+            state, [int(key)], [int(ts)],
+            {c: [np.float32(values[c])] for c in self.value_cols
+             if c in values})
 
     # -------------------------------------------------------- batched update
     def update_many(self, state, keys, ts, values: Dict[str, Any]):
-        """Fold M ingested rows into the buckets with one segment-fold +
-        one scatter per level (vs M sequential ``update`` scatters).
+        """Fold M ingested rows into the buckets with one ordered
+        segment-fold + one scatter per level (vs M sequential ``update``
+        dispatches).
 
-        Per (key, bucket) the rows are combined in (ts, arrival) order —
-        identical to sequential updates whenever rows arrive in timestamp
-        order (the binlog/bulk-load case).  When a batch spans more
-        bucket ids than the ring capacity, the newest bucket aliasing
-        each slot wins (same steady state the sequential epoch check
-        converges to).  Batches are padded to the next power of two to
-        bound jit recompiles.
+        Per (key, bucket) the rows are combined in (ts, arrival) order
+        by a cur-seeded left fold — each group's running state starts
+        from the slot's pre-batch value (identity if stale), exactly the
+        combine sequence M sequential updates would perform — so results
+        are BITWISE identical to sequential updates whenever rows arrive
+        in timestamp order (the binlog/bulk-load case; out-of-order
+        arrivals that regress a ring slot's bucket id within one batch
+        are the documented exception).  When a batch spans more bucket
+        ids than the ring capacity, the newest bucket aliasing each slot
+        wins (same steady state the sequential epoch check converges
+        to).  Batches are padded to the next power of two to bound jit
+        recompiles.
         """
         keys = np.asarray(keys, np.int32)
         ts = np.asarray(ts, np.int32)
@@ -212,16 +203,16 @@ class PreAgg:
                 info["win"] = info["win"] & jnp.take(owned, kk)
 
         out = dict(state)
-        out["fine"] = dict(state["fine"])
-        out["coarse"] = dict(state["coarse"])
-        for k, leaf in self.leaves.items():
-            lf = jnp.take(leaf.lift(env), perm, axis=0)
-            out["fine"][k] = _scatter_level(
-                state["fine"][k], state["fine_epoch"], leaf, lf, fine_info,
-                self.n_keys)
-            out["coarse"][k] = _scatter_level(
-                state["coarse"][k], state["coarse_epoch"], leaf, lf,
-                coarse_info, self.n_keys)
+        lifted = {k: jnp.take(leaf.lift(env), perm, axis=0)
+                  for k, leaf in self.leaves.items()}
+        out["fine"] = _scatter_level(
+            state["fine"], state["fine_epoch"], self.leaves, lifted, k_s,
+            ts_s // jnp.int32(self.bucket_ms), fine_info, self.n_keys,
+            self.n_fine)
+        out["coarse"] = _scatter_level(
+            state["coarse"], state["coarse_epoch"], self.leaves, lifted,
+            k_s, ts_s // jnp.int32(self.coarse_ms), coarse_info,
+            self.n_keys, self.n_coarse)
         out["fine_epoch"] = _scatter_epoch(state["fine_epoch"], fine_info,
                                            self.n_keys)
         out["coarse_epoch"] = _scatter_epoch(state["coarse_epoch"],
@@ -410,19 +401,54 @@ def _group_info(k_s, b_s, capacity: int, n_keys: int):
     }
 
 
-def _scatter_level(buckets, epochs, leaf: Leaf, lifted_sorted, info,
-                   n_keys: int):
-    """One scatter of per-(key, bucket) group totals into a bucket level."""
-    incl = segmented_inclusive_scan(leaf, lifted_sorted, info["seg_flag"])
-    total = jnp.take(incl, info["perm2"], axis=0)  # group fold at is_last
-    k_c = jnp.clip(info["keys"], 0, n_keys - 1)
-    cur = buckets[k_c, info["slots"]]
-    stale = epochs[k_c, info["slots"]] != info["buckets"]
-    cur = jnp.where(_b(stale, cur),
-                    jnp.broadcast_to(leaf.identity(), cur.shape), cur)
-    newv = leaf.combine(cur, total)
+def _scatter_level(buckets: Dict[str, Any], epochs, leaves: Dict[str, Leaf],
+                   lifted_sorted: Dict[str, Any], k_s, b_s, info,
+                   n_keys: int, capacity: int) -> Dict[str, Any]:
+    """Ordered cur-seeded fold + one scatter for one bucket level.
+
+    A single ``lax.scan`` walks the (key, bucket)-sorted rows carrying
+    every leaf's running state; at each group start the carry re-seeds
+    from the slot's pre-batch value (identity when the epoch says the
+    slot is stale).  The emitted value at a group's last row is then the
+    exact left fold ``((cur ⊕ x1) ⊕ x2) ⊕ ...`` a row-by-row sequence of
+    updates would produce — bitwise, not just algebraically — and one
+    ``.set`` scatter per leaf installs the winners.
+    """
+    keys = list(leaves)
+    k_c = jnp.clip(k_s, 0, n_keys - 1)
+    slot = b_s % jnp.int32(capacity)
+    seeds = []
+    for k in keys:
+        leaf = leaves[k]
+        cur = buckets[k][k_c, slot]
+        stale = epochs[k_c, slot] != b_s
+        seeds.append(jnp.where(_b(stale, cur),
+                               jnp.broadcast_to(leaf.identity(), cur.shape),
+                               cur))
+
+    def step(carry, x):
+        flag, seed, lf = x
+        new = []
+        for acc, sd, l, k in zip(carry, seed, lf, keys):
+            a = jnp.where(_b(flag, acc), sd, acc)
+            new.append(leaves[k].combine(a, l))
+        new = tuple(new)
+        return new, new
+
+    init = tuple(jnp.broadcast_to(leaves[k].identity(),
+                                  lifted_sorted[k].shape[1:])
+                 for k in keys)
+    xs = (info["seg_flag"], tuple(seeds),
+          tuple(lifted_sorted[k] for k in keys))
+    _, ys = jax.lax.scan(step, init, xs)
+
     row_idx = jnp.where(info["win"], info["keys"], jnp.int32(n_keys))
-    return buckets.at[row_idx, info["slots"]].set(newv, mode="drop")
+    out = {}
+    for k, y in zip(keys, ys):
+        folded = jnp.take(y, info["perm2"], axis=0)   # group fold at is_last
+        out[k] = buckets[k].at[row_idx, info["slots"]].set(folded,
+                                                           mode="drop")
+    return out
 
 
 def _scatter_epoch(epochs, info, n_keys: int):
@@ -431,20 +457,8 @@ def _scatter_epoch(epochs, info, n_keys: int):
                                                  mode="drop")
 
 
-def _fold_slot(buckets, epochs, leaf: Leaf, lifted, key, bucket_id,
-               capacity):
-    slot = bucket_id % jnp.int32(capacity)
-    cur = buckets[key, slot]
-    stale = epochs[key, slot] != bucket_id
-    cur = jnp.where(_b(stale, cur),
-                    jnp.broadcast_to(leaf.identity(), cur.shape), cur)
-    return buckets.at[key, slot].set(leaf.combine(cur, lifted))
-
-
 def _fold_env(leaf: Leaf, env) -> jnp.ndarray:
-    from .compiler import _tree_fold
-
-    return _tree_fold(leaf, leaf.lift(env))
+    return tree_fold(leaf, leaf.lift(env))
 
 
 def _append_request(env, spec: WindowSpec, value_cols, values, ts):

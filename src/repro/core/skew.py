@@ -17,6 +17,22 @@ partitions, out of order).  The paper's alternative, reproduced here:
      #keys to #keys × quantile.
   5. **Compute** windows per partition; emit only EXPANDED_ROW=False rows.
 
+Two layers live here:
+
+* the **unit planner** (``plan_window_units`` / ``assign_units_lpt``) —
+  the production path.  It turns one (key, ts)-sorted window input into
+  *partition units* (whole cold keys; hot keys split into time slices
+  with halo rows), the schedulable atoms of the offline engine
+  (``core.lowering.drivers``).  Units are derived from the data alone —
+  never from the device count — which is what makes the sharded offline
+  driver bit-exact against the single-device one: every executor folds
+  the *same* units with the same padded shapes, the mesh only changes
+  *where* each unit runs.  The halo gather itself happens device-side,
+  inside the jitted fold (``lowering.windows.gather_units``).
+* the **legacy reference pipeline** (``skewed_window_fold``) — a
+  host-side replica of the paper's five steps around an arbitrary
+  ``fold_fn``, kept as an executable specification.
+
 ``skewed_window_fold`` is the whole pipeline; tests assert it matches the
 unpartitioned fold bit-for-bit.
 """
@@ -31,7 +47,9 @@ import numpy as np
 from .hll import HyperLogLog
 
 __all__ = ["SkewPlan", "plan_partitions", "expand_partitions",
-           "skewed_window_fold", "detect_skew"]
+           "skewed_window_fold", "detect_skew",
+           "Unit", "plan_time_slices", "plan_window_units",
+           "assign_units_lpt"]
 
 
 @dataclasses.dataclass
@@ -99,6 +117,136 @@ def expand_partitions(keys: np.ndarray, ts: np.ndarray,
             idx_all.append(base[halo])
             part_all.append(np.full(int(halo.sum()), q, np.int32))
     return np.concatenate(idx_all), np.concatenate(part_all)
+
+
+# ---------------------------------------------------------------------------
+# Unit planner — the production §6.2 path (consumed by core.lowering)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Unit:
+    """One schedulable partition unit of a window input.
+
+    ``lo``/``hi`` index the (key, ts)-sorted flat row array; rows in
+    [lo, emit_lo) are halo (EXPANDED_ROW=True — folded for context, never
+    emitted), rows in [emit_lo, hi) are the unit's own slice.  A cold key
+    is one unit with ``lo == emit_lo`` (no halo); a hot key contributes
+    one unit per time slice.
+    """
+
+    lo: int
+    emit_lo: int
+    hi: int
+    sliced: bool = False
+
+    @property
+    def n_rows(self) -> int:
+        return self.hi - self.lo
+
+
+def plan_time_slices(ts_run: np.ndarray, max_slices: int,
+                     target_rows: int) -> np.ndarray:
+    """Timestamp-percentile boundaries for one hot key's sorted run.
+
+    Returns the (possibly empty) increasing boundary array; a row belongs
+    to slice q iff ``#(boundaries <= ts) == q`` (``side="right"``, the
+    same convention as ``assign_part_ids``).  Degenerate inputs collapse
+    gracefully: duplicate percentiles are deduplicated, and boundaries at
+    or below the run's first timestamp are dropped (they would create an
+    empty leading slice) — so ``quantile`` larger than the number of
+    distinct timestamps, or an all-one-timestamp run, simply yields
+    fewer (or zero) slices.
+    """
+    n = ts_run.shape[0]
+    q = int(min(max_slices, -(-n // max(1, target_rows))))
+    if q <= 1 or n == 0:
+        return np.empty((0,), ts_run.dtype)
+    cut_pos = (np.arange(1, q, dtype=np.int64) * n) // q
+    bounds = np.unique(ts_run[cut_pos])
+    return bounds[bounds > ts_run[0]]
+
+
+def _run_units(lo: int, hi: int, ts_run: np.ndarray,
+               constraints: Sequence[Tuple[bool, int]], max_slices: int,
+               target_rows: int) -> List[Unit]:
+    """Units for one key's sorted run occupying flat rows [lo, hi).
+
+    ``constraints`` is one (frame_rows, preceding) pair per window
+    sharing this layout; a slice's halo must cover the widest of them.
+    """
+    n = hi - lo
+    if n <= target_rows or max_slices <= 1:
+        return [Unit(lo, lo, hi)]
+    bounds = plan_time_slices(ts_run, max_slices, target_rows)
+    if bounds.shape[0] == 0:
+        return [Unit(lo, lo, hi)]
+    # slice starts: first row with ts >= boundary (boundary rows open the
+    # upper slice — side="right" of assign_part_ids)
+    starts = np.searchsorted(ts_run, bounds, side="left").astype(np.int64)
+    starts = np.unique(starts)
+    starts = starts[(starts > 0) & (starts < n)]
+    edges = np.concatenate([[0], starts, [n]])
+    units: List[Unit] = []
+    for s0, s1 in zip(edges[:-1], edges[1:]):
+        halo = int(s0)
+        for frame_rows, preceding in constraints:
+            if frame_rows:
+                halo = min(halo, max(0, int(s0) - int(preceding)))
+            else:
+                halo = min(halo, int(np.searchsorted(
+                    ts_run, ts_run[s0] - preceding, side="left")))
+        units.append(Unit(lo + halo, lo + int(s0), lo + int(s1),
+                          sliced=True))
+    # window-data augmentation can defeat itself: if halos drag whole
+    # prefixes along (window span ~ run span), slicing buys no padding
+    # reduction and only duplicates work — fall back to one unit
+    if max(u.n_rows for u in units) >= n:
+        return [Unit(lo, lo, hi)]
+    return units
+
+
+def plan_window_units(key_sorted: np.ndarray, ts_sorted: np.ndarray,
+                      frame_rows=False, preceding: int = 0,
+                      target_rows: int = 1024, max_slices: int = 8,
+                      constraints: Optional[Sequence[Tuple[bool, int]]]
+                      = None) -> List[Unit]:
+    """Partition units of one window layout's (key, ts)-sorted input.
+
+    ``constraints`` carries (frame_rows, preceding) for every window
+    sharing the layout (defaults to the single pair given positionally).
+    Deterministic in the data + parameters only (never the device
+    count): the bit-exactness contract of ``offline_sharded`` rests on
+    every executor folding this same unit list.
+    """
+    if constraints is None:
+        constraints = [(frame_rows, preceding)]
+    n = key_sorted.shape[0]
+    if n == 0:
+        return []
+    run_start = np.flatnonzero(np.concatenate(
+        [[True], key_sorted[1:] != key_sorted[:-1]]))
+    run_end = np.concatenate([run_start[1:], [n]])
+    units: List[Unit] = []
+    for lo, hi in zip(run_start.tolist(), run_end.tolist()):
+        units.extend(_run_units(lo, hi, ts_sorted[lo:hi], constraints,
+                                max_slices, target_rows))
+    return units
+
+
+def assign_units_lpt(sizes: Sequence[int], n_shards: int) -> np.ndarray:
+    """Greedy LPT unit -> shard assignment (largest unit first onto the
+    least-loaded shard; ties break on lowest unit id / shard id, so the
+    assignment is deterministic)."""
+    sizes = np.asarray(sizes, np.int64)
+    owner = np.zeros(sizes.shape[0], np.int32)
+    load = np.zeros(max(1, n_shards), np.int64)
+    order = np.argsort(-sizes, kind="stable")
+    for u in order:
+        s = int(np.argmin(load))
+        owner[u] = s
+        load[s] += int(sizes[u])
+    return owner
 
 
 def skewed_window_fold(keys: np.ndarray, ts: np.ndarray,

@@ -36,7 +36,18 @@ __all__ = ["parse", "ParseError"]
 
 
 class ParseError(ValueError):
-    pass
+    """Parse failure with the source position of the offending token.
+
+    ``pos`` is a character offset into the script text; every parser
+    error path sets it, so malformed scripts fail with a locatable
+    diagnostic instead of an internal error.
+    """
+
+    def __init__(self, msg: str, pos: Optional[int] = None):
+        if pos is not None:
+            msg = f"{msg} (at position {pos})"
+        super().__init__(msg)
+        self.pos = pos
 
 
 _TOKEN_RE = re.compile(
@@ -60,13 +71,15 @@ _KEYWORDS = {
 }
 
 
-def _tokenize(text: str) -> List[Tuple[str, str]]:
+def _tokenize(text: str) -> Tuple[List[Tuple[str, str]], List[int]]:
     out: List[Tuple[str, str]] = []
+    positions: List[int] = []
     pos = 0
     while pos < len(text):
         m = _TOKEN_RE.match(text, pos)
         if not m:
-            raise ParseError(f"lex error at {text[pos:pos+24]!r}")
+            raise ParseError(f"lex error at {text[pos:pos+24]!r}", pos=pos)
+        start = pos
         pos = m.end()
         kind = m.lastgroup
         if kind in ("ws", "comment"):
@@ -76,13 +89,15 @@ def _tokenize(text: str) -> List[Tuple[str, str]]:
             out.append(("kw", val.lower()))
         else:
             out.append((kind, val))
+        positions.append(start)
     out.append(("eof", ""))
-    return out
+    positions.append(len(text))
+    return out, positions
 
 
 class _Parser:
     def __init__(self, text: str, time_unit: str = "ms"):
-        self.toks = _tokenize(text)
+        self.toks, self.poss = _tokenize(text)
         self.i = 0
         if time_unit not in ("ms", "s"):
             raise ParseError("time_unit must be 'ms' or 's'")
@@ -110,11 +125,15 @@ class _Parser:
             return v
         return None
 
+    def cur_pos(self, k: int = 0) -> int:
+        return self.poss[min(self.i + k, len(self.poss) - 1)]
+
     def expect(self, kind: str, val: Optional[str] = None) -> str:
         got = self.accept(kind, val)
         if got is None:
             k, v = self.peek()
-            raise ParseError(f"expected {val or kind}, got {v!r}")
+            raise ParseError(f"expected {val or kind}, got {v!r}",
+                             pos=self.cur_pos())
         return got
 
     def name(self) -> str:
@@ -203,7 +222,7 @@ class _Parser:
                     self.expect("op", ")")
                 return FuncCall(v.lower(), tuple(args))
             return ColumnRef(v)
-        raise ParseError(f"unexpected token {v!r}")
+        raise ParseError(f"unexpected token {v!r}", pos=self.cur_pos())
 
     # -- statement ----------------------------------------------------------
     def parse_script(self) -> FeatureScript:
@@ -220,11 +239,15 @@ class _Parser:
 
         windows: Dict[str, WindowSpec] = {}
         if self.accept("kw", "window"):
-            name, spec = self._window_def()
-            windows[name] = spec
-            while self.accept("op", ","):
+            while True:
+                wpos = self.cur_pos()
                 name, spec = self._window_def()
+                if name in windows:
+                    raise ParseError(
+                        f"duplicate window alias {name!r}", pos=wpos)
                 windows[name] = spec
+                if not self.accept("op", ","):
+                    break
 
         options: Dict[str, str] = {}
         if self.accept("kw", "options"):
@@ -254,14 +277,18 @@ class _Parser:
                              order_column=order_col)
 
     def _select_item(self) -> Tuple[Optional[str], Expr]:
+        item_pos = self.cur_pos()
         e = self.expr()
         # fn(...) OVER w
         if self.accept("kw", "over"):
             wname = self.name()
             if not isinstance(e, FuncCall):
-                raise ParseError("OVER must follow a function call")
+                raise ParseError("OVER must follow a function call",
+                                 pos=item_pos)
             if e.name not in AGG_FUNCTIONS:
-                raise ParseError(f"{e.name!r} is not an aggregate function")
+                raise ParseError(
+                    f"{e.name!r} is not an aggregate function",
+                    pos=item_pos)
             params = tuple(a.value for a in e.args if isinstance(a, Literal))
             e = AggCall(fn=e.name, args=e.args, window=wname, params=params)
         name = None
@@ -281,11 +308,13 @@ class _Parser:
             e = self._atom()
             order_by = e.name if isinstance(e, ColumnRef) else str(e)
         self.expect("kw", "on")
+        cpos = self.cur_pos()
         cond = self.expr()
         if not (isinstance(cond, BinaryOp) and cond.op in ("=", "==")
                 and isinstance(cond.lhs, ColumnRef)
                 and isinstance(cond.rhs, ColumnRef)):
-            raise ParseError("LAST JOIN condition must be left.k = right.k")
+            raise ParseError("LAST JOIN condition must be left.k = right.k",
+                             pos=cpos)
         lhs, rhs = cond.lhs, cond.rhs
         if rhs.table == right or lhs.table not in (None, right):
             left_key, right_key = lhs.name, rhs.name
@@ -314,15 +343,17 @@ class _Parser:
         if not frame_rows:
             self.expect("kw", "rows_range")
         self.expect("kw", "between")
+        bpos = self.cur_pos()
         k, v = self.next()
         if k == "interval":
             preceding = self._interval(v)
             if frame_rows:
-                raise ParseError("ROWS frame takes a row count")
+                raise ParseError("ROWS frame takes a row count, not an "
+                                 "interval", pos=bpos)
         elif k == "number":
             preceding = int(float(v))
         else:
-            raise ParseError(f"bad frame bound {v!r}")
+            raise ParseError(f"bad frame bound {v!r}", pos=bpos)
         self.expect("kw", "preceding")
         self.expect("kw", "and")
         self.expect("kw", "current")

@@ -30,7 +30,8 @@ from .functions import Aggregator, Leaf
 __all__ = [
     "WindowSpec", "parse_interval_ms", "first_geq", "segment_starts",
     "window_bounds", "segmented_inclusive_scan", "SegmentTree",
-    "fold_windows", "sorted_perm",
+    "fold_windows", "sorted_perm", "tree_fold", "tree_levels",
+    "tree_query", "sparse_levels", "sparse_query",
 ]
 
 
@@ -207,57 +208,128 @@ def prefix_window_fold(leaf: Leaf, inclusive: jnp.ndarray,
                      jnp.broadcast_to(ident, folded.shape), folded)
 
 
+def tree_fold(leaf: Leaf, lifted: jnp.ndarray) -> jnp.ndarray:
+    """Ordered log-depth tree reduction (cheaper than a full prefix scan
+    when only the total fold is needed — the online request case and the
+    pre-aggregation raw edges)."""
+    n = lifted.shape[0]
+    n_pad = 1 << max(1, (n - 1).bit_length())
+    if n_pad > n:
+        ident = jnp.broadcast_to(leaf.identity(),
+                                 (n_pad - n,) + lifted.shape[1:])
+        lifted = jnp.concatenate([lifted, ident], axis=0)
+    while lifted.shape[0] > 1:
+        lifted = leaf.combine(lifted[0::2], lifted[1::2])
+    return lifted[0]
+
+
 # --------------------------------------------------------------------------
 # Non-invertible path: ordered segment tree (§5.1's structure)
 # --------------------------------------------------------------------------
+
+
+def tree_levels(leaf: Leaf, lifted: jnp.ndarray) -> List[jnp.ndarray]:
+    """Bottom-up segment-tree levels over lifted leaf states (built once
+    per (window-group, leaf); shared by every query)."""
+    n = lifted.shape[0]
+    n_pad = 1 << max(1, (n - 1).bit_length())
+    ident = jnp.broadcast_to(leaf.identity(),
+                             (n_pad - n,) + lifted.shape[1:])
+    level = jnp.concatenate([lifted, ident], axis=0) if n_pad > n else lifted
+    levels: List[jnp.ndarray] = [level]
+    while level.shape[0] > 1:
+        level = leaf.combine(level[0::2], level[1::2])
+        levels.append(level)
+    return levels
+
+
+def tree_query(leaf: Leaf, levels: Sequence[jnp.ndarray],
+               start: jnp.ndarray, end: jnp.ndarray) -> jnp.ndarray:
+    """Vectorized ordered fold over [start, end) for a batch of ranges
+    (left accumulator grows rightward, right accumulator leftward, so
+    order-sensitive combines stay exact)."""
+    q = start.shape[0] if start.ndim else 1
+    ident = jnp.broadcast_to(leaf.identity(),
+                             (q,) + levels[0].shape[1:])
+    res_l = ident
+    res_r = ident
+    l = start.astype(jnp.int32)
+    r = end.astype(jnp.int32)
+    # the walk must include the root level: a query spanning the whole
+    # tree ([0, n_pad)) only resolves at the root (take_r on m == 1) —
+    # skipping it silently returned identity for exactly-full ranges
+    for level in levels:
+        m = level.shape[0]
+        active = l < r
+        take_l = active & ((l & 1) == 1)
+        take_r = active & ((r & 1) == 1)
+        node_l = jnp.take(level, jnp.clip(l, 0, m - 1), axis=0)
+        node_r = jnp.take(level, jnp.clip(r - 1, 0, m - 1), axis=0)
+        res_l = jnp.where(_bshape(take_l, res_l),
+                          leaf.combine(res_l, node_l), res_l)
+        res_r = jnp.where(_bshape(take_r, res_r),
+                          leaf.combine(node_r, res_r), res_r)
+        l = (l + take_l.astype(jnp.int32)) >> 1
+        r = (r - take_r.astype(jnp.int32)) >> 1
+    return leaf.combine(res_l, res_r)
+
+
+def sparse_levels(leaf: Leaf, lifted: jnp.ndarray) -> jnp.ndarray:
+    """Sparse-table levels for IDEMPOTENT leaves (min/max): stacked
+    (L, n, *S) with ``T[j, i] = fold(rows[i : i + 2^j))`` (clamped at the
+    right edge).  Built once; any [start, end) fold is then TWO
+    overlapping lookups — exact because idempotent+commutative combines
+    are insensitive to the overlap and the bracketing."""
+    n = lifted.shape[0]
+    levels = [lifted]
+    j = 1
+    while (1 << j) <= max(n, 1):
+        prev = levels[-1]
+        off = 1 << (j - 1)
+        pad = jnp.broadcast_to(leaf.identity(),
+                               (min(off, n),) + lifted.shape[1:])
+        shifted = jnp.concatenate([prev[off:], pad], axis=0)[:n]
+        levels.append(leaf.combine(prev, shifted))
+        j += 1
+    return jnp.stack(levels, axis=0)
+
+
+def sparse_query(leaf: Leaf, table: jnp.ndarray, start: jnp.ndarray,
+                 end: jnp.ndarray) -> jnp.ndarray:
+    """Fold [start, end) from a sparse table: combine the 2^j-row folds
+    anchored at ``start`` and ``end - 2^j`` (j = floor(log2(span)))."""
+    n = table.shape[1]
+    span = jnp.maximum(end - start, 1).astype(jnp.int32)
+    j = 31 - jax.lax.clz(span)
+    lo = jnp.clip(start, 0, n - 1)
+    hi = jnp.clip(end - (1 << j).astype(jnp.int32), 0, n - 1)
+    a = table[j, lo]
+    b = table[j, hi]
+    out = leaf.combine(a, b)
+    empty = end <= start
+    ident = jnp.broadcast_to(leaf.identity(), out.shape)
+    extra = out.ndim - empty.ndim
+    empty = empty.reshape(empty.shape + (1,) * extra)
+    return jnp.where(empty, ident, out)
 
 
 class SegmentTree:
     """Ordered (non-commutative-safe) segment tree over lifted leaf states.
 
     Built once per (window, leaf); answers any [start, end) fold in
-    O(log n) combines.  Order is preserved (left accumulator grows
-    rightward, right accumulator grows leftward) so drawdown/ew_avg —
-    whose combine is order-sensitive — stay exact.
+    O(log n) combines.  Thin wrapper over ``tree_levels``/``tree_query``
+    (which the lowering uses directly to share one build across many
+    query sets).
     """
 
     def __init__(self, leaf: Leaf, lifted: jnp.ndarray):
         self.leaf = leaf
-        n = lifted.shape[0]
-        self.n = n
-        n_pad = 1 << max(1, (n - 1).bit_length())
-        ident = jnp.broadcast_to(leaf.identity(),
-                                 (n_pad - n,) + lifted.shape[1:])
-        level = jnp.concatenate([lifted, ident], axis=0) if n_pad > n else lifted
-        self.levels: List[jnp.ndarray] = [level]
-        while level.shape[0] > 1:
-            level = leaf.combine(level[0::2], level[1::2])
-            self.levels.append(level)
+        self.n = lifted.shape[0]
+        self.levels = tree_levels(leaf, lifted)
 
     def query(self, start: jnp.ndarray, end: jnp.ndarray) -> jnp.ndarray:
         """Vectorized fold over [start, end) for a batch of ranges."""
-        leaf = self.leaf
-        q = start.shape[0] if start.ndim else 1
-        ident = jnp.broadcast_to(leaf.identity(),
-                                 (q,) + self.levels[0].shape[1:])
-        res_l = ident
-        res_r = ident
-        l = start.astype(jnp.int32)
-        r = end.astype(jnp.int32)
-        for level in self.levels[:-1]:
-            m = level.shape[0]
-            active = l < r
-            take_l = active & ((l & 1) == 1)
-            take_r = active & ((r & 1) == 1)
-            node_l = jnp.take(level, jnp.clip(l, 0, m - 1), axis=0)
-            node_r = jnp.take(level, jnp.clip(r - 1, 0, m - 1), axis=0)
-            res_l = jnp.where(_bshape(take_l, res_l),
-                              leaf.combine(res_l, node_l), res_l)
-            res_r = jnp.where(_bshape(take_r, res_r),
-                              leaf.combine(node_r, res_r), res_r)
-            l = (l + take_l.astype(jnp.int32)) >> 1
-            r = (r - take_r.astype(jnp.int32)) >> 1
-        return leaf.combine(res_l, res_r)
+        return tree_query(self.leaf, self.levels, start, end)
 
 
 # --------------------------------------------------------------------------

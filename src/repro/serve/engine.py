@@ -104,6 +104,7 @@ class FeatureEngine:
         else:
             self.pre_states = self.cs.init_preagg_states()
         self.dicts = {name: t.dicts for name, t in tables.items()}
+        self.tables = tables
         self.batcher = RequestBatcher(batch_size, max_wait_ms=max_wait_ms)
         self.n_requests = 0
         # bounded: sustained traffic must not grow host memory without
@@ -302,13 +303,36 @@ class FeatureEngine:
         self.latencies_ms.clear()
         self.n_requests = 0
 
+    # ------------------------------------------------------------- offline
+    def offline(self, tables: Optional[Dict[str, Table]] = None
+                ) -> Dict[str, np.ndarray]:
+        """Offline (training-set) feature materialization for this
+        deployment's script.
+
+        A sharded engine reuses its serving mesh for the offline batch:
+        the same key-partitioned, skew-aware schedule that fans requests
+        out (``CompiledScript.offline_sharded``) folds the historical
+        tables, so training features are computed by the same executors
+        that will serve them — and bit-exactly equal to the
+        single-device ``offline`` either way."""
+        tables = tables or self.tables
+        if self.sharded:
+            return self.cs.offline_sharded(tables, mesh=self.store.mesh,
+                                           n_shards=self.store.n_shards,
+                                           axis=getattr(self.store, "axis",
+                                                        "shard"))
+        return self.cs.offline(tables)
+
     def bulk_load(self, table: str, rows_table: Table):
         """LOAD DATA: ingest a whole historical table at once.
 
-        Pre-agg bucket states fold the loaded rows too (one
-        ``update_many`` / sharded scatter) — otherwise a ``use_preagg``
-        engine would serve long-window queries from empty bucket planes
-        over its bulk-loaded history."""
+        A sharded engine routes the rows to their owning shards with one
+        vmapped sort-merge and folds per-shard pre-agg planes under the
+        same ownership masks the serving path reads — the write-side
+        counterpart of ``offline``'s mesh reuse.  Pre-agg bucket states
+        fold the loaded rows too (one ``update_many`` / sharded scatter)
+        — otherwise a ``use_preagg`` engine would serve long-window
+        queries from empty bucket planes over its bulk-loaded history."""
         cols = {c: rows_table.columns[c].astype(np.float32)
                 for c in self._need[table]}
         keys_arr = rows_table.columns[self._key_col()]

@@ -1,0 +1,271 @@
+"""Sharded, skew-aware offline engine (§6) over the unified lowering.
+
+The load-bearing claim: ``CompiledScript.offline_sharded`` is BIT-EXACT
+vs the single-device ``offline`` — on uniform and zipf-skewed data, with
+hot-key time slicing forced on and off, with pre-aggregated scripts and
+raw ones, for any shard count.  The construction that makes it true:
+partition units are derived from the data alone (core.skew), and every
+schedule folds the same padded unit programs — the mesh only moves them.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import compile_script, parse, verify_consistency
+from repro.core.multiwindow import branch_outputs, run_parallel, run_serial
+from repro.data.synthetic import make_action_tables
+
+MULTI_SQL = """
+SELECT
+  sum(price) OVER w1 AS s1, avg(price) OVER w1 AS a1,
+  max(price) OVER w2 AS m2, count(price) OVER w2 AS c2,
+  drawdown(price) OVER w3 AS d3, ew_avg(price, 0.5) OVER w3 AS e3,
+  min(price) OVER w1 AS mn1
+FROM actions
+WINDOW w1 AS (PARTITION BY userid ORDER BY ts
+              ROWS_RANGE BETWEEN 10s PRECEDING AND CURRENT ROW),
+      w2 AS (PARTITION BY userid ORDER BY ts
+             ROWS_RANGE BETWEEN 40s PRECEDING AND CURRENT ROW),
+      w3 AS (PARTITION BY userid ORDER BY ts
+             ROWS BETWEEN 50 PRECEDING AND CURRENT ROW)
+"""
+
+PREAGG_SQL = """
+SELECT sum(price) OVER w AS s, count(price) OVER w AS c,
+       max(price) OVER w AS mx
+FROM actions
+WINDOW w AS (PARTITION BY userid ORDER BY ts
+             ROWS_RANGE BETWEEN 3000s PRECEDING AND CURRENT ROW)
+OPTIONS (long_windows = "w:100s")
+"""
+
+
+def _assert_bitwise(a, b, ctxmsg=""):
+    assert set(a) == set(b)
+    for k in a:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]),
+                                      err_msg=f"{k} {ctxmsg}")
+
+
+@pytest.fixture(scope="module")
+def uniform_tables():
+    return make_action_tables(n_actions=400, n_orders=0, n_users=8,
+                              horizon_ms=120_000, seed=7,
+                              with_profile=False)
+
+
+@pytest.fixture(scope="module")
+def zipf_tables():
+    return make_action_tables(n_actions=600, n_orders=0, n_users=16,
+                              horizon_ms=120_000, zipf_alpha=1.4, seed=8,
+                              with_profile=False)
+
+
+@pytest.mark.parametrize("n_shards", [1, 3, 8])
+def test_sharded_bitexact_uniform(uniform_tables, n_shards):
+    cs = compile_script(parse(MULTI_SQL), tables=uniform_tables)
+    ref = cs.offline(uniform_tables)
+    got = cs.offline_sharded(uniform_tables, n_shards=n_shards)
+    _assert_bitwise(ref, got, f"S={n_shards}")
+
+
+@pytest.mark.parametrize("n_shards", [2, 8])
+def test_sharded_bitexact_skewed_with_slicing(zipf_tables, n_shards):
+    """Zipf keys + slice threshold low enough that hot keys are cut into
+    halo-expanded time slices — the full §6.2 path."""
+    cs = compile_script(parse(MULTI_SQL), tables=zipf_tables,
+                        offline_slice_rows=32, offline_max_slices=8)
+    from repro.core.lowering.drivers import plan_offline
+
+    lws, _, _ = plan_offline(cs, zipf_tables)
+    assert any(lw.n_sliced_units > 0 for lw in lws), \
+        "workload was meant to trigger hot-key slicing"
+    ref = cs.offline(zipf_tables)
+    got = cs.offline_sharded(zipf_tables, n_shards=n_shards)
+    _assert_bitwise(ref, got, f"S={n_shards} sliced")
+
+
+def test_sharded_bitexact_preagg_script(zipf_tables):
+    """Pre-agg configured scripts go through the same offline lowering
+    (pre-agg is an online-store structure; the plan is shared)."""
+    tables = make_action_tables(n_actions=300, n_orders=0, n_users=4,
+                                horizon_ms=12_000_000, seed=4,
+                                with_profile=False)
+    cs = compile_script(parse(PREAGG_SQL), tables=tables)
+    assert cs.windows[0].preagg is not None
+    _assert_bitwise(cs.offline(tables),
+                    cs.offline_sharded(tables, n_shards=4), "preagg")
+
+
+def test_sharded_mesh_path_bitexact(uniform_tables):
+    """shard_map execution on a real (single-device) mesh matches the
+    stacked-vmap fallback and the fused schedule."""
+    from repro.distributed.sharding import key_shard_mesh
+
+    mesh = key_shard_mesh(1)
+    cs = compile_script(parse(MULTI_SQL), tables=uniform_tables)
+    _assert_bitwise(cs.offline(uniform_tables),
+                    cs.offline_sharded(uniform_tables, mesh=mesh), "mesh")
+
+
+def test_serial_and_branch_schedules_bitexact(uniform_tables):
+    cs = compile_script(parse(MULTI_SQL), tables=uniform_tables)
+    ref = run_parallel(cs, uniform_tables)
+    _assert_bitwise(ref, run_serial(cs, uniform_tables), "serial")
+    # ConcatJoin alignment: each branch emits in base-row order
+    for wi, bo in enumerate(branch_outputs(cs, uniform_tables)):
+        for name, v in bo.items():
+            np.testing.assert_array_equal(v, ref[name],
+                                          err_msg=f"branch {wi}:{name}")
+
+
+def test_union_window_sharded(uniform_tables):
+    tables = make_action_tables(n_actions=250, n_orders=150, n_users=6,
+                                seed=9, with_profile=False)
+    sql = """
+    SELECT sum(price) OVER w AS s, count(price) OVER w AS c
+    FROM actions
+    WINDOW w AS (UNION orders PARTITION BY userid ORDER BY ts
+                 ROWS_RANGE BETWEEN 30s PRECEDING AND CURRENT ROW
+                 MAXSIZE 7)
+    """
+    cs = compile_script(parse(sql), tables=tables,
+                        offline_slice_rows=32)
+    _assert_bitwise(cs.offline(tables),
+                    cs.offline_sharded(tables, n_shards=5), "union")
+
+
+def test_sharded_consistency_gate_raw(zipf_tables):
+    """The CI gate: sharded offline vs sharded online replay."""
+    sql = """
+    SELECT sum(price) OVER w AS s, count(price) OVER w AS c,
+           max(price) OVER w AS mx
+    FROM actions
+    WINDOW w AS (PARTITION BY userid ORDER BY ts
+                 ROWS_RANGE BETWEEN 10s PRECEDING AND CURRENT ROW)
+    """
+    tables = make_action_tables(n_actions=150, n_orders=0, n_users=6,
+                                seed=11, with_profile=False)
+    cs = compile_script(parse(sql), tables=tables)
+    rep = verify_consistency(cs, tables, n_shards=4)
+    assert rep.passed, str(rep)
+
+
+def test_sharded_consistency_gate_preagg():
+    tables = make_action_tables(n_actions=120, n_orders=0, n_users=4,
+                                horizon_ms=12_000_000, seed=12,
+                                with_profile=False)
+    cs = compile_script(parse(PREAGG_SQL), tables=tables)
+    rep = verify_consistency(cs, tables, use_preagg=True, n_shards=3)
+    assert rep.passed, str(rep)
+
+
+def test_engine_offline_uses_mesh(uniform_tables):
+    """FeatureEngine.offline routes through the sharded schedule when
+    the engine is sharded, and matches the unsharded result bitwise."""
+    from repro.serve.engine import FeatureEngine
+
+    sql = """
+    SELECT sum(price) OVER w AS s, count(price) OVER w AS c
+    FROM actions
+    WINDOW w AS (PARTITION BY userid ORDER BY ts
+                 ROWS_RANGE BETWEEN 10s PRECEDING AND CURRENT ROW)
+    """
+    plain = FeatureEngine(sql, uniform_tables, capacity=512)
+    sharded = FeatureEngine(sql, uniform_tables, capacity=512, n_shards=4)
+    _assert_bitwise(plain.offline(), sharded.offline(), "engine")
+
+
+def test_offline_plan_cache_sees_data_mutation(uniform_tables):
+    """The offline plan cache keys on table CONTENT, not just identity +
+    shapes: mutating a column in place must recompute, not serve stale
+    features."""
+    cs = compile_script(parse(MULTI_SQL), tables=uniform_tables)
+    r1 = cs.offline(uniform_tables)
+    col = uniform_tables["actions"].columns["price"]
+    col *= 2
+    try:
+        r2 = cs.offline(uniform_tables)
+        assert not np.allclose(r1["s1"], r2["s1"]), \
+            "stale plan served after in-place mutation"
+        np.testing.assert_allclose(r2["s1"], 2 * r1["s1"], rtol=1e-5)
+    finally:
+        col /= 2
+
+
+def test_offline_sharded_scalar_only_script(uniform_tables):
+    """Scripts with no window aggregates (scalar/LAST-JOIN only) must
+    work under offline_sharded — nothing to shard, same outputs."""
+    sql = "SELECT price * 2 AS p, quantity AS q FROM actions"
+    cs = compile_script(parse(sql), tables=uniform_tables)
+    ref = cs.offline(uniform_tables)
+    got = cs.offline_sharded(uniform_tables, n_shards=4)
+    _assert_bitwise(ref, got, "scalar-only")
+    # (online replay still needs a partition/join key to route by —
+    # that contract is unchanged and orthogonal to the offline path)
+
+
+def test_tree_query_full_range_regression():
+    """Latent seed bug: SegmentTree.query skipped the root level, so a
+    query spanning an exactly-pow2 tree returned identity.  The unit
+    layout hits this whenever a window covers a full pow2-sized unit."""
+    import jax.numpy as jnp
+
+    from repro.core.functions import DrawdownLeaf, MaxLeaf
+    from repro.core.window import SegmentTree, sparse_levels, sparse_query
+
+    rng = np.random.default_rng(0)
+    for n in (2, 8, 128):
+        vals = rng.uniform(1, 10, n).astype(np.float32)
+        leaf = MaxLeaf("max:x", lambda env: jnp.asarray(env["x"]))
+        tree = SegmentTree(leaf, jnp.asarray(vals))
+        got = np.asarray(tree.query(jnp.asarray([0]), jnp.asarray([n])))
+        assert got[0] == vals.max(), (n, got, vals.max())
+        table = sparse_levels(leaf, jnp.asarray(vals))
+        got2 = sparse_query(leaf, table, jnp.asarray([0]),
+                            jnp.asarray([n]))
+        assert np.asarray(got2)[0] == vals.max()
+        dd = DrawdownLeaf("dd:x", lambda env: jnp.asarray(env["x"]))
+        dtree = SegmentTree(dd, dd.lift({"x": jnp.asarray(vals)}))
+        out = np.asarray(dtree.query(jnp.asarray([0]), jnp.asarray([n])))
+        peak, best = -np.inf, 0.0
+        for v in vals:
+            peak = max(peak, v)
+            best = max(best, (peak - v) / peak)
+        np.testing.assert_allclose(max(out[0, 2], 0.0), best, rtol=1e-6)
+
+
+def test_sparse_query_matches_tree_on_random_ranges():
+    import jax.numpy as jnp
+
+    from repro.core.functions import MinLeaf
+    from repro.core.window import (SegmentTree, sparse_levels,
+                                   sparse_query)
+
+    rng = np.random.default_rng(3)
+    vals = rng.normal(size=100).astype(np.float32)
+    leaf = MinLeaf("min:x", lambda env: jnp.asarray(env["x"]))
+    lifted = jnp.asarray(vals)
+    tree = SegmentTree(leaf, lifted)
+    table = sparse_levels(leaf, lifted)
+    start = rng.integers(0, 100, 200)
+    end = np.minimum(100, start + rng.integers(0, 100, 200))
+    a = np.asarray(tree.query(jnp.asarray(start), jnp.asarray(end)))
+    b = np.asarray(sparse_query(leaf, table, jnp.asarray(start),
+                                jnp.asarray(end)))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_compiler_is_a_facade():
+    """The refactor's structural contract: compiler.py stays a facade
+    (< 400 lines) and defines no window-fold or join lowering of its
+    own."""
+    import inspect
+
+    from repro.core import compiler
+
+    src = inspect.getsource(compiler)
+    assert len(src.splitlines()) < 400, "compiler.py must stay a facade"
+    for needle in ("fold_windows(", "segmented_inclusive_scan(",
+                   "searchsorted", "SegmentTree("):
+        assert needle not in src, f"fold/join lowering leaked back: {needle}"

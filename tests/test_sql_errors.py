@@ -1,0 +1,111 @@
+"""SQL parser negative paths: malformed scripts must fail with a
+``ParseError`` carrying a source position — never an internal error."""
+
+import pytest
+
+from repro.core.sql import ParseError, parse
+
+
+def _parse_error(sql: str) -> ParseError:
+    with pytest.raises(ParseError) as ei:
+        parse(sql)
+    err = ei.value
+    assert err.pos is not None, f"ParseError without position: {err}"
+    assert isinstance(err.pos, int) and 0 <= err.pos <= len(sql)
+    assert "position" in str(err)
+    return err
+
+
+# ------------------------------------------------------ malformed frames
+
+def test_rows_frame_with_interval_bound():
+    err = _parse_error("""
+    SELECT sum(price) OVER w AS s FROM t
+    WINDOW w AS (PARTITION BY k ORDER BY ts
+                 ROWS BETWEEN 10s PRECEDING AND CURRENT ROW)
+    """)
+    assert "row count" in str(err)
+
+
+def test_frame_missing_preceding():
+    _parse_error("""
+    SELECT sum(price) OVER w AS s FROM t
+    WINDOW w AS (PARTITION BY k ORDER BY ts
+                 ROWS_RANGE BETWEEN 10s AND CURRENT ROW)
+    """)
+
+
+def test_frame_bad_bound_token():
+    err = _parse_error("""
+    SELECT sum(price) OVER w AS s FROM t
+    WINDOW w AS (PARTITION BY k ORDER BY ts
+                 ROWS_RANGE BETWEEN banana PRECEDING AND CURRENT ROW)
+    """)
+    assert "bad frame bound" in str(err)
+
+
+def test_window_missing_order_by():
+    _parse_error("""
+    SELECT sum(price) OVER w AS s FROM t
+    WINDOW w AS (PARTITION BY k
+                 ROWS_RANGE BETWEEN 10s PRECEDING AND CURRENT ROW)
+    """)
+
+
+# --------------------------------------------------- unknown aggregators
+
+def test_unknown_aggregator_name():
+    err = _parse_error("""
+    SELECT frobnicate(price) OVER w AS s FROM t
+    WINDOW w AS (PARTITION BY k ORDER BY ts
+                 ROWS_RANGE BETWEEN 10s PRECEDING AND CURRENT ROW)
+    """)
+    assert "not an aggregate function" in str(err)
+    assert "frobnicate" in str(err)
+
+
+def test_over_after_non_call():
+    err = _parse_error("""
+    SELECT price OVER w AS s FROM t
+    WINDOW w AS (PARTITION BY k ORDER BY ts
+                 ROWS_RANGE BETWEEN 10s PRECEDING AND CURRENT ROW)
+    """)
+    assert "OVER" in str(err)
+
+
+# ------------------------------------------------ duplicate window alias
+
+def test_duplicate_window_alias():
+    err = _parse_error("""
+    SELECT sum(price) OVER w AS a, avg(price) OVER w AS b FROM t
+    WINDOW w AS (PARTITION BY k ORDER BY ts
+                 ROWS_RANGE BETWEEN 5s PRECEDING AND CURRENT ROW),
+          w AS (PARTITION BY k ORDER BY ts
+                ROWS_RANGE BETWEEN 9s PRECEDING AND CURRENT ROW)
+    """)
+    assert "duplicate window alias" in str(err)
+    assert "'w'" in str(err)
+
+
+# ----------------------------------------------------------- lex + misc
+
+def test_lex_error_has_position():
+    err = _parse_error("SELECT price FROM t %%%")
+    assert "lex error" in str(err)
+
+
+def test_bad_last_join_condition():
+    err = _parse_error("""
+    SELECT price FROM t
+    LAST JOIN p ON t.k < p.k
+    """)
+    assert "LAST JOIN condition" in str(err)
+
+
+def test_position_points_at_offender():
+    sql = ("SELECT frobnicate(price) OVER w AS s FROM t\n"
+           "WINDOW w AS (PARTITION BY k ORDER BY ts\n"
+           "             ROWS_RANGE BETWEEN 10s PRECEDING AND CURRENT ROW)")
+    with pytest.raises(ParseError) as ei:
+        parse(sql)
+    assert sql[ei.value.pos:].startswith("frobnicate")

@@ -5,8 +5,9 @@ import numpy as np
 import pytest
 
 from repro.core.functions import AddLeaf
-from repro.core.skew import (assign_part_ids, plan_partitions,
-                             skewed_window_fold)
+from repro.core.skew import (assign_part_ids, assign_units_lpt,
+                             plan_partitions, plan_time_slices,
+                             plan_window_units, skewed_window_fold)
 from repro.core.union import (LoadBalancer, SlidingAggregator,
                               static_hash_assign)
 from repro.data.synthetic import zipf_keys
@@ -100,6 +101,97 @@ def test_partition_planning_uses_percentiles():
     assert (np.abs(frac - 0.25) < 0.05).all()      # near-equal slices
     # HLL cardinality estimate within 5%
     assert abs(plan.est_n_keys - 50) / 50 < 0.05
+
+
+# ------------------------------------------- §6.2 unit planner edge cases
+
+
+def test_halo_includes_row_exactly_window_before_boundary():
+    """A row whose ts is exactly window_ms before a slice boundary is
+    inside the boundary row's window ([t-W, t] is closed) — the halo
+    must ship it."""
+    n = 64
+    keys = np.zeros(n, np.int64)
+    ts = np.arange(n, dtype=np.int64) * 100        # one row per 100ms
+    win = 700
+    units = plan_window_units(keys, ts, frame_rows=False, preceding=win,
+                              target_rows=16, max_slices=4)
+    assert len(units) > 1, "hot key should have been sliced"
+    for u in units[1:]:
+        slice_start_ts = ts[u.emit_lo]
+        # every row with ts >= slice_start - win is present in the unit,
+        # including the one exactly at the boundary
+        want_lo = int(np.searchsorted(ts, slice_start_ts - win, "left"))
+        assert u.lo == want_lo
+        assert ts[u.lo] <= slice_start_ts - win or u.lo == 0
+    # units emit every row exactly once, in order
+    emitted = np.concatenate([np.arange(u.emit_lo, u.hi) for u in units])
+    np.testing.assert_array_equal(emitted, np.arange(n))
+
+
+def test_all_rows_one_timestamp_degenerates_to_one_unit():
+    """No timestamp spread => no valid percentile boundary => the run
+    must stay one unit (slicing would orphan peer rows)."""
+    keys = np.zeros(100, np.int64)
+    ts = np.full(100, 42, np.int64)
+    assert plan_time_slices(ts, max_slices=8, target_rows=10).size == 0
+    units = plan_window_units(keys, ts, frame_rows=False, preceding=1000,
+                              target_rows=10, max_slices=8)
+    assert len(units) == 1 and units[0].n_rows == 100
+    assert not units[0].sliced
+
+
+def test_quantile_above_distinct_timestamps_dedups():
+    """quantile > #distinct timestamps must yield a valid, deduplicated
+    plan — never an empty slice or an internal error."""
+    keys = np.zeros(40, np.int64)
+    ts = np.repeat([10, 20], 20).astype(np.int64)   # 2 distinct ts
+    bounds = plan_time_slices(ts, max_slices=8, target_rows=4)
+    assert bounds.size <= 1                          # at most one cut
+    assert np.unique(bounds).size == bounds.size
+    units = plan_window_units(keys, ts, frame_rows=False, preceding=5,
+                              target_rows=4, max_slices=8)
+    emitted = np.concatenate([np.arange(u.emit_lo, u.hi) for u in units])
+    np.testing.assert_array_equal(np.sort(emitted), np.arange(40))
+
+
+def test_degenerate_plans_stay_bitexact_end_to_end():
+    """Offline fold over degenerate skew plans (duplicate timestamps,
+    quantile > distinct ts) matches the unsharded result bitwise."""
+    from repro.core import compile_script, parse
+    from repro.core.types import Column, ColumnType, Table, TableSchema
+
+    rng = np.random.default_rng(5)
+    n = 120
+    schema = TableSchema("t", (Column("k", ColumnType.INT),
+                               Column("ts", ColumnType.TIMESTAMP),
+                               Column("v", ColumnType.FLOAT)))
+    tables = {"t": Table(schema, {
+        "k": np.zeros(n, np.int32),
+        "ts": np.repeat(np.arange(6) * 50, 20).astype(np.int64),
+        "v": rng.normal(size=n).astype(np.float32) + 3.0})}
+    sql = """
+    SELECT sum(v) OVER w AS s, count(v) OVER w AS c, max(v) OVER w AS m
+    FROM t
+    WINDOW w AS (PARTITION BY k ORDER BY ts
+                 ROWS_RANGE BETWEEN 100 PRECEDING AND CURRENT ROW)
+    """
+    cs = compile_script(parse(sql), tables=tables, offline_slice_rows=8,
+                        offline_max_slices=16)
+    ref = cs.offline(tables)
+    for s in (2, 7):
+        got = cs.offline_sharded(tables, n_shards=s)
+        for k in ref:
+            np.testing.assert_array_equal(ref[k], got[k],
+                                          err_msg=f"{k} S={s}")
+
+
+def test_lpt_assignment_is_deterministic_and_balanced():
+    sizes = [100, 90, 10, 10, 10, 10, 10, 10]
+    owner = assign_units_lpt(sizes, 2)
+    np.testing.assert_array_equal(owner, assign_units_lpt(sizes, 2))
+    loads = np.bincount(owner, weights=np.asarray(sizes), minlength=2)
+    assert abs(loads[0] - loads[1]) <= 40
 
 
 def test_hll_accuracy():

@@ -1,0 +1,62 @@
+"""CI gate: sharded offline vs sharded online replay consistency.
+
+Runs ``core.consistency.verify_consistency`` on a small synthetic
+workload with BOTH executors sharded — offline through
+``CompiledScript.offline_sharded`` (itself bit-exact vs the
+single-device schedule by construction) and online through the
+key-sharded serving path — with pre-aggregation off and on.  Exits
+non-zero if any feature drifts outside the consistency contract
+(integer features bitwise, floats within reduction-order tolerance).
+
+    PYTHONPATH=src python tools/check_consistency.py [n_shards]
+"""
+
+from __future__ import annotations
+
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import compile_script, parse, verify_consistency  # noqa
+from repro.data.synthetic import make_action_tables  # noqa
+
+RAW_SQL = """
+SELECT sum(price) OVER w AS s, count(price) OVER w AS c,
+       max(price) OVER w AS mx, min(price) OVER w AS mn
+FROM actions
+WINDOW w AS (PARTITION BY userid ORDER BY ts
+             ROWS_RANGE BETWEEN 10s PRECEDING AND CURRENT ROW)
+"""
+
+PREAGG_SQL = """
+SELECT sum(price) OVER w AS s, count(price) OVER w AS c,
+       max(price) OVER w AS mx
+FROM actions
+WINDOW w AS (PARTITION BY userid ORDER BY ts
+             ROWS_RANGE BETWEEN 3000s PRECEDING AND CURRENT ROW)
+OPTIONS (long_windows = "w:100s")
+"""
+
+
+def main(n_shards: int = 4) -> int:
+    ok = True
+    tables = make_action_tables(n_actions=150, n_orders=0, n_users=6,
+                                seed=11, with_profile=False)
+    cs = compile_script(parse(RAW_SQL), tables=tables)
+    rep = verify_consistency(cs, tables, n_shards=n_shards)
+    print(f"raw       (S={n_shards}): {rep}")
+    ok &= rep.passed
+
+    tables2 = make_action_tables(n_actions=120, n_orders=0, n_users=4,
+                                 horizon_ms=12_000_000, seed=12,
+                                 with_profile=False)
+    cs2 = compile_script(parse(PREAGG_SQL), tables=tables2)
+    rep2 = verify_consistency(cs2, tables2, use_preagg=True,
+                              n_shards=n_shards)
+    print(f"preagg    (S={n_shards}): {rep2}")
+    ok &= rep2.passed
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main(int(sys.argv[1]) if len(sys.argv) > 1 else 4))
