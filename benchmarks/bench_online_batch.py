@@ -13,6 +13,8 @@ the device is compute-bound.
 
 from __future__ import annotations
 
+import os
+
 import numpy as np
 
 from repro.data.synthetic import make_action_tables
@@ -80,6 +82,24 @@ def main(quick: bool = False, tiny: bool = False):
     emit("online_batch64_speedup", per_req_us[64],
          f"vs_b1={per_req_us[1] / per_req_us[64]:.1f}x "
          f"vs_scalar={us_scalar / per_req_us[64]:.1f}x")
+
+    if tiny:
+        # unified-path smoke gate: batch amortization must survive the
+        # unit-core online path, and when a buffer-fold baseline from
+        # the same machine is provided (BENCH_B64_BASELINE_US — see
+        # docs/benchmarks.md for recorded values) per-request latency
+        # must stay within 10% of it
+        assert per_req_us[64] < per_req_us[1], \
+            "batched path lost its amortization win"
+        base = os.environ.get("BENCH_B64_BASELINE_US")
+        if base:
+            limit = 1.10 * float(base)
+            emit("online_b64_vs_baseline", per_req_us[64],
+                 f"baseline={float(base):.1f} limit={limit:.1f}")
+            assert per_req_us[64] <= limit, (
+                f"unified online path {per_req_us[64]:.1f}us/req "
+                f"exceeds 110% of the buffer-fold baseline "
+                f"{float(base):.1f}us/req")
 
     # fused window-fold fast path (jnp ref + Pallas interpret)
     keys, ts, values = batch_args(64)

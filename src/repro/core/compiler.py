@@ -60,7 +60,9 @@ class CompileContext:
                  online_buffer: int = 256,
                  cardinality_overrides: Optional[Dict[str, int]] = None,
                  offline_slice_rows: int = 1024,
-                 offline_max_slices: int = 8):
+                 offline_max_slices: int = 8,
+                 distinct_hll_p: Optional[int] = None,
+                 distinct_hll_min_card: int = 64):
         self.tables = tables or {}
         self.default_cardinality = default_cardinality
         self.max_cardinality = max_cardinality
@@ -72,6 +74,13 @@ class CompileContext:
         # (single-device or sharded) folds identical units.
         self.offline_slice_rows = offline_slice_rows
         self.offline_max_slices = offline_max_slices
+        # optional mergeable-sketch leaf for distinct_count over wide
+        # key universes (functions.HLLLeaf): columns with cardinality >=
+        # distinct_hll_min_card fold a 2^p-register HyperLogLog instead
+        # of an exact (cardinality,)-histogram — O(2^p) pre-agg bucket
+        # state at ~1.04/sqrt(2^p) relative error
+        self.distinct_hll_p = distinct_hll_p
+        self.distinct_hll_min_card = distinct_hll_min_card
 
     def cardinality(self, expr: Expr) -> int:
         if isinstance(expr, ColumnRef):

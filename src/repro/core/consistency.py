@@ -32,14 +32,21 @@ __all__ = ["replay_online", "verify_consistency", "ConsistencyReport"]
 
 @dataclasses.dataclass
 class ConsistencyReport:
-    """Consistency contract (DESIGN.md §7):
+    """Consistency contract (one fold engine):
 
-    * integer-valued features (counts, distinct counts, top-N indices,
-      labels, join matches) must be **bitwise equal**;
-    * float features must agree within reduction-order tolerance
-      (prefix-difference vs direct fold re-associate float sums — the
-      same is true of the paper's own pre-aggregation merge; semantic
-      consistency is the guarantee, ULP equality is not).
+    * **raw serving paths** (no pre-aggregation) must be **bitwise
+      equal** to the offline fold, floats included — both executors run
+      the same unit fold core over the same rows at the same unit
+      positions (``core.lowering.windows``), so the gate is
+      ``array_equal``, not allclose;
+    * **pre-aggregated serving** re-brackets long-window folds into
+      bucket partials (§5.1), which floats are sensitive to: integer-
+      valued and idempotent features stay bitwise, float sums agree
+      within reduction-order tolerance (the paper's own pre-aggregation
+      merge has the same property; ULP equality is only promised where
+      the combine is order-insensitive).
+
+    ``bitwise_gate`` records which contract this report was held to.
     """
 
     n_rows: int
@@ -49,18 +56,20 @@ class ConsistencyReport:
     max_rel_diff: float
     passed: bool
     mismatched: List[str]
+    bitwise_gate: bool = False
 
     @property
     def bitwise_equal(self) -> bool:
         return self.n_exact == self.n_features
 
     def __str__(self):
+        gate = "array_equal" if self.bitwise_gate else "tolerance"
         status = "BITWISE-EQUAL" if self.bitwise_equal else (
             f"{self.n_exact}/{self.n_features} bitwise, "
             f"max|d|={self.max_abs_diff:.2e} rel={self.max_rel_diff:.2e} "
             f"-> {'PASS' if self.passed else 'FAIL'}")
-        return (f"consistency: {self.n_rows} rows x {self.n_features} "
-                f"features -> {status}"
+        return (f"consistency[{gate}]: {self.n_rows} rows x "
+                f"{self.n_features} features -> {status}"
                 + (f"; mismatched: {self.mismatched}" if self.mismatched
                    else ""))
 
@@ -191,7 +200,8 @@ def verify_consistency(cs: CompiledScript, tables: Dict[str, Table],
                        atol: float = 1e-3,
                        rtol: float = 1e-4,
                        n_shards: Optional[int] = None,
-                       mesh=None) -> ConsistencyReport:
+                       mesh=None,
+                       bitwise: Optional[bool] = None) -> ConsistencyReport:
     """Offline-vs-online replay gate.
 
     With ``n_shards``/``mesh`` BOTH executors run sharded: the offline
@@ -199,7 +209,17 @@ def verify_consistency(cs: CompiledScript, tables: Dict[str, Table],
     single-device ``offline`` by construction) and the online side
     through the key-sharded serving path — the CI gate for the paper's
     claim that one plan serves every deployment shape.
+
+    ``bitwise`` selects the gate: ``array_equal`` on every feature
+    (floats included) vs reduction-order tolerance.  Default: bitwise
+    for raw serving (both executors run the one unit fold core, so ULP
+    equality holds by construction), tolerance when pre-aggregation is
+    on (bucket partials re-bracket float combines).  Pass
+    ``bitwise=True`` with pre-agg to assert the stronger contract for
+    order-insensitive-in-float workloads (min/max, integer-valued sums).
     """
+    if bitwise is None:
+        bitwise = not use_preagg
     if n_shards is not None or mesh is not None:
         offline = cs.offline_sharded(tables, mesh=mesh, n_shards=n_shards)
     else:
@@ -225,7 +245,7 @@ def verify_consistency(cs: CompiledScript, tables: Dict[str, Table],
         max_rel = max(max_rel, rel)
         if dmax == 0.0:
             n_exact += 1
-        elif not (dmax <= atol or rel <= rtol):
+        elif bitwise or not (dmax <= atol or rel <= rtol):
             mism.append(name)
     return ConsistencyReport(
         n_rows=len(tables[cs.script.base_table]),
@@ -235,4 +255,5 @@ def verify_consistency(cs: CompiledScript, tables: Dict[str, Table],
         max_rel_diff=max_rel,
         passed=not mism,
         mismatched=mism,
+        bitwise_gate=bitwise,
     )

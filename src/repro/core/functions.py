@@ -37,7 +37,8 @@ from .expr import AggCall, ColumnRef, Expr, Literal, eval_scalar
 
 __all__ = [
     "Leaf", "AddLeaf", "MinLeaf", "MaxLeaf", "DrawdownLeaf", "EWLeaf",
-    "Aggregator", "build_aggregator", "eval_scalar_fn", "AGG_FUNCTIONS",
+    "HLLLeaf", "Aggregator", "build_aggregator", "eval_scalar_fn",
+    "AGG_FUNCTIONS",
 ]
 
 _NEG_INF = -3.0e38  # f32-safe sentinels (avoid inf arithmetic in combines)
@@ -180,6 +181,78 @@ class DrawdownLeaf(Leaf):
         return jnp.stack(
             [jnp.maximum(amx, bmx), jnp.minimum(amn, bmn), dd], axis=-1
         )
+
+
+def _fmix32(x: jnp.ndarray) -> jnp.ndarray:
+    """murmur3 32-bit finalizer (vectorized jnp uint32, wrapping mult):
+    the traced-side analogue of ``core.hll.splitmix64``."""
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(0xC2B2AE35)
+    return x ^ (x >> 16)
+
+
+@dataclasses.dataclass
+class HLLLeaf(Leaf):
+    """HyperLogLog distinct-count state — the mergeable-sketch leaf.
+
+    State: (2^p,) float32 register maxima; ``combine`` = elementwise
+    max, so the leaf is idempotent + commutative — exactly the
+    mergeability the pre-aggregation bucket planes and the sparse-table
+    fold path already exploit for min/max.  Wired in place of the exact
+    (cardinality,)-histogram leaf for ``distinct_count`` over wide key
+    universes (``CompileContext(distinct_hll_p=...)``): per-bucket
+    pre-agg state drops from O(cardinality) to O(2^p) at the standard
+    ~1.04/sqrt(2^p) relative error, and because BOTH executors fold the
+    same sketch leaf, offline/online stay bitwise consistent.
+    """
+
+    key: str
+    value_fn: Callable[[dict], jnp.ndarray] = None
+    p: int = 8
+    shape: Tuple[int, ...] = ()
+    invertible: bool = False
+    idempotent: bool = True
+
+    def __post_init__(self):
+        self.m = 1 << self.p
+        self.shape = (self.m,)
+
+    def lift(self, env):
+        import jax
+
+        code = jnp.asarray(self.value_fn(env)).astype(jnp.uint32)
+        h = _fmix32(code)
+        idx = (h >> np.uint32(32 - self.p)).astype(jnp.int32)
+        rest = (h << np.uint32(self.p)).astype(jnp.uint32)
+        # rank = leading zeros of the remaining bits + 1, capped for 0
+        rank = jnp.where(rest != 0, jax.lax.clz(rest) + 1,
+                         np.uint32(32 - self.p + 1)).astype(jnp.float32)
+        iota = jnp.arange(self.m, dtype=jnp.int32)
+        oh = (idx[..., None] == iota).astype(jnp.float32) * rank[..., None]
+        return _masked(env, oh, jnp.zeros((), jnp.float32))
+
+    def identity(self):
+        return jnp.zeros(self.shape, jnp.float32)
+
+    def combine(self, a, b):
+        return jnp.maximum(a, b)
+
+    def estimate(self, regs: jnp.ndarray) -> jnp.ndarray:
+        """Flajolet estimator + small-range linear counting, matching
+        ``core.hll.HyperLogLog.estimate`` (vectorized over any leading
+        batch dims)."""
+        from .hll import _alpha
+
+        m = float(self.m)
+        inv = jnp.sum(jnp.exp2(-regs), axis=-1)
+        est = jnp.float32(_alpha(self.m)) * m * m / inv
+        zeros = jnp.sum((regs == 0).astype(jnp.float32), axis=-1)
+        lc = m * jnp.log(m / jnp.maximum(zeros, 1.0))
+        return jnp.where((est <= 2.5 * m) & (zeros > 0), lc,
+                         est).astype(jnp.float32)
 
 
 @dataclasses.dataclass
@@ -336,6 +409,15 @@ def build_aggregator(call: AggCall, ctx) -> Aggregator:
 
     if fn == "distinct_count":
         card = ctx.cardinality(args[0])
+        hll_p = getattr(ctx, "distinct_hll_p", None)
+        if hll_p and card >= getattr(ctx, "distinct_hll_min_card", 64):
+            # wide key universe: mergeable sketch instead of the exact
+            # dense histogram — O(2^p) state per pre-agg bucket
+            leaf = HLLLeaf(f"hll:{fp(0)}:{hll_p}", _value_fn(args[0]),
+                           p=int(hll_p))
+            return Aggregator(
+                fn, [leaf],
+                lambda s, l=leaf: l.estimate(s[l.key]))
         leaf = AddLeaf(f"hist:{fp(0)}:{card}", _onehot_fn(args[0], card),
                        shape=(card,))
         return Aggregator(

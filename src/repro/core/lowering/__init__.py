@@ -8,9 +8,12 @@ plan generator actually calls for: the *lowering* of a FeaturePlan
 (per-window fold, join resolution, scalar evaluation) is defined once,
 and the drivers are thin executors over it:
 
-* ``windows``  — leaf algebra plumbing, the offline unit-fold engine
+* ``windows``  — the unit fold core (ONE implementation of the
+                 scan / sparse-table / segment-tree leaf programs and
+                 frame bounds), the offline unit planner glue
                  (partition units from ``core.skew``), and the online
-                 buffer gather/merge;
+                 unit gather — both executors are gather strategies
+                 over the same core, bitwise equal floats included;
 * ``joins``    — LAST JOIN resolution (one point-in-time lookup core
                  shared by the offline batch and online store paths);
 * ``scalars``  — scalar select-item evaluation and output assembly;

@@ -22,11 +22,17 @@ the schedules:
                         baseline for benchmarks/bench_offline.py.
 
 ONLINE (request mode).  ``online_fn`` is the per-request trace the
-scalar, batched (vmap), and key-sharded (shard_map) drivers all share;
-``online_fast_fn`` is the fused additive-leaf kernel path
-(kernels/batch_windowfold).  Window folds, LAST JOINs, and scalar items
-all resolve through the same ``lowering`` modules the offline schedules
-use — no fold or join is defined twice.
+scalar, batched (vmap), and key-sharded (shard_map) drivers all share.
+Each window group gathers the request key's history into the SAME
+padded unit layout the offline plan builds (``windows.gather_unit``)
+and queries the SAME unit fold core (``windows.fold_unit``) at the
+request position — offline and online are two gather strategies over
+one fold engine, so raw request results are bitwise equal to
+``offline()``, floats included.  ``online_fast_fn`` is the fused
+additive-leaf kernel path (kernels/batch_windowfold), exact to
+reduction-order tolerance.  LAST JOINs and scalar items resolve through
+the same ``lowering`` modules the offline schedules use — no fold or
+join is defined twice.
 """
 
 from __future__ import annotations
@@ -43,16 +49,15 @@ from .. import skew
 
 from . import joins, scalars
 from .cache import cached
-from .windows import (INT_MIN, GroupLowering, LoweredWindow, fold_units,
-                      gather_edges, gather_sources, group_windows,
-                      lower_group_offline, merge_request, ordered_fold,
-                      unique_leaves)
+from .windows import (GroupLowering, LoweredWindow, fold_unit, fold_units,
+                      gather_edges, gather_unit, group_windows,
+                      lower_group_offline, unique_leaves)
 
 __all__ = [
     "plan_offline", "offline_fused", "offline_serial", "offline_sharded",
     "offline_branch", "offline_reference_serial", "online_fn",
-    "online_fast_fn", "pad_batch", "store_fn", "online", "online_batch",
-    "online_sharded_batch", "online_batch_fast",
+    "online_window_unit", "online_fast_fn", "pad_batch", "store_fn",
+    "online", "online_batch", "online_sharded_batch", "online_batch_fast",
 ]
 
 
@@ -660,30 +665,42 @@ def online_batch_fast(cs, store, keys, ts, values, use_pallas=False,
     return {k: np.asarray(v)[:b] for k, v in out.items()}
 
 
-def online_window_raw(states, w: LoweredWindow, key, ts, values
-                      ) -> Dict[str, jnp.ndarray]:
-    spec = w.node.spec
-    t0 = (ts - jnp.int32(min(spec.preceding, 2**30))) \
-        if not spec.frame_rows else jnp.int32(INT_MIN)
-    cols, ts_all, valid, rank = gather_sources(states, w, key, ts, t0)
-    env = merge_request(w, cols, ts_all, valid, rank, key, ts, values)
-    return ordered_fold(unique_leaves(w.aggs), env)
+def online_window_unit(states, members: Sequence[LoweredWindow], key, ts,
+                       values) -> List[Dict[str, jnp.ndarray]]:
+    """Serve one window GROUP for one request through the unit core:
+    gather the key's history into the offline unit layout
+    (``gather_unit``) and query ``fold_unit`` at the request position.
+    There is no online-only fold algebra — the scan / sparse-table /
+    tree programs are the offline ones, which is what makes request
+    results bitwise equal to ``offline()``, floats included."""
+    env, p = gather_unit(states, members, key, ts, values)
+    folded = fold_unit(members, env, queries=p[None])
+    return [{k: v[0] for k, v in f.items()} for f in folded]
 
 
 def online_fn(cs, states, key, ts, values, preagg_states,
               use_preagg=False):
     """The per-request trace shared by the scalar, vmapped-batch, and
-    key-sharded drivers."""
+    key-sharded drivers.  Raw-served windows are grouped exactly like
+    the offline plan (``group_windows``): one history gather and one
+    structure build per group, member windows pay only bounds +
+    queries."""
     out: Dict[str, jnp.ndarray] = {}
+    raw_served: List[LoweredWindow] = []
     for wi, w in enumerate(cs.windows):
         if use_preagg and w.preagg is not None:
             folded = w.preagg.fold_online(
                 states, w, key, ts, values, preagg_states[wi],
-                gather=gather_edges, merge=merge_request)
+                gather=gather_edges)
+            for name, agg in zip(w.feature_names, w.aggs):
+                out[name] = agg.finalize(folded)
         else:
-            folded = online_window_raw(states, w, key, ts, values)
-        for name, agg in zip(w.feature_names, w.aggs):
-            out[name] = agg.finalize(folded)
+            raw_served.append(w)
+    for members in group_windows(raw_served):
+        per_member = online_window_unit(states, members, key, ts, values)
+        for m, folded in zip(members, per_member):
+            for name, agg in zip(m.feature_names, m.aggs):
+                out[name] = agg.finalize(folded)
 
     env: Dict[str, jnp.ndarray] = dict(values)
     env[cs.script.order_column] = jnp.asarray(ts, jnp.int32)

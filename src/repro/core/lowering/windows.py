@@ -1,26 +1,47 @@
 """Window-fold lowering — the one place fold semantics are defined.
 
-Both executors consume the same pieces:
+ONE FOLD ENGINE.  Every window fold in the system — offline batch,
+online request, batched, key-sharded — runs through the *unit fold
+core* (``fold_unit``): one padded unit of (key, ts, rank,
+arrival)-sorted rows, one shared structure per deduplicated leaf
+(§4.2 cycle binding), one bounds computation, one query program:
 
-* **leaf plumbing** (``unique_leaves`` / ``tree_fold`` / ``ordered_fold``)
-  — leaf-level CSE (§4.2 cycle binding) and the ordered log-depth fold
-  the online request path and pre-aggregation edges use;
+* invertible leaves   — inclusive combine-scan + prefix difference
+                        (§5.2 subtract-and-evict), anchored at the key
+                        segment's first row;
+* idempotent leaves   — sparse-table min/max: any window in two lookups;
+* order-sensitive     — per-unit ordered segment trees (§5.1's
+  non-invertible leaves  structure).
+
+The two executors differ only in how they GATHER rows into that layout:
+
 * **offline unit engine** (``lower_group_offline`` → ``GroupLowering``,
   ``fold_units``) — the offline input is merged ONCE per window group,
   (key, ts, rank, arrival)-sorted, cut into partition units by
   ``core.skew`` (whole cold keys; hot keys time-sliced with halo rows),
   bucketed into power-of-two width classes, and folded as dense
-  (units, rows) blocks: invertible leaves by an inclusive combine-scan +
-  prefix difference (§5.2 subtract-and-evict), idempotent leaves
-  (min/max) by sparse-table lookups, order-sensitive non-invertible
-  leaves by per-unit ordered segment trees (§5.1's structure).  Because
+  (units, rows) blocks — ``fold_unit`` vmapped over the units.  Because
   the unit plan is derived from the data alone, every schedule — fused,
   serial, shard_map — folds bit-identical blocks; *where* a unit runs
   never changes *what* it computes;
-* **online buffer machinery** (``gather_sources`` / ``merge_request`` /
-  ``gather_edges``) — fixed-size store gathers + the (ts, rank, arrival)
-  merge order shared with the offline sort, so a replayed history folds
-  the same rows in the same order as the batch path.
+* **online unit gather** (``gather_unit``) — each request's key history
+  is pulled from the live store into the same layout (same merge order,
+  same sentinel padding, request row appended after its peers) and
+  ``fold_unit`` is queried at the single request position.  Because the
+  combine trees of the scan / sparse table / segment tree depend only
+  on row values and unit positions — never on the padded width — the
+  online result is **bitwise identical to the offline fold, floats
+  included**, whenever the gather buffer covers the key's history and
+  the offline plan did not time-slice the key (§6.2 slicing shifts the
+  scan anchor; history overflowing the buffer truncates it — both
+  degrade float equality to reduction-order tolerance, never change
+  window semantics).
+
+``gather_edges`` (bounded raw-edge gathers for §5.1 pre-aggregation)
+is the only other store-read path; its bucket-decomposed combines are
+inherently re-bracketed, so pre-agg serving is bitwise against offline
+exactly when the leaf combines are order-insensitive in floats
+(min/max, integer-valued sums/counts/histograms).
 """
 
 from __future__ import annotations
@@ -39,13 +60,14 @@ from ..plan import FeaturePlan, FeatureScript, WindowAgg
 from ..preagg import PreAgg
 from .. import skew
 from ..window import (first_geq, prefix_window_fold, sparse_levels,
-                      sparse_query, tree_fold, tree_levels, tree_query)
+                      sparse_query, tree_levels, tree_query)
 
 __all__ = [
-    "LoweredWindow", "lower_windows", "unique_leaves", "tree_fold",
-    "ordered_fold", "GroupLowering", "UnitBlock", "group_windows",
-    "lower_group_offline", "fold_units", "gather_sources",
-    "merge_request", "gather_edges", "INT_MIN",
+    "LoweredWindow", "lower_windows", "unique_leaves",
+    "GroupLowering", "UnitBlock", "group_windows",
+    "lower_group_offline", "unit_leaf_build", "unit_leaf_query",
+    "unit_bounds", "fold_unit", "fold_units", "gather_unit",
+    "gather_edges", "INT_MIN",
 ]
 
 INT_MIN = -(2**31) + 2
@@ -64,12 +86,6 @@ def unique_leaves(aggs: Sequence[Aggregator]) -> Dict[str, Leaf]:
         for leaf in a.leaves:
             uniq.setdefault(leaf.key, leaf)
     return uniq
-
-
-def ordered_fold(leaves: Dict[str, Leaf], env) -> Dict[str, jnp.ndarray]:
-    """Fold every (deduplicated) leaf over the ordered buffer."""
-    return {k: tree_fold(leaf, leaf.lift(env))
-            for k, leaf in leaves.items()}
 
 
 # ---------------------------------------------------------------------------
@@ -106,10 +122,17 @@ def lower_windows(plan: FeaturePlan, script: FeatureScript, ctx
                 needed |= collect_columns(a)
         needed.discard(spec.partition_by)
         needed.discard(spec.order_by)
+        # the online gather is anchored at the key segment's FIRST row
+        # (not the window start) so the request-mode prefix scans see
+        # the same rows at the same positions as the offline unit fold
+        # — the buffer therefore sizes for the key's history, never
+        # below ctx.online_buffer, and only grows for wide ROWS frames
+        # or MAXSIZE caps
+        buf = ctx.online_buffer
         if spec.frame_rows:
-            buf = min(4096, spec.preceding + 1)
-        else:
-            buf = spec.maxsize or ctx.online_buffer
+            buf = max(buf, min(4096, spec.preceding + 1))
+        elif spec.maxsize:
+            buf = max(buf, spec.maxsize)
         preagg = None
         if node.long_window_bucket_ms > 0 and not spec.frame_rows:
             preagg = PreAgg(
@@ -306,153 +329,167 @@ def lower_group_offline(members: Sequence[LoweredWindow],
         n_sliced_units=sum(1 for u in units if u.sliced))
 
 
-def _member_bounds(spec, pos, ts_d, end, r: int):
-    """Per-row [start, end) frame bounds for one member window."""
+# ---------------------------------------------------------------------------
+# The unit fold core — the ONE implementation of every leaf program
+# ---------------------------------------------------------------------------
+
+
+def unit_leaf_build(leaf: Leaf, lifted: jnp.ndarray):
+    """Build one leaf's shared fold structure over a padded unit (R, *S).
+
+    Built ONCE per (unit, deduplicated leaf) and queried by every
+    member window / request row — §4.2 cycle binding at the structure
+    level.  Each structure's combine tree depends only on row values
+    and unit positions, never on the padded width, which is what lets
+    the offline block fold and the online request gather produce
+    bitwise-identical floats from the same rows.
+    """
+    if leaf.invertible:
+        # §5.2 subtract-and-evict: inclusive combine-scan; prefixes are
+        # left folds of position-aligned pow2 blocks, so prefix[i]
+        # depends on rows [0, i] only
+        return jax.lax.associative_scan(leaf.combine, lifted, axis=0)
+    if leaf.idempotent:
+        # min/max: sparse table — any window in two lookups
+        return sparse_levels(leaf, lifted)
+    return tuple(tree_levels(leaf, lifted))
+
+
+def unit_leaf_query(leaf: Leaf, built, start, end) -> jnp.ndarray:
+    """Fold [start, end) (unit coordinates, (Q,) each) from the built
+    structure: prefix difference / sparse lookup / ordered tree walk."""
+    if leaf.invertible:
+        return prefix_window_fold(leaf, built, start, end,
+                                  jnp.zeros_like(start))
+    if leaf.idempotent:
+        return sparse_query(leaf, built, start, end)
+    return tree_query(leaf, list(built), start, end)
+
+
+def unit_bounds(spec, ts_unit: jnp.ndarray, pos: jnp.ndarray, r: int
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """[start, end) frame bounds for query rows at unit positions
+    ``pos`` — the one bounds computation both executors share."""
+    end = pos + 1
     if spec.frame_rows:
         start = jnp.maximum(0, pos - jnp.int32(min(spec.preceding, r)))
     else:
         pre = min(spec.preceding, 2**30)
-        target = ts_d - jnp.int32(pre)
-        zeros = jnp.zeros((r,), jnp.int32)
-        start = jax.vmap(first_geq, in_axes=(0, 0, None, 0))(
-            ts_d, target, zeros, end)
-    m_end = end
+        target = jnp.take(ts_unit, pos) - jnp.int32(pre)
+        start = first_geq(ts_unit, target, jnp.zeros_like(pos), end)
     if spec.maxsize:
-        start = jnp.maximum(start, m_end - jnp.int32(spec.maxsize))
+        start = jnp.maximum(start, end - jnp.int32(spec.maxsize))
     if spec.instance_not_in_window:
-        m_end = jnp.minimum(m_end, pos)
-        start = jnp.minimum(start, m_end)
-    return start, m_end
+        end = jnp.minimum(end, pos)
+        start = jnp.minimum(start, end)
+    return start, end
 
 
-def fold_units(members: Sequence[LoweredWindow], dev: Dict[str, Any]
-               ) -> List[Dict[str, jnp.ndarray]]:
-    """Device-side fold of one group's (U, R) unit block.
+def fold_unit(members: Sequence[LoweredWindow], env: Dict[str, Any],
+              queries: Optional[jnp.ndarray] = None
+              ) -> List[Dict[str, jnp.ndarray]]:
+    """THE unit fold core: fold one padded unit for every member window.
 
-    The gather through ``idx`` IS the §6.2 halo expansion: a hot key's
-    later time slices pull their window context rows into the unit
-    in-trace.  Lifts, inclusive scans, and segment-tree builds happen
-    once per deduplicated leaf ACROSS the group; each member window then
-    pays only its own bounds + prefix-difference / tree query.  Returns
-    each member's folded leaf states per (unit, row) — finalization
-    happens in the driver.
+    ``env`` holds the unit's (key, ts, rank, arrival)-sorted columns —
+    the order column, every needed value column, and ``__valid__``
+    (padding rows lift to identity).  ``queries`` are the unit positions
+    to emit (default: every row — the offline case; the online drivers
+    pass the single request position).  Lifts and structure builds
+    happen once per deduplicated leaf ACROSS the member windows; each
+    member pays only its own bounds + queries.  Returns one
+    ``{leaf key: (Q, *S)}`` dict per member; finalization happens in
+    the driver.
     """
     spec0 = members[0].node.spec
-    idx = dev["idx"]
-    valid = dev["valid"]
-    u, r = idx.shape
-    env = {c: jnp.take(v, idx, axis=0) for c, v in dev["cols"].items()}
-    ts_d = jnp.take(dev["ts"], idx)                      # (U, R)
-    env["__valid__"] = valid
-    env[spec0.order_by] = ts_d
+    ts_unit = env[spec0.order_by]
+    r = ts_unit.shape[0]
+    if queries is None:
+        queries = jnp.arange(r, dtype=jnp.int32)
 
-    pos = jnp.broadcast_to(jnp.arange(r, dtype=jnp.int32)[None, :], (u, r))
-    end = pos + 1
-    bounds = [_member_bounds(m.node.spec, pos, ts_d, end, r)
-              for m in members]
-
-    # one lift + scan / tree build per deduplicated leaf across members
     group_leaves: Dict[str, Leaf] = {}
     for m in members:
         for k, leaf in unique_leaves(m.aggs).items():
             group_leaves.setdefault(k, leaf)
-    zeros_r = jnp.zeros((r,), jnp.int32)
-    shared: Dict[str, Any] = {}
-    for k, leaf in group_leaves.items():
-        lifted = leaf.lift(env)                          # (U, R, *S)
-        if leaf.invertible:
-            # §5.2 subtract-and-evict: inclusive combine-scan + prefix
-            # difference, per unit (seg_start=0: one segment per unit)
-            shared[k] = jax.lax.associative_scan(leaf.combine, lifted,
-                                                 axis=1)
-        elif leaf.idempotent:
-            # min/max: sparse table — any window in two lookups
-            shared[k] = jax.vmap(
-                lambda lf, leaf=leaf: sparse_levels(leaf, lf))(lifted)
-        else:
-            shared[k] = jax.vmap(
-                lambda lf, leaf=leaf: tuple(tree_levels(leaf, lf)))(lifted)
+    built = {k: unit_leaf_build(leaf, leaf.lift(env))
+             for k, leaf in group_leaves.items()}
 
     out: List[Dict[str, jnp.ndarray]] = []
-    for m, (start, m_end) in zip(members, bounds):
-        folded: Dict[str, jnp.ndarray] = {}
-        for k, leaf in unique_leaves(m.aggs).items():
-            if leaf.invertible:
-                folded[k] = jax.vmap(
-                    lambda inc, s, e, leaf=leaf:
-                    prefix_window_fold(leaf, inc, s, e, zeros_r)
-                )(shared[k], start, m_end)
-            elif leaf.idempotent:
-                folded[k] = jax.vmap(
-                    lambda tb, s, e, leaf=leaf: sparse_query(leaf, tb, s, e)
-                )(shared[k], start, m_end)
-            else:
-                folded[k] = jax.vmap(
-                    lambda lv, s, e, leaf=leaf: tree_query(leaf, lv, s, e)
-                )(shared[k], start, m_end)
-        out.append(folded)
+    for m in members:
+        start, end = unit_bounds(m.node.spec, ts_unit, queries, r)
+        out.append({k: unit_leaf_query(leaf, built[k], start, end)
+                    for k, leaf in unique_leaves(m.aggs).items()})
     return out
 
 
+def fold_units(members: Sequence[LoweredWindow], dev: Dict[str, Any]
+               ) -> List[Dict[str, jnp.ndarray]]:
+    """Offline execution of the unit core over one (U, R) block.
+
+    The gather through ``idx`` IS the §6.2 halo expansion: a hot key's
+    later time slices pull their window context rows into the unit
+    in-trace.  The fold itself is ``fold_unit`` vmapped over the units
+    — no offline-only fold algebra exists.
+    """
+    spec0 = members[0].node.spec
+    idx = dev["idx"]
+    env = {c: jnp.take(v, idx, axis=0) for c, v in dev["cols"].items()}
+    env["__valid__"] = dev["valid"]
+    env[spec0.order_by] = jnp.take(dev["ts"], idx)       # (U, R)
+    return jax.vmap(lambda e: fold_unit(members, e))(env)
+
+
 # ---------------------------------------------------------------------------
-# ONLINE buffer machinery (request mode against the live store)
+# ONLINE unit gather (request mode against the live store)
 # ---------------------------------------------------------------------------
 
 
-def gather_sources(states, w: LoweredWindow, key, ts, t0
-                   ) -> Tuple[Dict[str, jnp.ndarray], jnp.ndarray,
-                              jnp.ndarray, jnp.ndarray]:
-    """Fixed-size merged buffer of all window rows before the request."""
-    bufs = []
-    for rank, tname in enumerate(w.sources):
-        st = states[tname]
-        lo, hi = timestore.range_bounds(st, key, t0, ts)
-        cols, ts_arr, valid = timestore.gather_window(
-            st, lo, hi, w.online_buffer, list(w.needed_cols))
-        bufs.append((cols, ts_arr, valid, jnp.full_like(ts_arr, rank)))
-    cols = {c: jnp.concatenate([b[0][c] for b in bufs])
-            for c in w.needed_cols}
-    ts_all = jnp.concatenate([b[1] for b in bufs])
-    valid = jnp.concatenate([b[2] for b in bufs])
-    rank = jnp.concatenate([b[3] for b in bufs])
-    return cols, ts_all, valid, rank
+def gather_unit(states, members: Sequence[LoweredWindow], key, ts, values
+                ) -> Tuple[Dict[str, jnp.ndarray], jnp.ndarray]:
+    """Gather one request's rows into the padded unit layout.
 
+    The online counterpart of ``lower_group_offline``'s merge: every
+    source's rows for ``key`` up to the request's insert-after-peers
+    position — the key's WHOLE history, not just the window span,
+    because the unit core's prefix scans are anchored at the key
+    segment's first row — merged in the same (ts, rank, arrival) order
+    with the same INT_MAX sentinel padding, and the virtually-inserted
+    request row appended after its peers (rank = n_sources).  Returns
+    ``(env, p)`` where ``p`` is the request row's unit position; feed
+    both to ``fold_unit(members, env, queries=p[None])``.
+    """
+    w0 = members[0]
+    spec = w0.node.spec
+    n_src = len(w0.sources)
+    buf = max(m.online_buffer for m in members)
+    needed = sorted(set().union(*(m.needed_cols for m in members)))
 
-def merge_request(w: LoweredWindow, cols, ts_all, valid, rank, key, ts,
-                  values):
-    """Append the (virtually inserted) request row, sort by (ts, rank),
-    apply the ROWS-frame cap, return the env for leaf folds."""
-    spec = w.node.spec
-    n_src = len(w.sources)
-    req_valid = not spec.instance_not_in_window
+    cols_p, ts_p, valid_p, rank_p = [], [], [], []
+    for rank, tname in enumerate(w0.sources):
+        cols, ts_arr, valid = timestore.gather_key_unit(
+            states[tname], key, ts, buf, needed)
+        cols_p.append(cols)
+        ts_p.append(ts_arr)
+        valid_p.append(valid)
+        rank_p.append(jnp.full_like(ts_arr, rank))
+
     cols = {c: jnp.concatenate(
-        [v, jnp.asarray(values.get(c, 0.0), v.dtype)[None]])
-        for c, v in cols.items()}
-    ts_all = jnp.concatenate([ts_all, jnp.asarray(ts, jnp.int32)[None]])
-    valid = jnp.concatenate(
-        [valid, jnp.asarray(req_valid, bool)[None]])
-    rank = jnp.concatenate(
-        [rank, jnp.full((1,), n_src, jnp.int32)])
+        [p[c] for p in cols_p]
+        + [jnp.asarray(values.get(c, 0.0), cols_p[0][c].dtype)[None]])
+        for c in needed}
+    ts_all = jnp.concatenate(ts_p + [jnp.asarray(ts, jnp.int32)[None]])
+    valid = jnp.concatenate(valid_p + [jnp.ones((1,), bool)])
+    rank = jnp.concatenate(rank_p + [jnp.full((1,), n_src, jnp.int32)])
 
+    # same sort key as the offline lexsort: invalid rows carry the
+    # offline pad sentinel and fall to the dead tail
     sort_ts = jnp.where(valid, ts_all, jnp.int32(2**31 - 1))
     pos0 = jnp.arange(ts_all.shape[0], dtype=jnp.int32)
     perm = jnp.lexsort((pos0, rank, sort_ts))
     env = {c: jnp.take(v, perm) for c, v in cols.items()}
-    keep = jnp.take(valid, perm)
-
-    if spec.frame_rows:
-        # valid rows sort before invalid (ts=MAX) rows, so the newest
-        # (preceding+1) valid rows occupy positions [n_keep-p-1, n_keep)
-        n_keep = jnp.sum(keep.astype(jnp.int32))
-        pos = jnp.arange(keep.shape[0], dtype=jnp.int32)
-        keep = keep & (pos >= n_keep - jnp.int32(spec.preceding + 1))
-    if spec.maxsize:
-        n_keep = jnp.sum(keep.astype(jnp.int32))
-        pos = jnp.arange(keep.shape[0], dtype=jnp.int32)
-        keep = keep & (pos >= n_keep - jnp.int32(spec.maxsize))
-    env["__valid__"] = keep
-    env[spec.order_by] = jnp.take(ts_all, perm)
-    return env
+    env["__valid__"] = jnp.take(valid, perm)
+    env[spec.order_by] = jnp.take(sort_ts, perm)
+    p = jnp.sum(valid.astype(jnp.int32)) - 1     # request row position
+    return env, p
 
 
 def gather_edges(states, w: LoweredWindow, key, t0, t1):

@@ -133,6 +133,37 @@ class PreAgg:
             {c: [np.float32(values[c])] for c in self.value_cols
              if c in values})
 
+    @staticmethod
+    def _batch_in_order(keys: np.ndarray, ts: np.ndarray) -> bool:
+        """True iff every key's timestamps are non-decreasing in arrival
+        order within the batch — the precondition under which the
+        one-shot batched fold (ts-sorted groups, newest-bucket-wins
+        scatter) replays the sequential combine sequence bitwise."""
+        n = keys.shape[0]
+        if n <= 1:
+            return True
+        order = np.lexsort((np.arange(n), keys))   # stable: key, arrival
+        k_s, t_s = keys[order], ts[order]
+        same_key = k_s[1:] == k_s[:-1]
+        return not bool(np.any(same_key & (t_s[1:] < t_s[:-1])))
+
+    @staticmethod
+    def _ordered_run_cuts(keys: np.ndarray, ts: np.ndarray):
+        """Arrival-order cut points splitting a batch into maximal
+        in-order runs: a cut lands on every row whose timestamp
+        regresses vs its key's previous occurrence.  Runs are
+        contiguous arrival slices, so each run's same-key adjacencies
+        are a subset of the full batch's — every run satisfies
+        ``_batch_in_order`` and the batched fold of run k on top of the
+        state left by run k-1 replays the sequential combine sequence
+        exactly.  One late row costs one extra batched fold, not a
+        row-by-row replay."""
+        n = keys.shape[0]
+        order = np.lexsort((np.arange(n), keys))
+        k_s, t_s = keys[order], ts[order]
+        viol = order[1:][(k_s[1:] == k_s[:-1]) & (t_s[1:] < t_s[:-1])]
+        return [0] + sorted(int(i) for i in viol) + [n]
+
     # -------------------------------------------------------- batched update
     def update_many(self, state, keys, ts, values: Dict[str, Any]):
         """Fold M ingested rows into the buckets with one ordered
@@ -144,10 +175,13 @@ class PreAgg:
         from the slot's pre-batch value (identity if stale), exactly the
         combine sequence M sequential updates would perform — so results
         are BITWISE identical to sequential updates whenever rows arrive
-        in timestamp order (the binlog/bulk-load case; out-of-order
-        arrivals that regress a ring slot's bucket id within one batch
-        are the documented exception).  When a batch spans more bucket
-        ids than the ring capacity, the newest bucket aliasing each slot
+        in timestamp order (the binlog/bulk-load case).  A batch whose
+        rows regress in timestamp within a key (late arrivals) would
+        re-order the fold and could regress a ring slot's bucket id
+        mid-batch; such batches are DETECTED on the host and fall back
+        to the sequential-order row-by-row fold — exact by definition,
+        never silently divergent.  When a batch spans more bucket ids
+        than the ring capacity, the newest bucket aliasing each slot
         wins (same steady state the sequential epoch check converges
         to).  Batches are padded to the next power of two to bound jit
         recompiles.
@@ -156,6 +190,19 @@ class PreAgg:
         ts = np.asarray(ts, np.int32)
         n = keys.shape[0]
         if n == 0:
+            return state
+        if not self._batch_in_order(keys, ts):
+            # out-of-order fallback: split at the timestamp regressions
+            # and fold each maximal in-order run through this same
+            # batched path — sequential-order parity by construction,
+            # at one extra dispatch per late-row cluster
+            vals = {c: np.asarray(values[c], np.float32)
+                    for c in self.value_cols if c in values}
+            cuts = self._ordered_run_cuts(keys, ts)
+            for lo, hi in zip(cuts[:-1], cuts[1:]):
+                state = self.update_many(
+                    state, keys[lo:hi], ts[lo:hi],
+                    {c: v[lo:hi] for c, v in vals.items()})
             return state
         m = next_pow2(n)
         kp = np.zeros((m,), np.int32)
@@ -262,6 +309,17 @@ class PreAgg:
                 f"sharded pre-agg routes by raw key, so clip-aliasing "
                 f"would break shard locality — raise the cardinality "
                 f"(CompileContext) or dictionary-encode the key column")
+        if not self._batch_in_order(keys, ts):
+            # same out-of-order fallback as ``update_many``: fold
+            # maximal in-order runs through the batched sharded path
+            vals = {c: np.asarray(values[c], np.float32)
+                    for c in self.value_cols if c in values}
+            cuts = self._ordered_run_cuts(keys, ts)
+            for lo, hi in zip(cuts[:-1], cuts[1:]):
+                state = self.update_many_sharded(
+                    state, keys[lo:hi], ts[lo:hi],
+                    {c: v[lo:hi] for c, v in vals.items()}, owned)
+            return state
         m = next_pow2(n)
         kp = np.zeros((m,), np.int32)
         tp = np.zeros((m,), np.int32)
@@ -303,8 +361,7 @@ class PreAgg:
 
     # ------------------------------------------------------------------ query
     def fold_online(self, states, w, key, ts, values, pre_state,
-                    gather: Callable, merge: Callable
-                    ) -> Dict[str, jnp.ndarray]:
+                    gather: Callable) -> Dict[str, jnp.ndarray]:
         """Ordered fold over [ts-W, ts] using partials + raw edges."""
         g = jnp.int32(self.bucket_ms)
         f = jnp.int32(self.fanout)

@@ -2,8 +2,14 @@
 
 ``FeatureEngine`` is the paper's online request mode as a service: a
 deployed feature script + live store + pre-aggregation states behind a
-``request()`` call (Figure 3's Online Request Mode), with TTL eviction
-and §8.2 memory guarding.
+``request()`` call (Figure 3's Online Request Mode), with §8.2 memory
+guarding and a bounded-memory retention lifecycle: ``retention="auto"``
+derives each table's TTL horizon from the widest ROWS_RANGE window span
+in the deployed script, runs a scheduled evict+compaction pass every
+``compact_every`` ingested rows, and truncates the store binlog below
+the consumed pre-aggregation offset — steady-state memory is bounded by
+the window span, not total ingest (docs/architecture.md, "Store
+lifecycle").
 
 Batched serving: ``submit_request()`` enqueues a request into a
 ``RequestBatcher`` and ``flush()`` drains the queue through the batched
@@ -61,7 +67,8 @@ class FeatureEngine:
                  batch_size: int = 64, max_wait_ms: float = 5.0,
                  latency_window: int = 16384,
                  mesh=None, n_shards: Optional[int] = None,
-                 shard_axis: str = "shard", route_slots: int = 1024):
+                 shard_axis: str = "shard", route_slots: int = 1024,
+                 retention=None, compact_every: int = 256):
         self.cs: CompiledScript = compile_script(
             _parse(script_sql, time_unit), tables=tables)
         self.use_preagg = use_preagg
@@ -106,11 +113,100 @@ class FeatureEngine:
         self.dicts = {name: t.dicts for name, t in tables.items()}
         self.tables = tables
         self.batcher = RequestBatcher(batch_size, max_wait_ms=max_wait_ms)
+        # ---- retention lifecycle (store TTL + binlog watermark) ------
+        # retention=None: off (explicit ttl_ms still applies);
+        # retention="auto": per-table horizon = widest ROWS_RANGE window
+        # span sourcing the table; retention=<int ms>: a horizon FLOOR —
+        # never below any live window span.  Every ``compact_every`` ingested
+        # rows the table is evicted+compacted below (high-watermark ts -
+        # horizon) and the binlog is truncated below the consumed
+        # pre-agg offset, so steady-state memory is bounded by the
+        # window span instead of total ingest.
+        self.compact_every = max(1, int(compact_every))
+        self.retention_ms = self._derive_retention(retention)
+        self._pending_rows: Dict[str, int] = {t: 0 for t in need}
+        self._hwm_ts: Dict[str, int] = {t: -(2**31) for t in need}
+        self._consumed_offset = 0
         self.n_requests = 0
         # bounded: sustained traffic must not grow host memory without
         # limit; percentiles are over the most recent window
         self.latencies_ms: Deque[float] = collections.deque(
             maxlen=latency_window)
+
+    # ---------------------------------------------------------- retention
+    def _derive_retention(self, retention) -> Dict[str, Optional[int]]:
+        """Per-table retention horizon (ms) from the deployed script.
+
+        A table's horizon is the widest ROWS_RANGE window span among the
+        windows sourcing it — rows older than (high-watermark -
+        horizon) can never enter any window again, so evicting them
+        changes no served feature (float results may shift within
+        reduction-order tolerance: the prefix-scan anchor moves).
+        Tables read by row-count (ROWS) frames or by LAST JOINs have no
+        time horizon (the newest N rows / the last row per key can be
+        arbitrarily old) and are left unbounded.
+        """
+        if retention is None:
+            return {}
+        fixed = None if retention == "auto" else int(retention)
+        join_tables = {js.right_table for js in self.cs.script.last_joins}
+        spans: Dict[str, Optional[int]] = {}
+        for t in self._need:
+            if t in join_tables:
+                spans[t] = None
+                continue
+            span: Optional[int] = None
+            for w in self.cs.windows:
+                if t not in w.sources:
+                    continue
+                spec = w.node.spec
+                if spec.frame_rows:
+                    span = None
+                    break
+                span = max(span or 0, min(spec.preceding, 2**30))
+            if span is not None and fixed is not None:
+                # a numeric retention only ever EXTENDS the horizon —
+                # shrinking below a live window span would evict rows
+                # requests still fold, changing served features
+                span = max(span, fixed)
+            spans[t] = span
+        return spans
+
+    def _evict_release(self, table: str, horizon_ts: int):
+        """Evict + compact below ``horizon_ts`` and credit the memory
+        guard for the dropped rows (both the explicit ``ttl_ms`` path
+        and the scheduled retention pass — without the release,
+        ``guard.used`` would track total ingest instead of resident
+        rows and eventually refuse writes to a bounded store)."""
+        before = self.store.n_rows(table)
+        self.store.evict(table, horizon_ts)
+        evicted = before - self.store.n_rows(table)
+        if evicted > 0:
+            self.guard.release(evicted * (64 + 8 * len(self._need[table])))
+
+    def _after_ingest(self, table: str, n_rows: int, max_ts: int):
+        """Scheduled retention tick on the ingest path.
+
+        The engine folds pre-aggregation synchronously at ingest, so
+        everything written to the binlog is already consumed — the
+        consumed offset IS the truncation low-watermark.  Store
+        eviction runs every ``compact_every`` rows per table (one
+        jitted compaction pass), never per row.
+        """
+        if max_ts > self._hwm_ts.get(table, -(2**31)):
+            self._hwm_ts[table] = max_ts
+        self._consumed_offset = self.store._binlog_offset
+        if not self.retention_ms:
+            return
+        self._pending_rows[table] = self._pending_rows.get(table, 0) + \
+            n_rows
+        if self._pending_rows[table] < self.compact_every:
+            return
+        self._pending_rows[table] = 0
+        horizon = self.retention_ms.get(table)
+        if horizon is not None:
+            self._evict_release(table, self._hwm_ts[table] - horizon)
+        self.store.truncate_binlog(self._consumed_offset)
 
     # ------------------------------------------------------------- ingest
     def ingest(self, table: str, row: Dict[str, Any]):
@@ -127,7 +223,8 @@ class FeatureEngine:
             self.pre_states = self.cs.preagg_update(
                 self.pre_states, table, key, ts, values)
         if self.ttl_ms:
-            self.store.evict(table, ts - self.ttl_ms)
+            self._evict_release(table, ts - self.ttl_ms)
+        self._after_ingest(table, 1, ts)
 
     def ingest_many(self, table: str, rows: Sequence[Dict[str, Any]]):
         """Bulk insert of N events with one store sort-merge
@@ -159,7 +256,8 @@ class FeatureEngine:
                 self.pre_states = self.cs.preagg_update_many(
                     self.pre_states, table, keys, ts, cols)
         if self.ttl_ms:
-            self.store.evict(table, int(ts.max()) - self.ttl_ms)
+            self._evict_release(table, int(ts.max()) - self.ttl_ms)
+        self._after_ingest(table, len(rows), int(ts.max()))
 
     # ------------------------------------------------------------ request
     def request(self, row: Dict[str, Any]) -> Dict[str, np.ndarray]:
@@ -338,6 +436,10 @@ class FeatureEngine:
         keys_arr = rows_table.columns[self._key_col()]
         ts_arr = rows_table.columns[self.cs.script.order_column]
         self.store.bulk_load(table, keys_arr, ts_arr, cols)
+        # loaded rows must be charged like ingested ones — the
+        # retention pass credits the guard per evicted row, and an
+        # uncharged bulk row would debit bytes some ingested row paid
+        self.guard.charge(len(rows_table) * (64 + 8 * len(cols)))
         if self.use_preagg:
             keys_np = np.asarray(keys_arr, np.int32)
             ts_np = np.asarray(ts_arr, np.int32)
@@ -348,6 +450,10 @@ class FeatureEngine:
             else:
                 self.pre_states = self.cs.preagg_update_many(
                     self.pre_states, table, keys_np, ts_np, cols)
+        if len(ts_arr):
+            # advance the high-watermark/consumed offset without a
+            # pending-row tick (a load is one-shot, not stream traffic)
+            self._after_ingest(table, 0, int(np.max(ts_arr)))
 
 
 def _parse(sql, time_unit):

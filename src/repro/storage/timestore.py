@@ -38,7 +38,8 @@ INT_MAX = np.int32(2**31 - 1)
 
 __all__ = ["StoreState", "OnlineStore", "ShardedOnlineStore", "insert",
            "insert_many", "insert_many_stacked", "range_bounds",
-           "evict_before", "gather_window", "next_pow2"]
+           "evict_before", "gather_window", "gather_key_unit",
+           "next_pow2"]
 
 
 def next_pow2(n: int) -> int:
@@ -223,6 +224,27 @@ def evict_before(state: StoreState, horizon_ts) -> StoreState:
     }
 
 
+def gather_key_unit(state: StoreState, key, ts, max_rows: int,
+                    col_names: List[str]
+                    ) -> Tuple[Dict[str, jnp.ndarray], jnp.ndarray,
+                               jnp.ndarray]:
+    """Unit-layout adapter: one key's WHOLE history up to ``ts``.
+
+    Gathers the newest ``max_rows`` rows of ``key`` with timestamps <=
+    ``ts`` (peers at ``ts`` included — the querying request inserts
+    after its peers) into the fixed (cols, ts, valid) buffers the unit
+    fold core consumes.  The gather anchors at the key segment's FIRST
+    row, not the window start: that is what makes the online request
+    fold replay the offline unit fold bitwise (same rows, same unit
+    positions, same prefix-scan anchor).  When a key's history exceeds
+    ``max_rows`` the oldest context rows are dropped — window semantics
+    survive as long as the window rows fit, but float equality vs the
+    offline fold degrades to reduction-order tolerance.
+    """
+    lo, hi = range_bounds(state, key, jnp.int32(-2**31), ts)
+    return gather_window(state, lo, hi, max_rows, col_names)
+
+
 def gather_window(state: StoreState, lo: jnp.ndarray, hi: jnp.ndarray,
                   max_rows: int, col_names: List[str]
                   ) -> Tuple[Dict[str, jnp.ndarray], jnp.ndarray,
@@ -244,13 +266,48 @@ def gather_window(state: StoreState, lo: jnp.ndarray, hi: jnp.ndarray,
     return cols, ts, valid
 
 
-class OnlineStore:
+class _BinlogMixin:
+    """Bounded binlog shared by both stores.
+
+    Offsets are STABLE across truncation: ``self.binlog`` holds entries
+    [``_binlog_base``, ``_binlog_offset``) and ``read_binlog`` addresses
+    by absolute offset.  ``truncate_binlog`` drops entries below a
+    consumer low-watermark (the pre-aggregation consumed offset — see
+    ``serve.engine.FeatureEngine``) so a long-lived store's log stays
+    bounded instead of growing with total ingest.
+    """
+
+    def read_binlog(self, from_offset: int):
+        if from_offset < self._binlog_base:
+            raise ValueError(
+                f"binlog offset {from_offset} was truncated (log now "
+                f"starts at {self._binlog_base}); consumers must keep "
+                f"their read offset at or above the truncation "
+                f"low-watermark")
+        return (self.binlog[from_offset - self._binlog_base:],
+                self._binlog_offset)
+
+    def truncate_binlog(self, below_offset: int) -> int:
+        """Drop binlog entries below ``below_offset`` (clamped to the
+        written end).  Returns the number of entries dropped.  Offsets
+        of the surviving entries are unchanged."""
+        upto = min(int(below_offset), self._binlog_offset)
+        drop = upto - self._binlog_base
+        if drop <= 0:
+            return 0
+        del self.binlog[:drop]
+        self._binlog_base = upto
+        return drop
+
+
+class OnlineStore(_BinlogMixin):
     """Host-facing wrapper: one StoreState per table + a binlog.
 
     The binlog (monotone offsets, host side) decouples pre-aggregation
     updates from the insert path, mirroring §5.1's asynchronous
     ``update_aggr`` closures: consumers (PreAggregator) read the log tail
-    and fold new rows into their buckets.
+    and fold new rows into their buckets.  Consumed entries are dropped
+    by ``truncate_binlog`` (offsets stay stable).
     """
 
     def __init__(self, capacity: int):
@@ -259,6 +316,7 @@ class OnlineStore:
         self.col_specs: Dict[str, Dict[str, jnp.dtype]] = {}
         self.binlog: List[Tuple[str, int, int, Dict[str, float]]] = []
         self._binlog_offset = 0
+        self._binlog_base = 0
 
     def create_table(self, name: str, col_specs: Dict[str, jnp.dtype]):
         self.tables[name] = make_state(self.capacity, col_specs)
@@ -343,10 +401,8 @@ class OnlineStore:
         self._binlog_offset += n
         return off
 
-    def read_binlog(self, from_offset: int):
-        return self.binlog[from_offset:], self._binlog_offset
-
     def evict(self, table: str, horizon_ts: int):
+        """Batch TTL eviction + slot compaction (one pass, §7.2)."""
         self.tables[table] = evict_before(self.tables[table],
                                           jnp.int32(horizon_ts))
 
@@ -354,7 +410,7 @@ class OnlineStore:
         return int(self.tables[table]["count"])
 
 
-class ShardedOnlineStore:
+class ShardedOnlineStore(_BinlogMixin):
     """Key-sharded online store: the paper's tablet partitioning (§5, §7.2)
     mapped onto a ``jax.sharding.Mesh`` axis.
 
@@ -413,6 +469,7 @@ class ShardedOnlineStore:
         self.col_specs: Dict[str, Dict[str, jnp.dtype]] = {}
         self.binlog: List[Tuple[str, int, int, Dict[str, float]]] = []
         self._binlog_offset = 0
+        self._binlog_base = 0
         self.n_rebalances = 0
 
     # ----------------------------------------------------------- routing
@@ -566,10 +623,8 @@ class ShardedOnlineStore:
             "count": jnp.asarray(counts, jnp.int32),
         })
 
-    def read_binlog(self, from_offset: int):
-        return self.binlog[from_offset:], self._binlog_offset
-
     def evict(self, table: str, horizon_ts: int):
+        """Per-shard batch TTL eviction + slot compaction (vmapped)."""
         self.tables[table] = evict_before_stacked(self.tables[table],
                                                   jnp.int32(horizon_ts))
 

@@ -1,0 +1,342 @@
+"""One fold engine + store retention lifecycle.
+
+The tentpole contract: the online request path is lowered onto the SAME
+unit fold core the offline engine runs (``core.lowering.windows``), so
+``offline()`` and online replay are **bitwise equal including floats**
+— swept property-style across aggregate kinds, frame types, UNION
+windows, LAST JOINs, pre-aggregation, and key-sharding.  Plus the
+storage lifecycle that keeps a long-lived deployment bounded: scheduled
+eviction/compaction from the widest window span, binlog truncation
+below the consumed pre-agg offset, the out-of-order pre-agg fallback,
+and the HLL sketch leaf for high-cardinality distinct counts.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compile_script, parse, verify_consistency
+from repro.core.functions import (AddLeaf, DrawdownLeaf, HLLLeaf, MaxLeaf,
+                                  MinLeaf)
+from repro.core.preagg import PreAgg
+from repro.core.window import WindowSpec
+from repro.data.synthetic import make_action_tables
+from repro.serve.engine import FeatureEngine
+from repro.storage import timestore
+
+RAW_AGGS = [
+    "sum(price)", "avg(price)", "count(price)", "min(price)",
+    "max(price)", "stddev(price)", "variance(price)",
+    "distinct_count(category)", "topn_frequency(category, 3)",
+    "drawdown(price)", "ew_avg(price, 0.5)",
+    "avg_cate_where(price, quantity > 1, category)",
+]
+
+# pre-agg serving re-brackets float combines into bucket partials, so
+# the bitwise gate on that path holds for order-insensitive-in-float
+# leaves: min/max (exact any order) and integer-valued sums/counts/
+# histograms (every f32 bracketing exact) — drawdown/ew_avg rescale or
+# divide inside ``combine`` and stay tolerance-equal under pre-agg
+# (still bitwise on the raw path, covered above)
+PREAGG_SAFE_AGGS = [
+    "sum(price)", "avg(price)", "count(price)", "min(price)",
+    "max(price)", "stddev(price)", "distinct_count(category)",
+    "topn_frequency(category, 3)",
+]
+
+
+def _int_prices(tables):
+    """Integer-valued float32 prices: all combine bracketings exact."""
+    for t in tables.values():
+        if "price" in t.columns:
+            t.columns["price"] = np.floor(t.columns["price"]).astype(
+                np.float32)
+    return tables
+
+
+def _script(aggs, frame, union, join, preagg, maxsize=0):
+    sel = ",\n  ".join(f"{a} OVER w AS f{i}" for i, a in enumerate(aggs))
+    if join:
+        sel += ",\n  profile.age AS age, profile.score * 2 AS ds"
+    u = "UNION orders " if union else ""
+    if frame == "rows":
+        fr = "ROWS BETWEEN 9 PRECEDING AND CURRENT ROW"
+    else:
+        span = "3000s" if preagg else "10s"
+        fr = f"ROWS_RANGE BETWEEN {span} PRECEDING AND CURRENT ROW"
+    if maxsize:
+        fr += f" MAXSIZE {maxsize}"
+    jn = ("LAST JOIN profile ORDER BY ts ON actions.userid = "
+          "profile.userid\n" if join else "")
+    opt = '\nOPTIONS (long_windows = "w:100s")' if preagg else ""
+    return (f"SELECT\n  {sel}\nFROM actions\n{jn}"
+            f"WINDOW w AS ({u}PARTITION BY userid ORDER BY ts {fr})"
+            f"{opt}")
+
+
+# seed, n_aggs, frame, union, join, preagg, n_shards, maxsize
+SWEEP = [
+    (0, 5, "range", True, False, False, None, 0),
+    (1, 6, "range", False, True, False, None, 0),
+    (2, 5, "rows", False, False, False, None, 0),
+    (3, 4, "range", True, False, False, None, 7),
+    (4, 4, "range", False, False, True, None, 0),
+    (5, 4, "range", False, True, False, 3, 0),
+    (6, 3, "range", False, False, True, 3, 0),
+]
+
+
+@pytest.mark.parametrize(
+    "seed,n_aggs,frame,union,join,preagg,n_shards,maxsize", SWEEP)
+def test_offline_equals_online_bitwise(seed, n_aggs, frame, union, join,
+                                       preagg, n_shards, maxsize):
+    """Property sweep: random aggregate subsets x frame type x UNION x
+    LAST JOIN x pre-agg x sharding, gated through verify_consistency's
+    array_equal contract (floats included)."""
+    rng = np.random.default_rng(seed)
+    pool = PREAGG_SAFE_AGGS if preagg else RAW_AGGS
+    aggs = list(rng.choice(pool, size=min(n_aggs, len(pool)),
+                           replace=False))
+    sql = _script(aggs, frame, union, join, preagg, maxsize)
+    tables = make_action_tables(
+        n_actions=90, n_orders=60 if union else 0, n_users=4,
+        horizon_ms=12_000_000 if preagg else 60_000,
+        seed=100 + seed, with_profile=join)
+    if preagg:
+        tables = _int_prices(tables)
+    cs = compile_script(parse(sql), tables=tables)
+    rep = verify_consistency(cs, tables, use_preagg=preagg,
+                             n_shards=n_shards, bitwise=True)
+    assert rep.passed and rep.bitwise_equal, f"{sql}\n{rep}"
+
+
+def test_unit_core_is_only_fold_implementation():
+    """The duplicated online buffer-fold algebra is gone: the lowering
+    exports no merge_request/ordered_fold, and the online driver
+    resolves through gather_unit + fold_unit."""
+    from repro.core.lowering import drivers, windows
+
+    for gone in ("merge_request", "ordered_fold", "gather_sources"):
+        assert not hasattr(windows, gone), gone
+    assert hasattr(windows, "fold_unit")
+    assert hasattr(windows, "gather_unit")
+    import inspect
+
+    src = inspect.getsource(drivers.online_window_unit)
+    assert "gather_unit" in src and "fold_unit" in src
+
+
+# ------------------------------------------------------------- retention
+
+
+RET_SQL = """
+SELECT sum(price) OVER w AS s, count(price) OVER w AS c
+FROM actions
+WINDOW w AS (PARTITION BY userid ORDER BY ts
+             ROWS_RANGE BETWEEN 5s PRECEDING AND CURRENT ROW)
+"""
+
+
+def _sustained_ingest(eng, tables, n_total, chunk=16):
+    a = tables["actions"]
+    max_rows = max_binlog = 0
+    for i in range(0, n_total, chunk):
+        eng.ingest_many("actions",
+                        [a.row(j) for j in range(i, min(i + chunk,
+                                                        n_total))])
+        max_rows = max(max_rows, eng.store.n_rows("actions"))
+        max_binlog = max(max_binlog, len(eng.store.binlog))
+    return max_rows, max_binlog
+
+
+@pytest.mark.parametrize("n_shards", [None, 2])
+def test_retention_bounds_store_and_binlog(n_shards):
+    """Sustained ingest with retention='auto' holds resident rows AND
+    binlog length bounded — total ingest far exceeds capacity, which
+    would overflow without the scheduled evict+compaction."""
+    tables = make_action_tables(n_actions=400, n_orders=0, n_users=4,
+                                horizon_ms=400_000, seed=1,
+                                with_profile=False)
+    eng = FeatureEngine(RET_SQL, tables, capacity=128,
+                        retention="auto", compact_every=48,
+                        n_shards=n_shards)
+    assert eng.retention_ms == {"actions": 5000}
+    max_rows, max_binlog = _sustained_ingest(eng, tables, 400)
+    assert max_rows <= 128, "store rows must stay bounded"
+    assert max_binlog <= 2 * 48 + 16, "binlog must stay bounded"
+    assert eng.store._binlog_offset == 400      # offsets keep counting
+
+    # served features match an unbounded engine (floats within
+    # reduction-order tolerance: eviction moves the prefix-scan anchor)
+    ref = FeatureEngine(RET_SQL, tables, capacity=1024)
+    a = tables["actions"]
+    ref.ingest_many("actions", [a.row(j) for j in range(400)])
+    got = eng.request(dict(a.row(399)))
+    want = ref.request(dict(a.row(399)))
+    for k in want:
+        np.testing.assert_allclose(np.asarray(got[k]),
+                                   np.asarray(want[k]), rtol=1e-5,
+                                   err_msg=k)
+
+
+def test_retention_skips_rows_frames_and_join_tables():
+    """ROWS frames (newest-N rows, any age) and LAST JOIN right tables
+    (last row per key, any age) have no time horizon — auto retention
+    must leave them unbounded instead of corrupting served features."""
+    sql = """
+    SELECT sum(price) OVER w AS s, profile.age AS age
+    FROM actions
+    LAST JOIN profile ORDER BY ts ON actions.userid = profile.userid
+    WINDOW w AS (PARTITION BY userid ORDER BY ts
+                 ROWS BETWEEN 9 PRECEDING AND CURRENT ROW)
+    """
+    tables = make_action_tables(n_actions=50, n_orders=0, n_users=4,
+                                seed=2)
+    eng = FeatureEngine(sql, tables, capacity=256, retention="auto")
+    assert eng.retention_ms == {"actions": None, "profile": None}
+
+
+def test_binlog_truncation_keeps_offsets_stable():
+    store = timestore.OnlineStore(capacity=32)
+    store.create_table("t", {"v": np.float32})
+    offs = [store.put("t", 1, ts, {"v": float(ts)}) for ts in range(10)]
+    assert offs == list(range(10))
+    assert store.truncate_binlog(4) == 4
+    tail, end = store.read_binlog(4)
+    assert end == 10 and len(tail) == 6
+    assert tail[0][2] == 4                       # ts of offset-4 entry
+    tail7, _ = store.read_binlog(7)
+    assert [e[2] for e in tail7] == [7, 8, 9]
+    with pytest.raises(ValueError):
+        store.read_binlog(3)                     # below the watermark
+    # clamped + idempotent
+    assert store.truncate_binlog(999) == 6
+    assert store.truncate_binlog(999) == 0
+    assert store.read_binlog(10) == ([], 10)
+    # offsets keep growing after truncation
+    assert store.put("t", 1, 99, {"v": 0.0}) == 10
+
+
+def test_sharded_binlog_truncation():
+    store = timestore.ShardedOnlineStore(capacity=32, n_shards=2)
+    store.create_table("t", {"v": np.float32})
+    store.put_many("t", np.arange(8, dtype=np.int32),
+                   np.arange(8, dtype=np.int32),
+                   {"v": np.zeros(8, np.float32)})
+    assert store.truncate_binlog(5) == 5
+    tail, end = store.read_binlog(5)
+    assert end == 8 and len(tail) == 3
+    with pytest.raises(ValueError):
+        store.read_binlog(0)
+
+
+# ------------------------------------- out-of-order pre-agg fallback
+
+
+def test_preagg_update_many_out_of_order_falls_back_bitwise():
+    """A batch whose timestamps regress within a key (the ROADMAP's
+    documented exception) is detected and folded in sequential order —
+    bitwise parity with row-by-row ``update``."""
+    spec = WindowSpec("w", "k", "ts", preceding=10_000)
+    leaves = {
+        "sum:x": AddLeaf("sum:x", lambda env: jnp.asarray(env["x"])),
+        "min:x": MinLeaf("min:x", lambda env: jnp.asarray(env["x"])),
+        "max:x": MaxLeaf("max:x", lambda env: jnp.asarray(env["x"])),
+        "dd:x": DrawdownLeaf("dd:x", lambda env: jnp.asarray(env["x"])),
+    }
+    pa = PreAgg(spec=spec, leaves=leaves, bucket_ms=100, window_ms=10_000,
+                n_keys=8, value_cols=("x",), fanout=4)
+    rng = np.random.default_rng(3)
+    n = 23
+    keys = rng.integers(0, 8, size=n).astype(np.int32)
+    ts = rng.integers(0, 3_000, size=n).astype(np.int32)   # NOT sorted
+    xs = (rng.normal(size=n).astype(np.float32) + 2.0)
+    assert not pa._batch_in_order(keys, ts)
+
+    s_seq = pa.init_state()
+    for i in range(n):
+        s_seq = pa.update(s_seq, int(keys[i]), int(ts[i]),
+                          {"x": np.float32(xs[i])})
+    s_bat = pa.update_many(pa.init_state(), keys, ts, {"x": xs})
+    for lvl in ("fine", "coarse"):
+        for k in leaves:
+            np.testing.assert_array_equal(np.asarray(s_seq[lvl][k]),
+                                          np.asarray(s_bat[lvl][k]),
+                                          err_msg=f"{lvl}/{k}")
+        np.testing.assert_array_equal(np.asarray(s_seq[f"{lvl}_epoch"]),
+                                      np.asarray(s_bat[f"{lvl}_epoch"]))
+
+
+def test_preagg_in_order_detection():
+    pa_keys = np.array([1, 2, 1, 2], np.int32)
+    assert PreAgg._batch_in_order(pa_keys, np.array([5, 1, 6, 2],
+                                                    np.int32))
+    assert not PreAgg._batch_in_order(pa_keys, np.array([5, 1, 4, 2],
+                                                        np.int32))
+    assert PreAgg._batch_in_order(np.array([1], np.int32),
+                                  np.array([9], np.int32))
+
+
+# --------------------------------------------------- HLL sketch leaf
+
+
+def test_hll_leaf_estimate_within_error():
+    leaf = HLLLeaf("hll:x:10", lambda env: jnp.asarray(env["x"]), p=10)
+    rng = np.random.default_rng(0)
+    from repro.core.window import tree_fold
+
+    for true_card in (40, 600, 4000):
+        vals = rng.integers(0, true_card, size=12_000).astype(np.int32)
+        lifted = leaf.lift({"x": jnp.asarray(vals)})
+        regs = tree_fold(leaf, lifted)
+        est = float(leaf.estimate(regs))
+        truth = len(np.unique(vals))
+        assert abs(est - truth) / truth < 0.15, (true_card, est, truth)
+        # mergeable: chunked max-merge == one-shot fold, bitwise
+        acc = leaf.identity()
+        for i in range(0, 12_000, 3_000):
+            acc = leaf.combine(acc, tree_fold(leaf, lifted[i:i + 3_000]))
+        np.testing.assert_array_equal(np.asarray(acc), np.asarray(regs))
+
+
+HLL_SQL = """
+SELECT distinct_count(category) OVER w AS dc, count(price) OVER w AS c
+FROM actions
+WINDOW w AS (PARTITION BY userid ORDER BY ts
+             ROWS_RANGE BETWEEN 3000s PRECEDING AND CURRENT ROW)
+OPTIONS (long_windows = "w:100s")
+"""
+
+
+def test_hll_distinct_count_in_preagg_planes():
+    """High-cardinality distinct_count folds a mergeable HLL sketch in
+    the (unsharded) pre-agg planes: O(2^p) bucket state instead of
+    O(cardinality), offline==online still bitwise (both executors fold
+    the same sketch leaf), estimates within the standard HLL error."""
+    tables = make_action_tables(n_actions=120, n_orders=0, n_users=4,
+                                horizon_ms=12_000_000, seed=7,
+                                with_profile=False)
+    cs = compile_script(parse(HLL_SQL), tables=tables,
+                        distinct_hll_p=6,
+                        cardinality_overrides={"category": 256},
+                        distinct_hll_min_card=128)
+    pa = cs.windows[0].preagg
+    assert any(isinstance(l, HLLLeaf) for l in pa.leaves.values())
+
+    # bucket-plane state: sketch beats the exact histogram's width
+    cs_exact = compile_script(parse(HLL_SQL), tables=tables,
+                              cardinality_overrides={"category": 256})
+    def plane_floats(c):
+        st = c.init_preagg_states()[0]
+        return sum(int(np.prod(v.shape)) for lvl in ("fine", "coarse")
+                   for v in st[lvl].values())
+    assert plane_floats(cs) < plane_floats(cs_exact)
+
+    rep = verify_consistency(cs, tables, use_preagg=True, bitwise=True)
+    assert rep.passed and rep.bitwise_equal, str(rep)
+
+    # parity-within-error vs the exact histogram path
+    approx = cs.offline(tables)["dc"]
+    exact = cs_exact.offline(tables)["dc"]
+    err = np.abs(approx - exact) / np.maximum(exact, 1.0)
+    assert float(err.max()) < 0.25, float(err.max())

@@ -1,14 +1,21 @@
-"""CI gate: sharded offline vs sharded online replay consistency.
+"""CI gate: offline vs online replay consistency, sharded + bitwise.
 
-Runs ``core.consistency.verify_consistency`` on a small synthetic
-workload with BOTH executors sharded — offline through
+Runs ``core.consistency.verify_consistency`` on small synthetic
+workloads with BOTH executors sharded — offline through
 ``CompiledScript.offline_sharded`` (itself bit-exact vs the
 single-device schedule by construction) and online through the
-key-sharded serving path — with pre-aggregation off and on.  Exits
-non-zero if any feature drifts outside the consistency contract
-(integer features bitwise, floats within reduction-order tolerance).
+key-sharded serving path — with pre-aggregation off and on.
 
-    PYTHONPATH=src python tools/check_consistency.py [n_shards]
+The raw gates ALWAYS assert ``array_equal`` on every feature INCLUDING
+floats (the one-fold-engine contract: both executors run the same unit
+fold core over the same rows — ``verify_consistency``'s default for
+raw serving).  ``--bitwise`` additionally runs a pre-agg gate on
+integer-valued prices, where bucket-partial re-bracketing is
+float-exact, asserting ``array_equal`` there too.  The float-price
+pre-agg gate stays at reduction-order tolerance — re-bracketed float
+sums are not ULP-stable, by construction of §5.1.
+
+    PYTHONPATH=src python tools/check_consistency.py [--bitwise] [n_shards]
 """
 
 from __future__ import annotations
@@ -38,14 +45,32 @@ OPTIONS (long_windows = "w:100s")
 """
 
 
-def main(n_shards: int = 4) -> int:
+def _int_prices(tables):
+    """Integer-valued float32 prices: every combine bracketing is exact
+    in f32, so even the re-bracketed pre-agg path is bitwise."""
+    import numpy as np
+
+    for t in tables.values():
+        if "price" in t.columns:
+            t.columns["price"] = np.floor(t.columns["price"]).astype(
+                np.float32)
+    return tables
+
+
+def main(n_shards: int = 4, bitwise: bool = False) -> int:
     ok = True
     tables = make_action_tables(n_actions=150, n_orders=0, n_users=6,
                                 seed=11, with_profile=False)
     cs = compile_script(parse(RAW_SQL), tables=tables)
-    rep = verify_consistency(cs, tables, n_shards=n_shards)
+    rep = verify_consistency(cs, tables, n_shards=n_shards, bitwise=True)
     print(f"raw       (S={n_shards}): {rep}")
     ok &= rep.passed
+
+    # unsharded raw path through the same bitwise gate (same compiled
+    # script — the plan and jit caches carry over)
+    rep_u = verify_consistency(cs, tables, bitwise=True)
+    print(f"raw       (S=1): {rep_u}")
+    ok &= rep_u.passed
 
     tables2 = make_action_tables(n_actions=120, n_orders=0, n_users=4,
                                  horizon_ms=12_000_000, seed=12,
@@ -55,8 +80,21 @@ def main(n_shards: int = 4) -> int:
                               n_shards=n_shards)
     print(f"preagg    (S={n_shards}): {rep2}")
     ok &= rep2.passed
+
+    if bitwise:
+        tables3 = _int_prices(make_action_tables(
+            n_actions=120, n_orders=0, n_users=4,
+            horizon_ms=12_000_000, seed=13, with_profile=False))
+        cs3 = compile_script(parse(PREAGG_SQL), tables=tables3)
+        rep3 = verify_consistency(cs3, tables3, use_preagg=True,
+                                  n_shards=n_shards, bitwise=True)
+        print(f"preagg-int(S={n_shards}): {rep3}")
+        ok &= rep3.passed
     return 0 if ok else 1
 
 
 if __name__ == "__main__":
-    sys.exit(main(int(sys.argv[1]) if len(sys.argv) > 1 else 4))
+    argv = [a for a in sys.argv[1:]]
+    bitwise = "--bitwise" in argv
+    argv = [a for a in argv if a != "--bitwise"]
+    sys.exit(main(int(argv[0]) if argv else 4, bitwise=bitwise))
