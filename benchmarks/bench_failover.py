@@ -1,0 +1,172 @@
+"""Failover under live traffic: kill a shard mid-benchmark, promote its
+follower, and measure what the paper's replicated-tablet deployment
+(§5) promises — recovery time, replication lag, and serving latency
+before vs after the failover, with a final BITWISE parity gate against
+an unsharded reference engine (a fast recovery that serves different
+bytes is no recovery at all).
+
+Timeline:
+
+  1. bulk ingest phase A while followers ship from the binlog every
+     ``ship_every`` rows (pre-kill p50/p99 measured here);
+  2. ``kill_shard`` on the shard owning a live request key — its rows
+     and pre-agg plane are wiped, traffic keeps arriving while it is
+     dead (the follower keeps catching up from the binlog);
+  3. ``heal`` — most-caught-up follower promoted, unacked binlog tail
+     replayed, pre-agg plane rebuilt from the snapshot watermark; the
+     engine-measured wall time is the recovery figure;
+  4. post-failover p50/p99 + bitwise parity vs the unsharded engine.
+
+``--tiny`` is the CI smoke: seconds, and the recovery time is gated by
+``FAILOVER_RECOVERY_CEILING_MS`` (default 30000; exit 1 past it).
+
+    PYTHONPATH=src python -m benchmarks.bench_failover [--tiny|--quick]
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+# must precede ANY jax initialization (see bench_sharded_online.py)
+os.environ.setdefault(
+    "XLA_FLAGS", "--xla_force_host_platform_device_count=8 "
+    "--xla_cpu_multi_thread_eigen=false")
+
+import numpy as np  # noqa: E402
+
+from repro.data.synthetic import make_action_tables  # noqa: E402
+from repro.distributed.sharding import key_shard_mesh  # noqa: E402
+from repro.serve.engine import FeatureEngine  # noqa: E402
+
+from .common import emit, timeit  # noqa: E402
+
+SQL = """
+SELECT
+  sum(price) OVER w AS s, avg(price) OVER w AS a,
+  count(price) OVER w AS c, min(price) OVER w AS mn,
+  max(price) OVER w AS mx
+FROM actions
+WINDOW w AS (PARTITION BY userid ORDER BY ts
+             ROWS_RANGE BETWEEN 60s PRECEDING AND CURRENT ROW)
+"""
+
+N_SHARDS = 4
+
+
+def _assert_parity(ref, rep, rows, label):
+    r1 = ref.request_batch([dict(r) for r in rows])
+    r2 = rep.request_batch([dict(r) for r in rows])
+    for i in range(len(rows)):
+        for k in r1[i]:
+            np.testing.assert_array_equal(
+                np.asarray(r1[i][k]), np.asarray(r2[i][k]),
+                err_msg=f"{label}: req {i} feature {k}")
+
+
+def main(quick: bool = False, tiny: bool = False) -> int:
+    import jax
+
+    n_act = 1_500 if tiny else (8_000 if quick else 24_000)
+    ingest_batch = 128
+    probe_b = 32 if tiny else 64
+    iters = 4 if tiny else 10
+    n_dev = len(jax.devices())
+    mesh = key_shard_mesh(N_SHARDS) if N_SHARDS <= n_dev else None
+    tables = make_action_tables(n_actions=n_act, n_orders=0,
+                                n_users=64, horizon_ms=30_000_000,
+                                seed=0, with_profile=False)
+    a = tables["actions"]
+    rows = [a.row(i) for i in range(n_act)]
+
+    ref = FeatureEngine(SQL, tables, capacity=n_act + 512)
+    rep = FeatureEngine(SQL, tables, capacity=n_act + 512,
+                        n_shards=None if mesh is not None else N_SHARDS,
+                        mesh=mesh, replication=1, ship_every=64)
+    emit("failover_env", float(n_dev),
+         f"shards={N_SHARDS} replicas=1 mesh={'yes' if mesh else 'no'}")
+
+    # ---- phase A: live ingest + pre-kill serving latency --------------
+    cut = int(n_act * 0.6)
+    for lo in range(0, cut, ingest_batch):
+        chunk = rows[lo:lo + ingest_batch]
+        ref.ingest_many("actions", chunk)
+        rep.ingest_many("actions", chunk)
+    probe = [a.row(n_act - 1 - i) for i in range(probe_b)]
+    rep.request_batch([dict(r) for r in probe])   # compile warmup
+    rep.reset_stats()
+    us_pre = timeit(lambda: rep.request_batch([dict(r) for r in probe]),
+                    warmup=1, iters=iters)
+    pcts = rep.latency_percentiles()
+    emit("failover_pre_kill_us_per_req", us_pre / probe_b,
+         f"p50={pcts.get('TP50', 0):.3f}ms p99={pcts.get('TP99', 0):.3f}ms")
+
+    # ---- kill the shard owning a live request key ---------------------
+    # a partial chunk below the ship threshold lands first, so the
+    # followers are genuinely behind when the shard dies
+    gap = max(8, rep.ship_every - 16)
+    ref.ingest_many("actions", rows[cut:cut + gap])
+    rep.ingest_many("actions", rows[cut:cut + gap])
+    cut += gap
+    victim_key = int(rep._encode_request(dict(probe[0]))[0])
+    shard = int(rep.store.owner_of_keys(np.asarray([victim_key]))[0])
+    info = rep.kill_shard(shard)
+    max_lag_at_kill = max(info["lag_at_kill"].values())
+    emit("failover_lag_at_kill_entries", float(max_lag_at_kill),
+         f"shard={shard} leader_offset={info['leader_offset']}")
+
+    # traffic keeps arriving while the shard is dead; the final partial
+    # chunk stays unshipped so promotion has a real tail to replay
+    for lo in range(cut, n_act - gap, ingest_batch):
+        chunk = rows[lo:min(lo + ingest_batch, n_act - gap)]
+        ref.ingest_many("actions", chunk)
+        rep.ingest_many("actions", chunk)
+    ref.ingest_many("actions", rows[n_act - gap:])
+    rep.ingest_many("actions", rows[n_act - gap:])
+
+    # ---- heal: promotion + tail replay + pre-agg rebuild --------------
+    recs = rep.heal()
+    rec = recs[0]
+    recovery_ms = rec.recovery_s * 1e3
+    emit("failover_recovery_ms", recovery_ms * 1e3,
+         f"ms={recovery_ms:.1f} shard={rec.shard} "
+         f"replica={rec.replica} replayed={rec.replayed_entries}")
+    stats = rep.replication_stats()
+    emit("failover_max_lag_entries", float(stats["max_lag_seen"]),
+         f"safe_offset={stats['safe_offset']} "
+         f"leader_offset={stats['leader_offset']}")
+
+    # ---- post-failover latency + the bitwise gate ---------------------
+    rep.reset_stats()
+    us_post = timeit(lambda: rep.request_batch([dict(r) for r in probe]),
+                     warmup=1, iters=iters)
+    pcts = rep.latency_percentiles()
+    emit("failover_post_heal_us_per_req", us_post / probe_b,
+         f"p50={pcts.get('TP50', 0):.3f}ms p99={pcts.get('TP99', 0):.3f}ms "
+         f"vs_pre={us_pre / us_post:.2f}x")
+    _assert_parity(ref, rep, probe, "post-failover")
+    _assert_parity(ref, rep, [a.row(i) for i in range(probe_b)],
+                   "post-failover-cold")
+    emit("failover_bitwise_parity", 0.0,
+         f"PASS B={probe_b} features x2 probes (array_equal, floats "
+         f"included)")
+
+    ceiling = float(os.environ.get("FAILOVER_RECOVERY_CEILING_MS",
+                                   "30000"))
+    if recovery_ms > ceiling:
+        print(f"FAIL: recovery {recovery_ms:.1f}ms exceeds ceiling "
+              f"{ceiling:.0f}ms", flush=True)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke sizes (seconds, not minutes)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    sys.exit(main(quick=args.quick, tiny=args.tiny))

@@ -101,7 +101,10 @@ def replay_online(cs: CompiledScript, tables: Dict[str, Table],
                   capacity: Optional[int] = None,
                   use_preagg: bool = False,
                   n_shards: Optional[int] = None,
-                  mesh=None) -> Dict[str, np.ndarray]:
+                  mesh=None,
+                  replication: int = 0,
+                  kill_shard_at: Optional[int] = None,
+                  ship_every: int = 3) -> Dict[str, np.ndarray]:
     """Feed rows through the online store in arrival order; collect the
     request-mode features of every base-table row.
 
@@ -111,6 +114,18 @@ def replay_online(cs: CompiledScript, tables: Dict[str, Table],
     ``online_sharded_batch`` — the store-side mirror of
     ``offline_sharded``, so the two sharded executors can be gated
     against each other end to end.
+
+    With ``replication=R`` the sharded replay additionally runs R
+    follower replicas per shard fed from the store binlog every
+    ``ship_every`` ingested events, and ``kill_shard_at=k`` injects a
+    failure mid-traffic: immediately before serving base-row request
+    ``k``, the shard owning that request's key is killed (resident rows
+    + pre-agg plane wiped) and failed over — most-caught-up follower
+    promoted, binlog tail replayed, pre-agg plane recovered from the
+    snapshot watermark.  The surviving request stream is returned as
+    usual, so ``verify_consistency(bitwise=True, ...)`` gates that
+    serving THROUGH a failover is bitwise identical to a replay that
+    never failed.
     """
     base = cs.script.base_table
     need = cs.required_store_columns()
@@ -141,11 +156,30 @@ def replay_online(cs: CompiledScript, tables: Dict[str, Table],
     else:
         pre_states = cs.init_preagg_states()
 
+    repl = controller = snap = None
+    if replication:
+        if not sharded:
+            raise ValueError("replication needs a sharded replay "
+                             "(n_shards= or mesh=)")
+        from ..storage.replication import (FailoverController,
+                                           ReplicationManager,
+                                           recover_preagg_shard)
+        repl = ReplicationManager(store, replication)
+        controller = FailoverController(repl)
+        # pre-agg recovery snapshot at watermark 0: the replay never
+        # truncates its binlog, so recovery replays the full history
+        snap = dict(pre_states) if pre_states is not None else None
+    elif kill_shard_at is not None:
+        raise ValueError("kill_shard_at needs replication >= 1 "
+                         "(no follower to promote)")
+
     n_base = len(tables[base])
     outputs: Dict[str, List[np.ndarray]] = {}
     order_col = cs.script.order_column
     part_keys = {w.node.spec.partition_by for w in cs.windows}
     join_keys = {j.left_key for j in cs.script.last_joins}
+    n_events = 0
+    n_served = 0
 
     for ts, rank, i, tname in _event_stream(cs, tables):
         table = tables[tname]
@@ -157,6 +191,25 @@ def replay_online(cs: CompiledScript, tables: Dict[str, Table],
         values = {c: float(row[c]) for c in need[tname]}
 
         if tname == base:
+            if controller is not None and kill_shard_at is not None \
+                    and n_served == kill_shard_at:
+                # fault injection: the shard owning THIS request's key
+                # dies (rows + pre-agg plane lost), is failed over, and
+                # the request is served by the promoted follower
+                shard = int(store.owner_of_keys(np.asarray([key]))[0])
+                store.wipe_shard(shard)
+                if pre_states is not None:
+                    empty = cs.init_preagg_states_sharded(store.n_shards)
+                    for wi, w in enumerate(cs.windows):
+                        if w.preagg is None:
+                            continue
+                        pre_states[wi] = w.preagg.restore_shard_plane(
+                            pre_states[wi], empty[wi], shard)
+                controller.mark_dead(shard)
+                controller.failover(shard)
+                if pre_states is not None:
+                    pre_states = recover_preagg_shard(
+                        cs, pre_states, snap, 0, store, shard, owned)
             if sharded:
                 batch = cs.online_sharded_batch(
                     store, [key], [ts], {c: [v] for c, v in values.items()},
@@ -167,6 +220,7 @@ def replay_online(cs: CompiledScript, tables: Dict[str, Table],
                                   preagg_states=pre_states)
             for k, v in feats.items():
                 outputs.setdefault(k, []).append(np.asarray(v))
+            n_served += 1
         store.put(tname, key, ts, values)
         if not use_preagg:
             pass
@@ -179,6 +233,9 @@ def replay_online(cs: CompiledScript, tables: Dict[str, Table],
         else:
             pre_states = cs.preagg_update(pre_states, tname, key, ts,
                                           values)
+        n_events += 1
+        if repl is not None and n_events % max(1, ship_every) == 0:
+            repl.ship()
 
     # rows were replayed in ts order; restore original base-row order
     base_ts = tables[base].columns[order_col]
@@ -201,8 +258,16 @@ def verify_consistency(cs: CompiledScript, tables: Dict[str, Table],
                        rtol: float = 1e-4,
                        n_shards: Optional[int] = None,
                        mesh=None,
-                       bitwise: Optional[bool] = None) -> ConsistencyReport:
+                       bitwise: Optional[bool] = None,
+                       replication: int = 0,
+                       kill_shard_at: Optional[int] = None,
+                       ship_every: int = 3) -> ConsistencyReport:
     """Offline-vs-online replay gate.
+
+    ``replication=R`` + ``kill_shard_at=k`` run the online side through
+    a mid-replay shard kill and failover (see ``replay_online``): the
+    offline reference never sees the fault, so a passing ``bitwise=True``
+    report proves recovery is exact, not approximate.
 
     With ``n_shards``/``mesh`` BOTH executors run sharded: the offline
     side through ``offline_sharded`` (whose results are bit-exact vs the
@@ -225,7 +290,10 @@ def verify_consistency(cs: CompiledScript, tables: Dict[str, Table],
     else:
         offline = cs.offline(tables)
     online = replay_online(cs, tables, use_preagg=use_preagg,
-                           n_shards=n_shards, mesh=mesh)
+                           n_shards=n_shards, mesh=mesh,
+                           replication=replication,
+                           kill_shard_at=kill_shard_at,
+                           ship_every=ship_every)
     mism: List[str] = []
     max_abs = 0.0
     max_rel = 0.0

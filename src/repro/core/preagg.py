@@ -359,6 +359,27 @@ class PreAgg:
             out[lvl] = jnp.asarray(moved)
         return out
 
+    def restore_shard_plane(self, state, source, shard: int):
+        """Replace shard ``shard``'s bucket plane in a stacked state with
+        ``source``'s plane for the same shard; every other shard's plane
+        is untouched (recovery path: the killed shard's plane comes back
+        from a checkpoint cut at a binlog watermark — or from the
+        identity-initialized ``init_state_stacked`` when wiping — and the
+        binlog tail past the watermark is then replayed through the SAME
+        ordered ``update_many_sharded`` fold, whose cur-seeded per-group
+        left fold is batch-boundary independent, so the recovered plane
+        is bitwise equal to the plane that was lost).  Runs through host
+        memory: recovery is a cold path, and an ``at[].set`` scatter
+        into a mesh-placed plane with a replicated index has
+        incompatible shardings (callers re-place afterwards — see
+        ``FeatureEngine._place_pre``)."""
+        def _put(live, src):
+            out = np.asarray(jax.device_get(live)).copy()
+            out[shard] = np.asarray(jax.device_get(src), out.dtype)[shard]
+            return jnp.asarray(out)
+
+        return jax.tree_util.tree_map(_put, state, source)
+
     # ------------------------------------------------------------------ query
     def fold_online(self, states, w, key, ts, values, pre_state,
                     gather: Callable) -> Dict[str, jnp.ndarray]:

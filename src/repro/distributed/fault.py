@@ -1,21 +1,28 @@
 """Fault tolerance for 1000+-node operation (DESIGN.md §5).
 
-Four mechanisms, all exercised by tests/test_fault.py:
+Four mechanisms, exercised by tests/test_distributed.py (unit policies)
+and tests/test_replication.py (failover integration on the sharded
+serving path):
 
   * ``CheckpointManager`` — sharded checkpoint/restore: each host saves
     its local shards (npz per host, index json); restore re-assembles
-    under a *different* mesh if needed (elastic resharding).
+    under a *different* mesh if needed (elastic resharding) and
+    validates the saved tree structure/leaf count against the template
+    before zipping leaves.
   * ``ElasticPlanner`` — given a changed device count, recompute the
     largest valid (data, model) mesh and a resharding plan description.
   * ``StragglerMitigator`` — deadline-based backup dispatch: track
     per-step host latencies (EMA + deviation), flag stragglers, reassign
     their data shards to backups (speculative execution, MapReduce-style).
-  * ``HeartbeatMonitor`` — host liveness bookkeeping driving the above.
+  * ``HeartbeatMonitor`` — host liveness bookkeeping driving the above
+    *and* the serving-path ``storage.replication.FailoverController``
+    (shards are "hosts"; a shard whose heartbeats stop is failed over to
+    its most-caught-up follower — see ``most_caught_up`` below).
 
 On a real cluster the save/load paths point at a distributed FS and the
 monitors read health RPCs; the policies (what to save, when to re-mesh,
-who backs up whom) are what this module contributes, and they are
-hardware-independent.
+who backs up whom, who is promoted) are what this module contributes,
+and they are hardware-independent.
 """
 
 from __future__ import annotations
@@ -30,7 +37,17 @@ import jax
 import numpy as np
 
 __all__ = ["CheckpointManager", "ElasticPlanner", "StragglerMitigator",
-           "HeartbeatMonitor"]
+           "HeartbeatMonitor", "most_caught_up"]
+
+
+def most_caught_up(acked: Dict[int, int]) -> int:
+    """Promotion policy: the replica that has applied the highest log
+    offset loses the least data on promotion.  Ties break toward the
+    lowest replica id so concurrent deciders pick the same winner
+    deterministically."""
+    if not acked:
+        raise ValueError("no replicas to promote")
+    return min(acked, key=lambda r: (-acked[r], r))
 
 
 class CheckpointManager:
@@ -68,14 +85,37 @@ class CheckpointManager:
 
     def restore(self, template: Any, step: Optional[int] = None,
                 host_id: int = 0) -> Any:
-        """Restore into ``template``'s structure (shapes re-validated —
-        a changed mesh reshard reuses the same full arrays)."""
+        """Restore into ``template``'s structure.
+
+        The saved treedef/leaf count is validated against the template
+        BEFORE any leaf is zipped: a template whose pytree structure
+        drifted since the save (renamed dict key, added window, …) must
+        fail loudly, not silently pair leaf i of one structure with
+        leaf i of another.  Shapes are re-validated per leaf (a changed
+        mesh reshard reuses the same full arrays)."""
         step = step if step is not None else self.latest_step()
         if step is None:
             raise FileNotFoundError("no checkpoint found")
         path = self.dir / f"step_{step:08d}.host{host_id}.npz"
         data = np.load(path)
         leaves, treedef = jax.tree_util.tree_flatten(template)
+        index_path = self.dir / f"step_{step:08d}.index.json"
+        saved_n = len(data.files)
+        saved_treedef = None
+        if index_path.exists():
+            index = json.loads(index_path.read_text())
+            saved_n = index.get("n_leaves", saved_n)
+            saved_treedef = index.get("treedef")
+        if saved_n != len(leaves):
+            raise ValueError(
+                f"checkpoint step {step} holds {saved_n} leaves but the "
+                f"template has {len(leaves)}: the state structure changed "
+                f"since the save — restoring would zip misaligned leaves")
+        if saved_treedef is not None and saved_treedef != str(treedef):
+            raise ValueError(
+                f"checkpoint step {step} treedef does not match the "
+                f"template's:\n  saved:    {saved_treedef}\n  template: "
+                f"{treedef}\nthe state structure changed since the save")
         restored = []
         for i, leaf in enumerate(leaves):
             arr = data[f"leaf_{i}"]
@@ -136,6 +176,14 @@ class ElasticPlanner:
 
 
 class HeartbeatMonitor:
+    """Host liveness bookkeeping.
+
+    A host registers by beating; one that has never beaten counts as
+    dead (an unprovisioned replica must not be treated as healthy).
+    ``dead`` is the serving-path trigger: the ``FailoverController``
+    promotes a follower for every shard whose heartbeats lapse.
+    """
+
     def __init__(self, n_hosts: int, timeout_s: float = 30.0):
         self.n_hosts = n_hosts
         self.timeout_s = timeout_s
@@ -148,6 +196,13 @@ class HeartbeatMonitor:
         now = now if now is not None else time.time()
         return [h for h in range(self.n_hosts)
                 if now - self.last_seen.get(h, -1e18) <= self.timeout_s]
+
+    def dead(self, now: Optional[float] = None) -> List[int]:
+        """Hosts whose last heartbeat is older than the timeout
+        (never-beaten hosts included)."""
+        now = now if now is not None else time.time()
+        return [h for h in range(self.n_hosts)
+                if now - self.last_seen.get(h, -1e18) > self.timeout_s]
 
 
 class StragglerMitigator:

@@ -34,6 +34,17 @@ between shards (``core.union.LoadBalancer`` greedy LPT) together with
 their pre-agg state.  With ``n_shards`` but no mesh, the same stacked
 computation runs as a vmap over logical shards on one device.
 
+Replicated serving (paper §5 deployment, replicated tablets):
+``FeatureEngine(replication=R)`` attaches R follower replicas per shard
+(``storage.replication.ReplicationManager``) fed asynchronously from the
+store binlog every ``ship_every`` ingested rows, a
+``FailoverController`` that promotes the most-caught-up follower when a
+shard dies, and snapshot watermarks for pre-agg plane recovery.
+``kill_shard()`` / ``heal()`` are the fault-injection hooks
+(tests/test_replication.py, benchmarks/bench_failover.py): serving
+after heal is **bitwise identical** to a never-killed engine because
+promotion replays the same ordered binlog apply path the leader ran.
+
 ``ServingEngine`` wraps a model's prefill/decode for batched requests —
 the "online ML" consumer of the features.
 """
@@ -41,6 +52,7 @@ the "online ML" consumer of the features.
 from __future__ import annotations
 
 import collections
+import dataclasses
 import time
 from typing import Any, Deque, Dict, List, Optional, Sequence
 
@@ -50,7 +62,11 @@ import numpy as np
 
 from ..core.compiler import CompiledScript, compile_script
 from ..core.types import Table
+from ..distributed.fault import CheckpointManager
 from ..storage.memest import MemoryGuard
+from ..storage.replication import (FailoverController, PromotionRecord,
+                                   ReplicationManager,
+                                   recover_preagg_shard)
 from ..storage.timestore import OnlineStore, ShardedOnlineStore
 from .batcher import RequestBatcher
 
@@ -68,7 +84,10 @@ class FeatureEngine:
                  latency_window: int = 16384,
                  mesh=None, n_shards: Optional[int] = None,
                  shard_axis: str = "shard", route_slots: int = 1024,
-                 retention=None, compact_every: int = 256):
+                 retention=None, compact_every: int = 256,
+                 replication: int = 0, ship_every: int = 64,
+                 checkpoint_dir: Optional[str] = None,
+                 heartbeat_timeout_s: float = 60.0):
         self.cs: CompiledScript = compile_script(
             _parse(script_sql, time_unit), tables=tables)
         self.use_preagg = use_preagg
@@ -132,6 +151,30 @@ class FeatureEngine:
         # limit; percentiles are over the most recent window
         self.latencies_ms: Deque[float] = collections.deque(
             maxlen=latency_window)
+        # ---- replication (per-shard followers + failover) ------------
+        self.replication = int(replication)
+        if self.replication and not self.sharded:
+            raise ValueError("replication=R needs a sharded engine "
+                             "(mesh= or n_shards=); an unsharded store "
+                             "has no shard to replicate")
+        self.ckpt = (CheckpointManager(checkpoint_dir)
+                     if checkpoint_dir else None)
+        self.failovers: List[PromotionRecord] = []
+        if self.replication:
+            self.repl = ReplicationManager(self.store, self.replication)
+            self.controller = FailoverController(
+                self.repl, timeout_s=heartbeat_timeout_s)
+            self.ship_every = max(1, int(ship_every))
+            self._rows_since_ship = 0
+            # pre-agg recovery snapshot: (binlog watermark, stacked
+            # bucket planes at that watermark).  jnp leaves are
+            # immutable and every update replaces them functionally, so
+            # a shallow dict copy IS a consistent point-in-time snapshot.
+            self._snapshot = (0, dict(self.pre_states)
+                              if self.pre_states is not None else None)
+        else:
+            self.repl = None
+            self.controller = None
 
     # ---------------------------------------------------------- retention
     def _derive_retention(self, retention) -> Dict[str, Optional[int]]:
@@ -183,6 +226,15 @@ class FeatureEngine:
         evicted = before - self.store.n_rows(table)
         if evicted > 0:
             self.guard.release(evicted * (64 + 8 * len(self._need[table])))
+        if self.repl is not None:
+            # eviction is a replication barrier: binlog shipping replays
+            # puts only, so followers must first apply every entry the
+            # leader has (ship to the log head) and then run the SAME
+            # eviction pass — otherwise a lagging follower could keep a
+            # row the leader dropped (or vice versa) and promotion would
+            # not be bitwise
+            self.repl.ship()
+            self.repl.evict(table, horizon_ts)
 
     def _after_ingest(self, table: str, n_rows: int, max_ts: int):
         """Scheduled retention tick on the ingest path.
@@ -196,6 +248,12 @@ class FeatureEngine:
         if max_ts > self._hwm_ts.get(table, -(2**31)):
             self._hwm_ts[table] = max_ts
         self._consumed_offset = self.store._binlog_offset
+        if self.repl is not None:
+            self._rows_since_ship += n_rows
+            if self._rows_since_ship >= self.ship_every:
+                self._rows_since_ship = 0
+                self.repl.ship()
+                self.controller.beat()
         if not self.retention_ms:
             return
         self._pending_rows[table] = self._pending_rows.get(table, 0) + \
@@ -206,7 +264,19 @@ class FeatureEngine:
         horizon = self.retention_ms.get(table)
         if horizon is not None:
             self._evict_release(table, self._hwm_ts[table] - horizon)
-        self.store.truncate_binlog(self._consumed_offset)
+        self.store.truncate_binlog(self._durable_offset())
+
+    def _durable_offset(self) -> int:
+        """Binlog truncation low-watermark: entries below it are (a)
+        folded into pre-agg state (consumed), (b) applied by EVERY
+        follower replica (``ReplicationLog.safe_offset``), and (c) above
+        the latest recovery snapshot's watermark — so neither a lagging
+        follower catch-up, a promotion tail replay, nor a snapshot +
+        replay recovery can ever need a truncated entry."""
+        off = self._consumed_offset
+        if self.repl is not None:
+            off = min(off, self.repl.log.safe_offset(), self._snapshot[0])
+        return off
 
     # ------------------------------------------------------------- ingest
     def ingest(self, table: str, row: Dict[str, Any]):
@@ -344,7 +414,97 @@ class FeatureEngine:
                 self.pre_states[wi] = w.preagg.migrate_state_sharded(
                     self.pre_states[wi], old_owner[wi], new_owner)
             self.pre_states = self._place_pre(self.pre_states)
+        if self.repl is not None:
+            # ownership changed under shipped history: the binlog filter
+            # and pre-agg masks now route differently, so followers are
+            # re-seeded from the migrated leaders and the recovery
+            # snapshot is re-cut — replay never crosses a rebalance
+            self.repl.resync()
+            self.checkpoint()
         return True
+
+    # --------------------------------------------------------- replication
+    def _require_replication(self):
+        if self.repl is None:
+            raise ValueError("engine was built without replication=R")
+
+    def ship_replicas(self) -> int:
+        """Ship the unacked binlog tail to every follower now (the
+        ingest path does this every ``ship_every`` rows)."""
+        self._require_replication()
+        n = self.repl.ship()
+        self.controller.beat()
+        return n
+
+    def checkpoint(self) -> int:
+        """Cut a recovery snapshot at the current binlog offset: pre-agg
+        planes in memory (always) and, with ``checkpoint_dir=``, the
+        full stacked state via ``CheckpointManager`` (step == binlog
+        watermark, so cold recovery = restore + replay the tail).
+        Returns the watermark."""
+        wm = self.store._binlog_offset
+        pre = dict(self.pre_states) if self.pre_states is not None else None
+        if self.repl is not None:
+            self._snapshot = (wm, pre)
+        if self.ckpt is not None:
+            self.ckpt.save(wm, {"tables": dict(self.store.tables),
+                                "pre": pre})
+        return wm
+
+    def kill_shard(self, shard: int) -> Dict[str, Any]:
+        """Fault injection: shard ``shard`` dies — its resident rows and
+        pre-agg bucket plane are lost (wiped), and the controller marks
+        it dead.  Serving continues (the dead shard's keys read empty)
+        until ``heal()`` promotes a follower.  Returns the replication
+        lag at the moment of death (entries each follower was behind)."""
+        self._require_replication()
+        end = self.store._binlog_offset
+        lag = {r: int(v) for r, v in enumerate(
+            self.repl.log.lag(end)[shard])}
+        self.store.wipe_shard(shard)
+        if self.pre_states is not None:
+            empty = self.cs.init_preagg_states_sharded(self.store.n_shards)
+            for wi, w in enumerate(self.cs.windows):
+                if w.preagg is None:
+                    continue
+                self.pre_states[wi] = w.preagg.restore_shard_plane(
+                    self.pre_states[wi], empty[wi], shard)
+        self.controller.mark_dead(shard)
+        return {"shard": shard, "leader_offset": end,
+                "lag_at_kill": lag}
+
+    def heal(self) -> List[PromotionRecord]:
+        """Fail over every dead shard: promote its most-caught-up
+        follower (binlog tail replayed through the same ordered apply
+        path) into the leader slot, and rebuild its pre-agg plane from
+        the latest snapshot + binlog replay restricted to the shard.
+        Serving afterwards is bitwise identical to a never-killed
+        engine (tests/test_replication.py)."""
+        self._require_replication()
+        healed = []
+        for shard in self.controller.dead_shards():
+            t0 = time.perf_counter()
+            rec = self.controller.failover(shard)
+            if self.pre_states is not None:
+                wm, snap = self._snapshot
+                self.pre_states = recover_preagg_shard(
+                    self.cs, self.pre_states, snap, wm, self.store,
+                    shard, self._preagg_owned())
+                self.pre_states = self._place_pre(self.pre_states)
+            rec.recovery_s = time.perf_counter() - t0   # incl. pre-agg
+            healed.append(rec)
+        self.failovers.extend(healed)
+        return healed
+
+    def replication_stats(self) -> Dict[str, Any]:
+        """Lag/recovery observability for dashboards and benchmarks."""
+        if self.repl is None:
+            return {"n_replicas": 0}
+        st = self.repl.stats()
+        st["snapshot_watermark"] = self._snapshot[0]
+        st["dead_shards"] = self.controller.dead_shards()
+        st["failovers"] = [dataclasses.asdict(r) for r in self.failovers]
+        return st
 
     def _preagg_owned(self):
         """Per-window ownership masks, cached against the store's
@@ -454,6 +614,15 @@ class FeatureEngine:
             # advance the high-watermark/consumed offset without a
             # pending-row tick (a load is one-shot, not stream traffic)
             self._after_ingest(table, 0, int(np.max(ts_arr)))
+        if self.repl is not None:
+            # a load is a snapshot barrier: it overwrites store state
+            # (replaying the full binlog would resurrect pre-load rows)
+            # and its binlog entries are written in sorted — not
+            # arrival — order, so pre-agg replay must never cross it.
+            # Followers are re-seeded from the loaded leaders and the
+            # recovery watermark moves past the load.
+            self.repl.resync()
+            self.checkpoint()
 
 
 def _parse(sql, time_unit):

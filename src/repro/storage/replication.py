@@ -1,0 +1,421 @@
+"""Per-shard replication, failover, and bitwise recovery for the
+sharded serving path (paper §5 deployment: replicated tablets).
+
+Every shard of a ``ShardedOnlineStore`` gets R FOLLOWER replicas placed
+on distinct mesh devices.  The leader (stacked slot s — the only replica
+the serving path ever reads) applies writes and the store binlog is the
+shipping stream: ``ReplicationManager.ship`` reads each follower's
+unacked log tail, filters it to the shard's key range, and applies it
+through the SAME ordered ``insert_many`` path the leader ran —
+``insert_many`` of any batching of a row sequence equals the sequential
+inserts, so a fully-shipped follower is **bitwise identical** to its
+leader, not approximately in sync.  ``ReplicationLog`` tracks
+per-follower acked offsets and replication lag.
+
+Failure handling is split the same way the paper splits it:
+
+  * ``FailoverController`` (driving ``distributed.fault.HeartbeatMonitor``
+    with shards as hosts) detects a dead shard, promotes its
+    most-caught-up follower (``distributed.fault.most_caught_up``),
+    replays the follower's unacked binlog tail, and installs the result
+    into the leader slot (``ShardedOnlineStore.install_shard``) —
+    routing is untouched, serving resumes bitwise-identically.
+  * Cold recovery (no live follower) is checkpoint-restore + binlog
+    replay: ``cold_recover_shard`` restores the shard's slices from a
+    ``distributed.fault.CheckpointManager`` snapshot cut at a binlog
+    watermark and replays the tail past the watermark.  Pre-aggregation
+    bucket planes recover the same way (``recover_preagg_shard`` +
+    ``PreAgg.restore_shard_plane``) from the consumed-offset watermark.
+
+Consistency barriers: shipping replays *puts* only, so any operation
+that mutates leader state outside the log — ``bulk_load`` (whole-state
+overwrite), ``rebalance`` (ownership change), TTL eviction — must be a
+barrier.  ``ReplicationManager.resync`` re-seeds followers from leader
+slices (bulk_load / rebalance), and ``evict`` ships every follower to
+the log head first, then applies the identical eviction pass to each
+(``serve.engine.FeatureEngine`` calls it on the scheduled compaction
+tick).  Binlog truncation must never pass ``safe_offset()`` — the
+minimum follower acked offset — or a lagging follower could no longer
+be caught up (``FeatureEngine`` clamps its truncation watermark to it).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..distributed.fault import (CheckpointManager, HeartbeatMonitor,
+                                 most_caught_up)
+from .timestore import (INT_MAX, ShardedOnlineStore, StoreState,
+                        evict_before, insert_many, make_state, next_pow2)
+
+__all__ = ["ReplicationLog", "ReplicationManager", "FailoverController",
+           "PromotionRecord", "apply_entries", "cold_recover_shard",
+           "recover_preagg_shard"]
+
+# a binlog entry: (table, key, ts, {col: value})
+Entry = Tuple[str, int, int, Dict[str, float]]
+
+
+class ReplicationLog:
+    """Per-(shard, follower) acked offsets over the store's binlog.
+
+    Offsets are ABSOLUTE binlog offsets (stable across truncation);
+    ``acked[s, r]`` is the offset through which follower r of shard s
+    has applied every entry owned by shard s.  Lag is measured in log
+    entries — the unit the failover replay actually pays for.
+    """
+
+    def __init__(self, n_shards: int, n_replicas: int):
+        self.n_shards = int(n_shards)
+        self.n_replicas = int(n_replicas)
+        self.acked = np.zeros((n_shards, n_replicas), np.int64)
+
+    def ack(self, shard: int, replica: int, offset: int) -> None:
+        self.acked[shard, replica] = max(self.acked[shard, replica],
+                                         int(offset))
+
+    def lag(self, leader_offset: int) -> np.ndarray:
+        """(n_shards, n_replicas) entries each follower is behind."""
+        return np.maximum(0, int(leader_offset) - self.acked)
+
+    def max_lag(self, leader_offset: int) -> int:
+        return int(self.lag(leader_offset).max(initial=0))
+
+    def safe_offset(self) -> int:
+        """Truncation low-watermark: the binlog below min(acked) has
+        been applied by EVERY follower and may be dropped."""
+        return int(self.acked.min())
+
+    def most_caught_up(self, shard: int) -> int:
+        """Promotion choice for one shard (distributed.fault policy)."""
+        return most_caught_up(
+            {r: int(self.acked[shard, r])
+             for r in range(self.n_replicas)})
+
+
+@dataclasses.dataclass
+class PromotionRecord:
+    """What one failover did (recovery/lag stats surface)."""
+
+    shard: int
+    replica: int
+    acked_at_promotion: int        # follower offset before tail replay
+    replayed_entries: int          # unacked tail applied at promotion
+    recovery_s: float
+
+
+def _table_runs(entries: Sequence[Entry]):
+    """Maximal runs of consecutive same-table entries, order preserved.
+
+    Batching per run (not per table globally) keeps the cross-table
+    interleaving intact — a UNION window's pre-agg buckets fold rows of
+    several tables into one (key, bucket) slot, so reordering across
+    tables would change order-sensitive combines.
+    """
+    i, n = 0, len(entries)
+    while i < n:
+        j = i
+        table = entries[i][0]
+        while j < n and entries[j][0] == table:
+            j += 1
+        run = entries[i:j]
+        keys = np.asarray([e[1] for e in run], np.int32)
+        ts = np.asarray([e[2] for e in run], np.int32)
+        cols: Dict[str, np.ndarray] = {}
+        for c in {c for e in run for c in e[3]}:
+            cols[c] = np.asarray([e[3].get(c, 0.0) for e in run],
+                                 np.float32)
+        yield table, keys, ts, cols
+        i = j
+
+
+def apply_entries(tables: Dict[str, StoreState],
+                  col_specs: Dict[str, Dict[str, Any]],
+                  entries: Sequence[Entry]) -> Dict[str, StoreState]:
+    """Apply binlog entries to per-shard (unstacked) states through the
+    one ordered ``insert_many`` merge — the identical code path the
+    leader's routed ``put_many`` ran, so the result is bitwise equal to
+    the leader's slice no matter how the entries are re-batched."""
+    for table, keys, ts, cols in _table_runs(entries):
+        n = keys.shape[0]
+        m = next_pow2(n)
+        k_pad = np.full((m,), INT_MAX, np.int32)
+        t_pad = np.full((m,), INT_MAX, np.int32)
+        k_pad[:n] = keys
+        t_pad[:n] = ts
+        vals = {}
+        for name, dtype in col_specs[table].items():
+            v = np.zeros((m,), dtype)
+            if name in cols:
+                v[:n] = np.asarray(cols[name], dtype)
+            vals[name] = jnp.asarray(v)
+        tables[table] = insert_many(tables[table], jnp.asarray(k_pad),
+                                    jnp.asarray(t_pad), vals, n)
+    return tables
+
+
+@dataclasses.dataclass
+class _Follower:
+    replica: int
+    device: Optional[Any]
+    tables: Dict[str, StoreState]
+
+
+class ReplicationManager:
+    """R follower replicas per shard, fed from the store binlog.
+
+    Followers live outside the serving layout, on devices distinct from
+    their leader's when a mesh is present (``(s + 1 + r) % n_devices`` —
+    a node loss never takes a shard and all its replicas together).
+    """
+
+    def __init__(self, store: ShardedOnlineStore, n_replicas: int = 1):
+        if n_replicas < 1:
+            raise ValueError("replication needs >= 1 follower per shard")
+        self.store = store
+        self.n_replicas = int(n_replicas)
+        self.log = ReplicationLog(store.n_shards, n_replicas)
+        self.followers: Dict[Tuple[int, int], _Follower] = {}
+        self._devices = (list(store.mesh.devices.flat)
+                         if store.mesh is not None else [])
+        for s in range(store.n_shards):
+            for r in range(n_replicas):
+                dev = (self._devices[(s + 1 + r) % len(self._devices)]
+                       if self._devices else None)
+                self.followers[(s, r)] = _Follower(r, dev, {})
+        self.n_shipped = 0
+        self.max_lag_seen = 0
+        self._ensure_tables()
+
+    # ------------------------------------------------------------ state
+    def _ensure_tables(self) -> None:
+        """Provision empty follower states for any store table missing
+        one (tables created after the manager attaches included)."""
+        for name, specs in self.store.col_specs.items():
+            for f in self.followers.values():
+                if name not in f.tables:
+                    st = make_state(self.store.capacity, specs)
+                    f.tables[name] = (jax.device_put(st, f.device)
+                                      if f.device is not None else st)
+
+    def _observe_lag(self) -> None:
+        self.max_lag_seen = max(self.max_lag_seen,
+                                self.log.max_lag(self.store._binlog_offset))
+
+    # ------------------------------------------------------------- ship
+    def ship(self, shard: Optional[int] = None,
+             replica: Optional[int] = None) -> int:
+        """Ship the unacked binlog tail to followers (async replication
+        tick).  Returns the number of entries applied.  Each follower
+        reads from its OWN acked offset, filters the tail to its shard's
+        key range under the current assignment, and applies it through
+        ``apply_entries``; acked offsets advance to the log head."""
+        self._ensure_tables()
+        self._observe_lag()
+        applied = 0
+        shards = range(self.store.n_shards) if shard is None else [shard]
+        for s in shards:
+            replicas = (range(self.n_replicas) if replica is None
+                        else [replica])
+            for r in replicas:
+                f = self.followers[(s, r)]
+                frm = int(self.log.acked[s, r])
+                entries, end = self.store.read_binlog(frm)
+                if entries:
+                    keys = np.asarray([e[1] for e in entries])
+                    own = self.store.owner_of_keys(keys) == s
+                    mine = [e for e, o in zip(entries, own) if o]
+                    if mine:
+                        apply_entries(f.tables, self.store.col_specs,
+                                      mine)
+                        applied += len(mine)
+                self.log.ack(s, r, end)
+        self.n_shipped += applied
+        return applied
+
+    def resync(self, shard: Optional[int] = None) -> None:
+        """Re-seed followers from the leader slices and ack them to the
+        log head.  The barrier for every leader mutation that bypasses
+        the binlog: ``bulk_load`` (state overwrite — replaying the full
+        log would resurrect pre-load rows), ``rebalance`` (the
+        ownership filter changed under shipped history), and follower
+        (re)provisioning after a promotion."""
+        self._ensure_tables()
+        end = self.store._binlog_offset
+        shards = range(self.store.n_shards) if shard is None else [shard]
+        for s in shards:
+            for r in range(self.n_replicas):
+                f = self.followers[(s, r)]
+                for name in self.store.tables:
+                    st = self.store.shard_state(name, s)
+                    f.tables[name] = (jax.device_put(st, f.device)
+                                      if f.device is not None else st)
+                self.log.acked[s, r] = end
+
+    def evict(self, table: str, horizon_ts: int) -> None:
+        """Mirror a leader TTL eviction on every follower.  Callers must
+        ``ship()`` first (the engine's compaction tick does): evicting a
+        lagging follower out of log order could drop a not-yet-applied
+        late row on the leader but keep it on the follower."""
+        for f in self.followers.values():
+            f.tables[table] = evict_before(f.tables[table],
+                                           jnp.int32(horizon_ts))
+
+    # -------------------------------------------------------- promotion
+    def promote(self, shard: int) -> Tuple[int, int, Dict[str, StoreState]]:
+        """Promote the most-caught-up follower of a dead shard: replay
+        its unacked binlog tail (same ordered apply path), return
+        (replica, acked_before_replay, tables).  The caller installs the
+        tables into the leader slot and then ``resync(shard)``s so the
+        promoted follower's old slot becomes a fresh replica of the new
+        leader."""
+        r = self.log.most_caught_up(shard)
+        acked_before = int(self.log.acked[shard, r])
+        self.ship(shard=shard, replica=r)   # replay the unacked tail
+        return r, acked_before, self.followers[(shard, r)].tables
+
+    def stats(self) -> Dict[str, Any]:
+        end = self.store._binlog_offset
+        return {
+            "n_replicas": self.n_replicas,
+            "leader_offset": end,
+            "acked": self.log.acked.tolist(),
+            "lag_entries": self.log.lag(end).tolist(),
+            "max_lag_entries": self.log.max_lag(end),
+            "max_lag_seen": max(self.max_lag_seen,
+                                self.log.max_lag(end)),
+            "safe_offset": self.log.safe_offset(),
+            "n_shipped": self.n_shipped,
+        }
+
+
+class FailoverController:
+    """Detect dead shards and drive promotion.
+
+    Shards are the ``HeartbeatMonitor``'s hosts: every live shard beats
+    on serving-path activity, a shard whose beats lapse past the timeout
+    (or is explicitly ``mark_dead``-ed by fault injection) is failed
+    over — promote its most-caught-up follower, replay the unacked
+    tail, install into the leader slot, re-provision the follower.
+    """
+
+    def __init__(self, manager: ReplicationManager,
+                 timeout_s: float = 5.0,
+                 monitor: Optional[HeartbeatMonitor] = None,
+                 now: Optional[float] = None):
+        self.manager = manager
+        self.monitor = monitor or HeartbeatMonitor(
+            manager.store.n_shards, timeout_s=timeout_s)
+        self._killed: set = set()
+        self.records: List[PromotionRecord] = []
+        for s in range(manager.store.n_shards):
+            self.monitor.beat(s, now=now)      # provision = register
+
+    def beat(self, shard: Optional[int] = None,
+             now: Optional[float] = None) -> None:
+        """Heartbeat one shard (or every non-killed shard)."""
+        shards = (range(self.manager.store.n_shards) if shard is None
+                  else [shard])
+        for s in shards:
+            if s not in self._killed:
+                self.monitor.beat(s, now=now)
+
+    def mark_dead(self, shard: int) -> None:
+        self._killed.add(shard)
+
+    def dead_shards(self, now: Optional[float] = None) -> List[int]:
+        dead = set(self.monitor.dead(now=now)) | self._killed
+        return sorted(dead)
+
+    def failover(self, shard: int,
+                 now: Optional[float] = None) -> PromotionRecord:
+        """Promote + install + re-provision for one dead shard."""
+        t0 = time.perf_counter()
+        replica, acked_before, tables = self.manager.promote(shard)
+        self.manager.store.install_shard(shard, tables)
+        self.manager.resync(shard)             # fresh replicas of the
+        self._killed.discard(shard)            # ...new leader
+        self.monitor.beat(shard, now=now)
+        rec = PromotionRecord(
+            shard=shard, replica=replica,
+            acked_at_promotion=acked_before,
+            replayed_entries=self.manager.store._binlog_offset
+            - acked_before,
+            recovery_s=time.perf_counter() - t0)
+        self.records.append(rec)
+        return rec
+
+    def check(self, now: Optional[float] = None) -> List[PromotionRecord]:
+        """Fail over every currently-dead shard."""
+        return [self.failover(s, now=now)
+                for s in self.dead_shards(now=now)]
+
+
+# --------------------------------------------------------- cold recovery
+
+def cold_recover_shard(store: ShardedOnlineStore,
+                       ckpt: CheckpointManager, shard: int,
+                       watermark: Optional[int] = None) -> int:
+    """Checkpoint-restore + binlog-replay recovery of one shard's store
+    slices when NO follower survives: restore every table's stacked
+    state from the latest checkpoint (cut at binlog offset ==
+    checkpoint step), install shard ``shard``'s slices, then replay the
+    binlog tail past the watermark through the same ordered apply path.
+    Returns the number of replayed entries.  Bitwise by the same
+    argument as follower promotion — checkpoint + ordered log replay IS
+    the leader's own history."""
+    step = watermark if watermark is not None else ckpt.latest_step()
+    restored = ckpt.restore({t: store.tables[t] for t in store.tables},
+                            step=step)
+    slices = {t: jax.tree_util.tree_map(lambda x: jnp.asarray(x)[shard],
+                                        restored[t])
+              for t in restored}
+    entries, _ = store.read_binlog(int(step))
+    if entries:
+        keys = np.asarray([e[1] for e in entries])
+        own = store.owner_of_keys(keys) == shard
+        mine = [e for e, o in zip(entries, own) if o]
+        if mine:
+            apply_entries(slices, store.col_specs, mine)
+    else:
+        mine = []
+    store.install_shard(shard, slices)
+    return len(mine)
+
+
+def recover_preagg_shard(cs, pre_states: Dict[int, Any],
+                         snapshot: Dict[int, Any], watermark: int,
+                         store: ShardedOnlineStore, shard: int,
+                         owned_masks: Dict[int, np.ndarray]
+                         ) -> Dict[int, Any]:
+    """Recover one shard's pre-aggregation bucket planes from a snapshot
+    cut at binlog offset ``watermark``: restore the shard's plane from
+    the snapshot (``PreAgg.restore_shard_plane``; other shards' live
+    planes untouched), then replay the binlog tail [watermark, end)
+    through the SAME ``update_many_sharded`` fold with the ownership
+    mask restricted to the recovering shard — every other shard's
+    scatter is dropped, and the recovered plane is bitwise equal to the
+    lost one (the cur-seeded per-group fold is batch-boundary
+    independent)."""
+    for wi, w in enumerate(cs.windows):
+        if w.preagg is None:
+            continue
+        pre_states[wi] = w.preagg.restore_shard_plane(
+            pre_states[wi], snapshot[wi], shard)
+    masks_s = {}
+    for wi, m in owned_masks.items():
+        m = np.asarray(m)
+        only = np.zeros_like(m)
+        only[shard] = m[shard]
+        masks_s[wi] = only
+    entries, _ = store.read_binlog(int(watermark))
+    for table, keys, ts, cols in _table_runs(entries):
+        pre_states = cs.preagg_update_many_sharded(
+            pre_states, table, keys, ts, cols, masks_s)
+    return pre_states

@@ -344,7 +344,13 @@ class OnlineStore(_BinlogMixin):
         self.tables[table] = st
         ko = keys[order].tolist()
         tso = ts[order].tolist()
-        self.binlog.extend((table, ko[i], tso[i], {}) for i in range(n))
+        # entries carry the column values: the binlog must be a FULL
+        # record of every row so a replica/recovery replay of the log
+        # rebuilds the state bitwise (storage.replication)
+        co = {c: np.asarray(cols[c])[order].tolist() for c in cols}
+        self.binlog.extend(
+            (table, ko[i], tso[i], {c: float(co[c][i]) for c in co})
+            for i in range(n))
         self._binlog_offset += n
         return n
 
@@ -436,6 +442,13 @@ class ShardedOnlineStore(_BinlogMixin):
 
     ``capacity`` is PER SHARD: total resident rows = n_shards * capacity,
     and a skewed key distribution needs per-shard headroom.
+
+    Replication (``storage.replication``): slot s of the stacked layout
+    is shard s's LEADER; ``shard_state``/``install_shard``/``wipe_shard``
+    expose the per-shard slices follower replicas are seeded from and
+    promoted into, and the binlog (every entry carries table, key, ts
+    AND values) is the shipping stream that keeps followers bitwise
+    convergent with their leader.
     """
 
     def __init__(self, capacity: int, n_shards: Optional[int] = None,
@@ -588,7 +601,12 @@ class ShardedOnlineStore(_BinlogMixin):
                                          minlength=self.n_route_slots)
         order = np.lexsort((arrival, ts, keys))
         ko, tso = keys[order].tolist(), ts[order].tolist()
-        self.binlog.extend((table, ko[i], tso[i], {}) for i in range(n))
+        # full-fidelity entries: a log replay must rebuild values too
+        # (see OnlineStore.bulk_load / storage.replication)
+        co = {c: np.asarray(cols[c])[order].tolist() for c in cols}
+        self.binlog.extend(
+            (table, ko[i], tso[i], {c: float(co[c][i]) for c in co})
+            for i in range(n))
         self._binlog_offset += n
         return n
 
@@ -676,3 +694,43 @@ class ShardedOnlineStore(_BinlogMixin):
         self.assignment = new_assign
         self.n_rebalances += 1
         return True
+
+    # ------------------------------------------------------- replication
+    # Reads always go to the leader slot: slot s of the stacked pytree IS
+    # shard s's leader replica, and the serving path
+    # (``online_sharded_batch``) only ever gathers from it.  Follower
+    # replicas live OUTSIDE the stacked layout (storage.replication) and
+    # enter it exclusively through ``install_shard`` at promotion.
+
+    def shard_state(self, table: str, shard: int) -> StoreState:
+        """Unstacked copy of one shard's slice of ``table`` — the
+        leader's state, used to seed/resync follower replicas."""
+        return jax.tree_util.tree_map(lambda x: x[shard],
+                                      self.tables[table])
+
+    def install_shard(self, shard: int,
+                      tables: Dict[str, StoreState]) -> None:
+        """Write per-shard states into stacked slot ``shard`` (follower
+        promotion: the promoted replica becomes the leader for the
+        shard's key range; routing is untouched — key -> slot stays,
+        only the slot's contents are replaced)."""
+        for name, st in tables.items():
+            # through host memory: a scatter into a mesh-placed stacked
+            # array with a replicated index has incompatible shardings,
+            # and promotion is a cold-path host operation anyway
+            def _put(full, part):
+                out = np.asarray(jax.device_get(full)).copy()
+                out[shard] = np.asarray(jax.device_get(part), out.dtype)
+                return jnp.asarray(out)
+
+            stacked = jax.tree_util.tree_map(_put, self.tables[name], st)
+            self.tables[name] = self._place(stacked)
+
+    def wipe_shard(self, shard: int) -> None:
+        """Fault injection: shard ``shard`` loses all resident rows (the
+        dense analogue of a tablet node dying — its slot reads as an
+        empty, freshly-provisioned store until a replica is promoted
+        into it)."""
+        empty = {name: make_state(self.capacity, self.col_specs[name])
+                 for name in self.tables}
+        self.install_shard(shard, empty)

@@ -1,0 +1,92 @@
+"""Property-based tests of binlog offset stability (hypothesis).
+
+The replication design (storage/replication.py) leans on one invariant:
+binlog offsets are ABSOLUTE and stable — ``put_many`` returns the
+running total no matter how ingest and truncation interleave, surviving
+entries keep their offsets across ``truncate_binlog``, and reading below
+the truncation watermark raises the documented error instead of
+silently returning shifted entries.  A follower acked at offset k must
+mean "has applied exactly entries [0, k)" forever.
+"""
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.storage import timestore  # noqa: E402
+
+# op stream: ("put", n rows) | ("truncate", watermark octile) |
+# ("read", offset octile) — octiles scale into whatever range is live
+OPS = st.lists(
+    st.tuples(st.sampled_from(["put", "truncate", "read"]),
+              st.integers(min_value=0, max_value=7)),
+    min_size=1, max_size=12)
+
+
+@settings(max_examples=30, deadline=None)
+@given(ops=OPS)
+def test_binlog_offset_stability_under_interleaving(ops):
+    store = timestore.OnlineStore(capacity=128)
+    store.create_table("t", {"v": np.float32})
+    shadow = []       # absolute offset i -> (key, ts, value)
+    base = 0          # truncation low-watermark
+
+    for op, arg in ops:
+        if op == "put":
+            n = arg % 6 + 1
+            keys = (np.arange(n, dtype=np.int32) % 3) + 1
+            ts = np.arange(len(shadow), len(shadow) + n, dtype=np.int32)
+            vals = np.arange(n, dtype=np.float32) + len(shadow)
+            off = store.put_many("t", keys, ts, {"v": vals})
+            # absolute offsets: the running total, truncation-independent
+            assert off == len(shadow)
+            shadow.extend((int(keys[i]), int(ts[i]), float(vals[i]))
+                          for i in range(n))
+            assert store._binlog_offset == len(shadow)
+        elif op == "truncate":
+            span = len(shadow) - base
+            upto = base + (arg * span) // 8
+            dropped = store.truncate_binlog(upto)
+            assert dropped == max(0, upto - base)
+            base = max(base, upto)
+        else:
+            live = len(shadow) - base
+            frm = base + (arg * (live + 1)) // 8 if live else base
+            tail, end = store.read_binlog(frm)
+            assert end == len(shadow)
+            want = shadow[frm:]
+            assert len(tail) == len(want)
+            for e, (k, t, v) in zip(tail, want):
+                assert e[0] == "t" and e[1] == k and e[2] == t
+                assert e[3]["v"] == v
+            if base > 0:
+                # below the watermark: the documented error, not a
+                # silently shifted slice
+                with pytest.raises(ValueError, match="truncated"):
+                    store.read_binlog(base - 1)
+
+
+@settings(max_examples=20, deadline=None)
+@given(cuts=st.lists(st.integers(min_value=0, max_value=40), min_size=1,
+                     max_size=6))
+def test_truncation_is_idempotent_and_clamped(cuts):
+    """Truncating at or below the current base drops nothing; truncating
+    past the end clamps to the written offset; offsets never move."""
+    store = timestore.OnlineStore(capacity=64)
+    store.create_table("t", {"v": np.float32})
+    n = 24
+    store.put_many("t", np.ones(n, np.int32),
+                   np.arange(n, dtype=np.int32),
+                   {"v": np.arange(n, dtype=np.float32)})
+    base = 0
+    for cut in cuts:
+        dropped = store.truncate_binlog(cut)
+        expect_base = max(base, min(cut, n))
+        assert dropped == expect_base - base
+        base = expect_base
+        tail, end = store.read_binlog(base)
+        assert end == n and len(tail) == n - base
+        if tail:
+            assert tail[0][2] == base   # ts == absolute offset here

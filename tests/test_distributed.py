@@ -79,6 +79,23 @@ def test_checkpoint_shape_mismatch_rejected(tmp_path):
         mgr.restore({"w": np.ones((3, 3))})
 
 
+def test_checkpoint_structure_mismatch_rejected(tmp_path):
+    """Restore validates the saved treedef/leaf count BEFORE zipping:
+    a template whose pytree drifted since the save must fail loudly,
+    never silently pair leaf i of one structure with leaf i of
+    another."""
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(3, {"w": np.ones((2, 2)), "b": np.zeros(2)})
+    with pytest.raises(ValueError, match="leaves"):
+        mgr.restore({"w": np.ones((2, 2))})          # leaf count drift
+    with pytest.raises(ValueError, match="treedef"):
+        mgr.restore({"w": np.ones((2, 2)),           # renamed key, same
+                     "bias": np.zeros(2)})           # ...leaf count
+    with pytest.raises(FileNotFoundError):
+        CheckpointManager(str(tmp_path / "empty")).restore(
+            {"w": np.ones(1)})
+
+
 def test_elastic_replan():
     planner = ElasticPlanner(chips_per_host=4, tp_target=16)
     # full fleet: 64 hosts = 256 chips -> (data 16, model 16)
@@ -109,6 +126,18 @@ def test_heartbeat():
     assert hb.healthy(now=115.0) == []
     hb.beat(2, now=114.0)
     assert hb.healthy(now=115.0) == [2]
+
+
+def test_heartbeat_dead_includes_never_beaten():
+    """``dead`` is ``healthy``'s complement and the failover trigger: a
+    replica that never registered counts as dead, not healthy."""
+    hb = HeartbeatMonitor(3, timeout_s=10)
+    hb.beat(0, now=100.0)
+    assert hb.dead(now=105.0) == [1, 2]
+    assert hb.dead(now=111.0) == [0, 1, 2]
+    hb.beat(1, now=110.0)
+    assert hb.dead(now=111.0) == [0, 2]
+    assert sorted(hb.dead(now=111.0) + hb.healthy(now=111.0)) == [0, 1, 2]
 
 
 # ------------------------------------------------------------ compression

@@ -1,0 +1,461 @@
+"""Replicated tablets: binlog shipping, failover, and bitwise recovery
+(storage/replication.py + FeatureEngine(replication=R)).
+
+The contract under test is the hard gate from ISSUE 6: a shard can die
+mid-traffic and, after its most-caught-up follower is promoted and the
+unacked binlog tail is replayed, serving is **bitwise identical** to an
+engine that never failed — because followers apply the SAME ordered
+``insert_many`` merge the leader ran and pre-agg planes recover through
+the SAME cur-seeded fold, both of which are batch-boundary independent.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import compile_script, parse
+from repro.core.consistency import verify_consistency
+from repro.data.synthetic import make_action_tables
+from repro.distributed.fault import CheckpointManager, most_caught_up
+from repro.serve.engine import FeatureEngine
+from repro.storage.replication import (FailoverController,
+                                       ReplicationLog, ReplicationManager,
+                                       cold_recover_shard)
+from repro.storage.timestore import ShardedOnlineStore
+
+SQL = """
+SELECT sum(price) OVER w AS s, count(price) OVER w AS c,
+       min(price) OVER w AS mn, max(price) OVER w AS mx
+FROM actions
+WINDOW w AS (PARTITION BY userid ORDER BY ts
+             ROWS_RANGE BETWEEN 60s PRECEDING AND CURRENT ROW)
+"""
+
+PREAGG_SQL = """
+SELECT sum(price) OVER w AS s, count(price) OVER w AS c,
+       min(price) OVER w AS mn, max(price) OVER w AS mx,
+       ew_avg(price, 0.5) OVER w AS ew
+FROM actions
+WINDOW w AS (PARTITION BY userid ORDER BY ts
+             ROWS_RANGE BETWEEN 3000s PRECEDING AND CURRENT ROW)
+OPTIONS (long_windows = "w:100s")
+"""
+
+
+def _store(n_shards=4, capacity=256):
+    st = ShardedOnlineStore(capacity=capacity, n_shards=n_shards)
+    st.create_table("actions", {"price": np.float32, "quantity": np.int32})
+    return st
+
+
+def _feed(store, n, seed=0, start_off=0):
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, 12, n).astype(np.int32)
+    ts = (np.arange(n, dtype=np.int32) + start_off) * 10
+    store.put_many("actions", keys, ts,
+                   {"price": rng.normal(5, 2, n).astype(np.float32),
+                    "quantity": rng.integers(1, 5, n).astype(np.float32)})
+    return keys
+
+
+def _assert_shard_equal(store, mgr, shard, replica=0):
+    lead = store.shard_state("actions", shard)
+    foll = mgr.followers[(shard, replica)].tables["actions"]
+    np.testing.assert_array_equal(np.asarray(lead["keys"]),
+                                  np.asarray(foll["keys"]))
+    np.testing.assert_array_equal(np.asarray(lead["ts"]),
+                                  np.asarray(foll["ts"]))
+    np.testing.assert_array_equal(np.asarray(lead["count"]),
+                                  np.asarray(foll["count"]))
+    for c in lead["cols"]:
+        np.testing.assert_array_equal(np.asarray(lead["cols"][c]),
+                                      np.asarray(foll["cols"][c]),
+                                      err_msg=f"col {c} shard {shard}")
+
+
+# --------------------------------------------------------------- log
+
+
+def test_replication_log_ack_lag_safe_offset():
+    log = ReplicationLog(n_shards=3, n_replicas=2)
+    log.ack(0, 0, 10)
+    log.ack(0, 1, 7)
+    log.ack(0, 0, 4)           # acks never regress
+    assert log.acked[0, 0] == 10
+    assert log.lag(12)[0].tolist() == [2, 5]
+    assert log.max_lag(12) == 12      # shard 1/2 followers at 0
+    assert log.safe_offset() == 0
+    for s in range(3):
+        for r in range(2):
+            log.ack(s, r, 6 + s)
+    assert log.safe_offset() == 7   # min over every (shard, follower)
+    assert log.most_caught_up(0) == 0
+
+
+def test_most_caught_up_policy():
+    assert most_caught_up({0: 5, 1: 9, 2: 9}) == 1   # tie -> lowest id
+    assert most_caught_up({3: 0, 1: 0}) == 1
+    with pytest.raises(ValueError):
+        most_caught_up({})
+
+
+# ------------------------------------------------------------ shipping
+
+
+def test_ship_makes_followers_bitwise_equal():
+    store = _store()
+    mgr = ReplicationManager(store, n_replicas=2)
+    _feed(store, 40, seed=1)
+    _feed(store, 25, seed=2, start_off=40)
+    assert mgr.stats()["max_lag_entries"] == 65
+    applied = mgr.ship()
+    assert applied > 0
+    assert mgr.stats()["max_lag_entries"] == 0
+    for s in range(store.n_shards):
+        for r in range(2):
+            _assert_shard_equal(store, mgr, s, r)
+
+
+def test_ship_is_incremental_and_batch_boundary_independent():
+    """Shipping after every batch vs once at the end lands bitwise on
+    the same follower state (insert_many is one order-preserving merge
+    for any batching of the same row sequence)."""
+    a, b = _store(), _store()
+    ma = ReplicationManager(a, n_replicas=1)
+    mb = ReplicationManager(b, n_replicas=1)
+    for i in range(5):
+        _feed(a, 13, seed=i, start_off=13 * i)
+        _feed(b, 13, seed=i, start_off=13 * i)
+        ma.ship()                       # eager: 5 small tails
+    mb.ship()                           # lazy: one 65-entry tail
+    for s in range(a.n_shards):
+        fa = ma.followers[(s, 0)].tables["actions"]
+        fb = mb.followers[(s, 0)].tables["actions"]
+        np.testing.assert_array_equal(np.asarray(fa["keys"]),
+                                      np.asarray(fb["keys"]))
+        np.testing.assert_array_equal(np.asarray(fa["cols"]["price"]),
+                                      np.asarray(fb["cols"]["price"]))
+
+
+def test_truncation_clamped_to_safe_offset():
+    store = _store()
+    mgr = ReplicationManager(store, n_replicas=1)
+    _feed(store, 30)
+    mgr.ship()
+    _feed(store, 10, seed=3, start_off=30)   # unshipped tail
+    assert mgr.log.safe_offset() == 30
+    store.truncate_binlog(mgr.log.safe_offset())
+    mgr.ship()                               # tail still readable
+    for s in range(store.n_shards):
+        _assert_shard_equal(store, mgr, s)
+    # truncating PAST the safe offset would have broken the follower:
+    # reading below the base raises the documented error
+    with pytest.raises(ValueError, match="truncated"):
+        store.read_binlog(10)
+
+
+# ------------------------------------------------------------ failover
+
+
+def test_promote_replays_unacked_tail_bitwise():
+    """Follower lags by an unshipped tail; the shard dies; promotion
+    replays the tail and the installed leader slot is bitwise equal to
+    a store that never failed."""
+    store, ref = _store(), _store()
+    mgr = ReplicationManager(store, n_replicas=2)
+    ctl = FailoverController(mgr)
+    _feed(store, 40, seed=5)
+    _feed(ref, 40, seed=5)
+    mgr.ship()
+    _feed(store, 17, seed=6, start_off=40)   # followers lag 17 entries
+    _feed(ref, 17, seed=6, start_off=40)
+    dead = 2
+    assert mgr.log.max_lag(store._binlog_offset) == 17
+    store.wipe_shard(dead)
+    ctl.mark_dead(dead)
+    assert ctl.dead_shards() == [dead]
+    rec = ctl.failover(dead)
+    assert rec.shard == dead and rec.replayed_entries == 17
+    assert ctl.dead_shards() == []
+    lead = store.shard_state("actions", dead)
+    want = ref.shard_state("actions", dead)
+    for leaf, ref_leaf in ((lead["keys"], want["keys"]),
+                           (lead["ts"], want["ts"]),
+                           (lead["cols"]["price"], want["cols"]["price"]),
+                           (lead["count"], want["count"])):
+        np.testing.assert_array_equal(np.asarray(leaf),
+                                      np.asarray(ref_leaf))
+    # promoted follower's slot was re-provisioned as a fresh replica
+    _assert_shard_equal(store, mgr, dead, rec.replica)
+
+
+def test_heartbeat_driven_failover():
+    store = _store()
+    mgr = ReplicationManager(store, n_replicas=1)
+    ctl = FailoverController(mgr, timeout_s=5.0, now=100.0)
+    _feed(store, 20)
+    mgr.ship()
+    ctl.beat(now=110.0)
+    assert ctl.dead_shards(now=112.0) == []
+    store.wipe_shard(1)
+    ctl.beat(0, now=120.0)
+    ctl.beat(2, now=120.0)
+    ctl.beat(3, now=120.0)    # shard 1 stops beating
+    assert ctl.dead_shards(now=120.0) == [1]
+    recs = ctl.check(now=120.0)
+    assert [r.shard for r in recs] == [1]
+    assert ctl.dead_shards(now=120.0) == []
+    _assert_shard_equal(store, mgr, 1)
+
+
+def test_cold_recover_from_checkpoint_plus_binlog(tmp_path):
+    """No follower survives: restore the shard from the checkpoint cut
+    at a binlog watermark and replay the tail — bitwise equal to a
+    store that never failed."""
+    store, ref = _store(), _store()
+    ckpt = CheckpointManager(str(tmp_path))
+    _feed(store, 30, seed=8)
+    _feed(ref, 30, seed=8)
+    wm = store._binlog_offset
+    ckpt.save(wm, {t: store.tables[t] for t in store.tables})
+    _feed(store, 15, seed=9, start_off=30)
+    _feed(ref, 15, seed=9, start_off=30)
+    dead = 0
+    store.wipe_shard(dead)
+    replayed = cold_recover_shard(store, ckpt, dead)
+    assert replayed >= 0
+    lead = store.shard_state("actions", dead)
+    want = ref.shard_state("actions", dead)
+    np.testing.assert_array_equal(np.asarray(lead["keys"]),
+                                  np.asarray(want["keys"]))
+    np.testing.assert_array_equal(np.asarray(lead["cols"]["price"]),
+                                  np.asarray(want["cols"]["price"]))
+    np.testing.assert_array_equal(np.asarray(lead["count"]),
+                                  np.asarray(want["count"]))
+
+
+# ------------------------------------------------- engine kill -> heal
+
+
+def _tables(n=240, seed=11, horizon=12_000_000):
+    return make_action_tables(n_actions=n, n_orders=0, n_users=6,
+                              horizon_ms=horizon, seed=seed,
+                              with_profile=False)
+
+
+def _engines(sql, tables, use_preagg=False, replication=1, **kw):
+    """(unsharded reference, replicated sharded) — the ISSUE 6 pair."""
+    ref = FeatureEngine(sql, tables, capacity=1024, use_preagg=use_preagg)
+    rep = FeatureEngine(sql, tables, capacity=1024, use_preagg=use_preagg,
+                        n_shards=4, replication=replication, **kw)
+    return ref, rep
+
+
+def _parity(ref, rep, rows):
+    r1 = ref.request_batch([dict(r) for r in rows])
+    r2 = rep.request_batch([dict(r) for r in rows])
+    for i in range(len(rows)):
+        for k in r1[i]:
+            np.testing.assert_array_equal(
+                np.asarray(r1[i][k]), np.asarray(r2[i][k]),
+                err_msg=f"req {i} feature {k}")
+
+
+def test_engine_requires_sharded_for_replication():
+    t = _tables(60)
+    with pytest.raises(ValueError, match="sharded"):
+        FeatureEngine(SQL, t, use_preagg=False, replication=2)
+    eng = FeatureEngine(SQL, t, n_shards=2)
+    with pytest.raises(ValueError, match="without replication"):
+        eng.kill_shard(0)
+
+
+def test_engine_kill_heal_bitwise_raw():
+    """Kill a shard mid-traffic (rows keep arriving while it is dead),
+    heal, and serve: bitwise identical to the unsharded reference."""
+    t = _tables()
+    ref, rep = _engines(SQL, t, ship_every=16)
+    a = t["actions"]
+    rows = [a.row(i) for i in range(160)]
+    ref.ingest_many("actions", rows[:100])
+    rep.ingest_many("actions", rows[:100])
+    info = rep.kill_shard(1)
+    assert info["shard"] == 1
+    # traffic continues while the shard is dead
+    ref.ingest_many("actions", rows[100:160])
+    rep.ingest_many("actions", rows[100:160])
+    recs = rep.heal()
+    assert len(recs) == 1 and recs[0].shard == 1
+    assert recs[0].recovery_s > 0
+    _parity(ref, rep, [a.row(200 + i) for i in range(12)])
+    stats = rep.replication_stats()
+    assert stats["n_replicas"] == 1
+    assert len(stats["failovers"]) == 1
+    assert stats["dead_shards"] == []
+
+
+def test_engine_kill_heal_bitwise_preagg():
+    """Same gate with pre-aggregated long windows: the dead shard's
+    bucket plane is rebuilt from the snapshot watermark + binlog replay
+    through the same sharded fold — bitwise, floats included (the
+    replay is batch-boundary independent, not re-bracketed)."""
+    t = _tables(seed=13)
+    ref, rep = _engines(PREAGG_SQL, t, use_preagg=True, ship_every=8)
+    a = t["actions"]
+    rows = [a.row(i) for i in range(150)]
+    ref.ingest_many("actions", rows[:90])
+    rep.ingest_many("actions", rows[:90])
+    rep.kill_shard(2)
+    ref.ingest_many("actions", rows[90:150])
+    rep.ingest_many("actions", rows[90:150])
+    rep.heal()
+    _parity(ref, rep, [a.row(180 + i) for i in range(8)])
+
+
+def test_engine_kill_all_shards_then_heal():
+    t = _tables(n=160, seed=17)
+    ref, rep = _engines(SQL, t)
+    a = t["actions"]
+    rows = [a.row(i) for i in range(120)]
+    ref.ingest_many("actions", rows)
+    rep.ingest_many("actions", rows)
+    for s in range(4):
+        rep.kill_shard(s)
+    assert rep.replication_stats()["dead_shards"] == [0, 1, 2, 3]
+    recs = rep.heal()
+    assert sorted(r.shard for r in recs) == [0, 1, 2, 3]
+    _parity(ref, rep, [a.row(130 + i) for i in range(10)])
+
+
+def test_engine_retention_eviction_is_replication_barrier():
+    """Scheduled evict+compact ticks run between kill and heal: the
+    followers ship-then-evict with the leader's horizon, so promotion
+    stays bitwise even after rows were dropped on both sides."""
+    t = _tables(n=300, seed=19, horizon=60_000)
+    ref = FeatureEngine(SQL, t, capacity=1024, retention="auto",
+                        compact_every=64)
+    rep = FeatureEngine(SQL, t, capacity=1024, n_shards=4, replication=1,
+                        retention="auto", compact_every=64, ship_every=16)
+    a = t["actions"]
+    rows = [a.row(i) for i in range(260)]
+    for lo in range(0, 200, 40):
+        ref.ingest_many("actions", rows[lo:lo + 40])
+        rep.ingest_many("actions", rows[lo:lo + 40])
+    rep.kill_shard(0)
+    ref.ingest_many("actions", rows[200:260])
+    rep.ingest_many("actions", rows[200:260])
+    rep.heal()
+    _parity(ref, rep, [a.row(270 + i) for i in range(8)])
+
+
+def test_engine_bulk_load_is_snapshot_barrier():
+    """bulk_load overwrites state and logs rows in sorted order — the
+    engine re-cuts the recovery snapshot and re-seeds followers, so a
+    later kill+heal never replays across the load."""
+    t = _tables(n=200, seed=23)
+    ref, rep = _engines(PREAGG_SQL, t, use_preagg=True, ship_every=8)
+    ref.bulk_load("actions", t["actions"])
+    rep.bulk_load("actions", t["actions"])
+    assert rep.replication_stats()["snapshot_watermark"] == \
+        rep.store._binlog_offset
+    a = t["actions"]
+    extra = [dict(a.row(i), ts=int(a.row(i)["ts"]) + 10_000_000)
+             for i in range(40)]
+    ref.ingest_many("actions", extra)
+    rep.ingest_many("actions", extra)
+    rep.kill_shard(3)
+    rep.heal()
+    _parity(ref, rep, [a.row(60 + i) for i in range(8)])
+
+
+def test_engine_checkpoint_to_disk_and_watermark(tmp_path):
+    t = _tables(n=120, seed=29)
+    rep = FeatureEngine(SQL, t, capacity=1024, n_shards=4, replication=1,
+                        checkpoint_dir=str(tmp_path))
+    a = t["actions"]
+    rep.ingest_many("actions", [a.row(i) for i in range(80)])
+    wm = rep.checkpoint()
+    assert wm == rep.store._binlog_offset
+    assert rep.ckpt.latest_step() == wm
+    restored = rep.ckpt.restore(
+        {"tables": dict(rep.store.tables),
+         "pre": dict(rep.pre_states) if rep.pre_states is not None
+         else None})
+    np.testing.assert_array_equal(
+        np.asarray(restored["tables"]["actions"]["count"]),
+        np.asarray(rep.store.tables["actions"]["count"]))
+
+
+# ---------------------------------------------- consistency-gate wiring
+
+
+def test_verify_consistency_with_failover_raw():
+    """The acceptance gate: offline reference (never faulted) vs a
+    sharded replay that kills+fails-over the owner shard of request 5 —
+    bitwise equal."""
+    t = _tables(n=140, seed=31)
+    cs = compile_script(parse(SQL), tables=t)
+    rpt = verify_consistency(cs, t, n_shards=4, bitwise=True,
+                             replication=1, kill_shard_at=5,
+                             ship_every=7)
+    assert rpt.passed and rpt.bitwise_equal, str(rpt)
+
+
+def test_verify_consistency_failover_needs_replication():
+    t = _tables(n=40, seed=37)
+    cs = compile_script(parse(SQL), tables=t)
+    with pytest.raises(ValueError, match="replication"):
+        verify_consistency(cs, t, n_shards=4, kill_shard_at=3)
+
+
+# -------------------------------------- rebalance two-phase fault injection
+
+
+def test_rebalance_crash_between_build_and_commit(skewed_tables,
+                                                  monkeypatch):
+    """Satellite: a crash AFTER migrated states are built but BEFORE the
+    commit must leave serving bitwise-unchanged — no partially-migrated
+    table visible, assignment still the old one."""
+    sql = """
+    SELECT sum(price) OVER w AS s, count(price) OVER w AS c
+    FROM actions
+    WINDOW w AS (PARTITION BY userid ORDER BY ts
+                 ROWS_RANGE BETWEEN 60s PRECEDING AND CURRENT ROW)
+    """
+    eng = FeatureEngine(sql, skewed_tables, capacity=1024, n_shards=4)
+    a = skewed_tables["actions"]
+    eng.ingest_many("actions", [a.row(i) for i in range(200)])
+    probe = [a.row(250 + i) for i in range(10)]
+    before = eng.request_batch([dict(r) for r in probe])
+    store = eng.store
+    assign_before = store.assignment.copy()
+
+    n_tables = len(store.tables)
+    calls = {"n": 0}
+    real_build = ShardedOnlineStore._build_state
+
+    def crashing_build(self, *args, **kw):
+        calls["n"] += 1
+        if calls["n"] >= max(1, n_tables):
+            raise RuntimeError("injected crash before commit")
+        return real_build(self, *args, **kw)
+
+    monkeypatch.setattr(ShardedOnlineStore, "_build_state",
+                        crashing_build)
+    with pytest.raises(RuntimeError, match="injected crash"):
+        eng.rebalance()
+    monkeypatch.setattr(ShardedOnlineStore, "_build_state", real_build)
+
+    # two-phase: NOTHING committed — routing and every table unchanged
+    np.testing.assert_array_equal(store.assignment, assign_before)
+    after = eng.request_batch([dict(r) for r in probe])
+    for i in range(len(probe)):
+        for k in before[i]:
+            np.testing.assert_array_equal(np.asarray(before[i][k]),
+                                          np.asarray(after[i][k]))
+    # ...and a later retry still succeeds end to end
+    eng.ingest_many("actions", [a.row(200 + i) for i in range(30)])
+    eng.rebalance()
+    retry = eng.request_batch([dict(r) for r in probe])
+    for i in range(len(probe)):
+        for k in before[i]:
+            assert retry[i][k].shape == before[i][k].shape

@@ -112,6 +112,27 @@ def test_binlog_offsets_monotone():
     assert len(tail) == 2 and end == 3
 
 
+def test_binlog_offsets_stable_across_truncation():
+    """Absolute offsets survive truncation (the replication anchor:
+    follower acked offsets stay meaningful after the log is trimmed) and
+    reading below the watermark raises the documented error.  The
+    exhaustive random-interleaving version lives in
+    tests/test_binlog_props.py (hypothesis)."""
+    store = timestore.OnlineStore(capacity=16)
+    store.create_table("t", {"v": np.float32})
+    for ts in range(6):
+        store.put("t", 1, ts, {"v": float(ts)})
+    assert store.truncate_binlog(4) == 4
+    # surviving entries keep their absolute offsets and full values
+    tail, end = store.read_binlog(4)
+    assert end == 6 and [e[2] for e in tail] == [4, 5]
+    assert [e[3]["v"] for e in tail] == [4.0, 5.0]
+    # a later put still returns the running total, not a reset index
+    assert store.put("t", 1, 9, {"v": 9.0}) == 6
+    with pytest.raises(ValueError, match="truncated"):
+        store.read_binlog(3)
+
+
 # ---------------------------------------------------------------- memest
 
 def test_memory_estimation_formula():

@@ -1,0 +1,118 @@
+"""CI gate: kill-shard -> promote -> bitwise parity vs unsharded serving.
+
+Two layers of the same contract (ISSUE 6's hard gate):
+
+  * ``verify_consistency(..., replication=1, kill_shard_at=k)`` — the
+    offline reference never sees the fault while the online replay
+    kills the owner shard of request k mid-traffic and fails over to a
+    follower; the report must still be bitwise (raw serving always,
+    pre-agg on integer-valued prices where every combine bracketing is
+    f32-exact).
+  * engine-level ``kill_shard``/``heal`` on ``FeatureEngine`` with
+    traffic continuing while the shard is dead, gated ``array_equal``
+    per feature against an unsharded engine fed identical rows.
+
+    PYTHONPATH=src python tools/check_recovery.py [n_shards]
+"""
+
+from __future__ import annotations
+
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np  # noqa: E402
+
+from repro.core import compile_script, parse, verify_consistency  # noqa
+from repro.data.synthetic import make_action_tables  # noqa: E402
+from repro.serve.engine import FeatureEngine  # noqa: E402
+
+RAW_SQL = """
+SELECT sum(price) OVER w AS s, count(price) OVER w AS c,
+       max(price) OVER w AS mx, min(price) OVER w AS mn
+FROM actions
+WINDOW w AS (PARTITION BY userid ORDER BY ts
+             ROWS_RANGE BETWEEN 10s PRECEDING AND CURRENT ROW)
+"""
+
+PREAGG_SQL = """
+SELECT sum(price) OVER w AS s, count(price) OVER w AS c,
+       max(price) OVER w AS mx
+FROM actions
+WINDOW w AS (PARTITION BY userid ORDER BY ts
+             ROWS_RANGE BETWEEN 3000s PRECEDING AND CURRENT ROW)
+OPTIONS (long_windows = "w:100s")
+"""
+
+
+def _int_prices(tables):
+    """Integer-valued f32 prices: re-bracketed combines stay bitwise."""
+    for t in tables.values():
+        if "price" in t.columns:
+            t.columns["price"] = np.floor(t.columns["price"]).astype(
+                np.float32)
+    return tables
+
+
+def _engine_gate(n_shards: int) -> bool:
+    tables = make_action_tables(n_actions=220, n_orders=0, n_users=8,
+                                horizon_ms=12_000_000, seed=21,
+                                with_profile=False)
+    ref = FeatureEngine(RAW_SQL, tables, capacity=1024)
+    rep = FeatureEngine(RAW_SQL, tables, capacity=1024,
+                        n_shards=n_shards, replication=1, ship_every=32)
+    a = tables["actions"]
+    rows = [a.row(i) for i in range(180)]
+    ref.ingest_many("actions", rows[:120])
+    rep.ingest_many("actions", rows[:120])
+    rep.kill_shard(1)
+    ref.ingest_many("actions", rows[120:])   # traffic while dead
+    rep.ingest_many("actions", rows[120:])
+    recs = rep.heal()
+    probe = [a.row(190 + i) for i in range(12)]
+    r1 = ref.request_batch([dict(r) for r in probe])
+    r2 = rep.request_batch([dict(r) for r in probe])
+    for i in range(len(probe)):
+        for k in r1[i]:
+            if not np.array_equal(np.asarray(r1[i][k]),
+                                  np.asarray(r2[i][k])):
+                print(f"engine    (S={n_shards}): FAIL req {i} "
+                      f"feature {k}")
+                return False
+    rec = recs[0]
+    print(f"engine    (S={n_shards}): kill shard 1 -> promote replica "
+          f"{rec.replica}, replay {rec.replayed_entries} entries, "
+          f"recover {rec.recovery_s * 1e3:.1f}ms -> BITWISE-EQUAL "
+          f"({len(probe)}x{len(r1[0])} features)")
+    return True
+
+
+def main(n_shards: int = 4) -> int:
+    ok = True
+
+    tables = make_action_tables(n_actions=150, n_orders=0, n_users=6,
+                                seed=11, with_profile=False)
+    cs = compile_script(parse(RAW_SQL), tables=tables)
+    rep = verify_consistency(cs, tables, n_shards=n_shards, bitwise=True,
+                             replication=1, kill_shard_at=5, ship_every=7)
+    print(f"raw+kill  (S={n_shards}): {rep}")
+    ok &= rep.passed
+
+    tables2 = _int_prices(make_action_tables(
+        n_actions=120, n_orders=0, n_users=4, horizon_ms=12_000_000,
+        seed=13, with_profile=False))
+    cs2 = compile_script(parse(PREAGG_SQL), tables=tables2)
+    rep2 = verify_consistency(cs2, tables2, use_preagg=True,
+                              n_shards=n_shards, bitwise=True,
+                              replication=1, kill_shard_at=9,
+                              ship_every=5)
+    print(f"preagg+kill(S={n_shards}): {rep2}")
+    ok &= rep2.passed
+
+    ok &= _engine_gate(n_shards)
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    sys.exit(main(int(argv[0]) if argv else 4))
