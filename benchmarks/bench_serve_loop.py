@@ -1,0 +1,186 @@
+"""Serving-loop tail latency: deadline-aware batching vs count-only,
+and mixed request+ingest traffic (paper §7.2's TP-50/99/999 shape).
+
+Part 1 — **sparse open-loop**: requests arrive on a fixed schedule
+(~2-3ms apart, Poisson-jittered) regardless of completions, far slower
+than a batch fills.  The same arrival trace drives two loops:
+
+  * ``deadline`` — ``max_wait_ms`` small: a partial batch launches when
+    its oldest request's flush point passes;
+  * ``count-only`` — ``max_wait_ms=None``: a batch launches only when
+    full (the tail is force-flushed at shutdown, as a real server
+    would).
+
+At sparse load the count-only p99 is dominated by *peer-waiting* (first
+request in each batch waits ~(B-1) inter-arrival gaps); the deadline
+policy caps that wait at ``max_wait_ms``.  The run EXITS NONZERO if the
+deadline policy does not beat count-only on p99 — this is the
+measurable claim behind deadline-aware batching, gated in CI
+(``--tiny``), with ``SERVE_P99_CEILING_MS`` as an absolute-ceiling
+knob (default 250ms; generous because CI machines jitter).
+
+Part 2 — **mixed closed-loop**: full-batch request waves interleaved
+with bulk ingest (~1:1 rows) through the loop's queue — ingest applies
++ snapshot swaps happen between flushes, never inside one.  Emits
+request TP-50/99/999 and the separated ingest stats (satellite: ingest
+timing no longer pollutes request percentiles).
+
+    PYTHONPATH=src python -m benchmarks.bench_serve_loop [--tiny|--quick]
+
+CSV contract: ``name,us_per_call,derived`` (us_per_call = p99 in us).
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+import numpy as np
+
+from repro.data.synthetic import make_action_tables
+from repro.serve import FeatureEngine, ServeLoop, SystemClock
+
+from .common import emit
+
+SQL = """
+SELECT
+  sum(price) OVER w AS s, avg(price) OVER w AS a,
+  count(price) OVER w AS c, min(price) OVER w AS mn,
+  max(price) OVER w AS mx
+FROM actions
+WINDOW w AS (PARTITION BY userid ORDER BY ts
+             ROWS_RANGE BETWEEN 60s PRECEDING AND CURRENT ROW)
+"""
+
+
+def _warmup(loop: ServeLoop, rows):
+    """Compile every pow2 batch bucket the loop can hit, then zero the
+    stats so measurements exclude compile time."""
+    b = 1
+    while b <= loop.batch_size:
+        loop.engine.request_batch([dict(r) for r in rows[:b]],
+                                  snapshot=loop.snap)
+        b *= 2
+    loop.reset_stats()
+
+
+def _pcts(loop: ServeLoop):
+    p = loop.latency_percentiles()
+    return p.get("TP50", 0.0), p.get("TP99", 0.0), p.get("TP999", 0.0)
+
+
+def run_open_loop(loop: ServeLoop, arrivals, rows) -> None:
+    """Open-loop load: arrivals fire on schedule whether or not prior
+    requests completed; the loop is stepped whenever a flush is due."""
+    clock = loop.clock
+    t0 = clock.now()
+    i = 0
+    while i < len(arrivals) or loop.batcher.queue:
+        now = clock.now()
+        if i < len(arrivals) and now - t0 >= arrivals[i]:
+            loop.submit(dict(rows[i]), now=now)
+            i += 1
+            continue
+        if loop.batcher.ready(now):
+            loop.step(now=now)
+            continue
+        if i >= len(arrivals):          # drain: only the tail is left
+            loop.run_until_idle()
+            break
+        time.sleep(50e-6)
+    loop.flush()                        # count-only tail, if any
+
+
+def main(quick: bool = False, tiny: bool = False) -> int:
+    n_req = 160 if tiny else (400 if quick else 1200)
+    batch = 8
+    gap_ms = 2.5
+    n_ing = 2_000 if tiny else 12_000
+    tables = make_action_tables(n_actions=max(n_req, n_ing) + 512,
+                                n_orders=0, n_users=64,
+                                horizon_ms=30_000_000, seed=0,
+                                with_profile=False)
+    a = tables["actions"]
+    rows = [a.row(i) for i in range(len(a))]
+    rng = np.random.default_rng(0)
+    gaps = rng.exponential(gap_ms * 1e-3, size=n_req)
+    arrivals = np.minimum(gaps, 4 * gap_ms * 1e-3).cumsum()
+
+    # ---- part 1: sparse open-loop, deadline vs count-only -----------
+    results = {}
+    for mode, max_wait in (("deadline", 2.0), ("count-only", None)):
+        eng = FeatureEngine(SQL, tables, capacity=2048)
+        eng.ingest_many("actions", rows[:256])
+        loop = ServeLoop(eng, clock=SystemClock(), batch_size=batch,
+                         max_wait_ms=max_wait, slo_ms=50.0,
+                         max_queue=4 * batch)
+        _warmup(loop, rows)
+        run_open_loop(loop, arrivals, rows[256:256 + n_req])
+        p50, p99, p999 = _pcts(loop)
+        results[mode] = (p50, p99, p999)
+        emit(f"serve_sparse_{mode}", p99 * 1e3,
+             f"p50={p50:.2f}ms p99={p99:.2f}ms p999={p999:.2f}ms "
+             f"deadline_flushes={loop.stats['deadline_flushes']} "
+             f"size_flushes={loop.stats['size_flushes']} "
+             f"forced={loop.stats['forced_flushes']}")
+
+    ok = True
+    d_p99, c_p99 = results["deadline"][1], results["count-only"][1]
+    if d_p99 < c_p99:
+        emit("serve_deadline_vs_count_p99", d_p99 * 1e3,
+             f"deadline p99 {d_p99:.2f}ms < count-only {c_p99:.2f}ms "
+             f"({c_p99 / max(d_p99, 1e-9):.1f}x)")
+    else:
+        print(f"FAIL: deadline p99 {d_p99:.2f}ms >= count-only "
+              f"{c_p99:.2f}ms — deadline batching shows no win",
+              flush=True)
+        ok = False
+
+    ceiling = float(os.environ.get("SERVE_P99_CEILING_MS", "250"))
+    if d_p99 > ceiling:
+        print(f"FAIL: deadline p99 {d_p99:.2f}ms > ceiling {ceiling}ms "
+              f"(SERVE_P99_CEILING_MS)", flush=True)
+        ok = False
+
+    # ---- part 2: mixed request+ingest closed-loop -------------------
+    eng = FeatureEngine(SQL, tables, capacity=4096, retention="auto",
+                        compact_every=1024)
+    eng.ingest_many("actions", rows[:256])
+    loop = ServeLoop(eng, clock=SystemClock(), batch_size=batch,
+                     max_wait_ms=2.0, slo_ms=50.0,
+                     ingest_queue_rows=512)
+    ing_at, ing_chunk = 256 + 64, 64
+    eng.ingest_many("actions", rows[256:256 + 64])  # warm ingest bucket
+    _warmup(loop, rows)
+    served = 0
+    while served < n_req or ing_at < n_ing:
+        if served < n_req:
+            for r in rows[256 + served:256 + served + batch]:
+                loop.submit(dict(r))
+            loop.step()
+            served += batch
+        if ing_at < n_ing:
+            loop.ingest("actions", rows[ing_at:ing_at + ing_chunk])
+            ing_at += ing_chunk
+            loop.step()
+    loop.run_until_idle()
+    p50, p99, p999 = _pcts(loop)
+    ist = loop.engine.ingest_stats()
+    emit("serve_mixed", p99 * 1e3,
+         f"p50={p50:.2f}ms p99={p99:.2f}ms p999={p999:.2f}ms "
+         f"served={loop.stats['served']} "
+         f"swaps={loop.stats['snapshot_swaps']} "
+         f"backpressure={loop.stats['backpressure_applies']}")
+    if ist:
+        emit("serve_mixed_ingest", ist["TP99"] * 1e3,
+             f"rows={ist['rows']} calls={ist['calls']} "
+             f"ingest_p50={ist['TP50']:.2f}ms "
+             f"ingest_p99={ist['TP99']:.2f}ms (separate stream; "
+             f"requests above exclude these)")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    sys.exit(main(quick="--quick" in argv, tiny="--tiny" in argv))

@@ -261,7 +261,9 @@ def verify_consistency(cs: CompiledScript, tables: Dict[str, Table],
                        bitwise: Optional[bool] = None,
                        replication: int = 0,
                        kill_shard_at: Optional[int] = None,
-                       ship_every: int = 3) -> ConsistencyReport:
+                       ship_every: int = 3,
+                       online_outputs: Optional[Dict[str, np.ndarray]]
+                       = None) -> ConsistencyReport:
     """Offline-vs-online replay gate.
 
     ``replication=R`` + ``kill_shard_at=k`` run the online side through
@@ -282,6 +284,15 @@ def verify_consistency(cs: CompiledScript, tables: Dict[str, Table],
     on (bucket partials re-bracket float combines).  Pass
     ``bitwise=True`` with pre-agg to assert the stronger contract for
     order-insensitive-in-float workloads (min/max, integer-valued sums).
+
+    ``online_outputs`` supplies precomputed online-side feature arrays
+    (already in offline row order) instead of running ``replay_online``
+    — the hook that lets OTHER serving harnesses be held to the same
+    gate: the serving-loop record/replay path
+    (``serve.trace.record_consistency_trace`` +
+    ``outputs_in_base_order``) gates its replayed trace against
+    ``offline()`` through exactly this comparison
+    (tools/check_replay.py).
     """
     if bitwise is None:
         bitwise = not use_preagg
@@ -289,11 +300,14 @@ def verify_consistency(cs: CompiledScript, tables: Dict[str, Table],
         offline = cs.offline_sharded(tables, mesh=mesh, n_shards=n_shards)
     else:
         offline = cs.offline(tables)
-    online = replay_online(cs, tables, use_preagg=use_preagg,
-                           n_shards=n_shards, mesh=mesh,
-                           replication=replication,
-                           kill_shard_at=kill_shard_at,
-                           ship_every=ship_every)
+    if online_outputs is not None:
+        online = online_outputs
+    else:
+        online = replay_online(cs, tables, use_preagg=use_preagg,
+                               n_shards=n_shards, mesh=mesh,
+                               replication=replication,
+                               kill_shard_at=kill_shard_at,
+                               ship_every=ship_every)
     mism: List[str] = []
     max_abs = 0.0
     max_rel = 0.0

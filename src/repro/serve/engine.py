@@ -21,6 +21,23 @@ documented on ``RequestBatcher``; bulk ingest (``ingest_many``)
 amortizes the same way on the write path via ``put_many`` +
 ``PreAgg.update_many``.
 
+Stats hygiene: ``latencies_ms`` holds REAL request completion samples
+only — every request in a batch completed when its batch call returned,
+so each gets the batch wall time as its sample (never an amortized
+``dt/B`` synthesized share, and never ingest timings).  Write-path
+timing lives separately in ``ingest_ms`` / ``ingest_stats()`` so
+``latency_percentiles()`` answers "what did requests experience", not
+"what did the process do" (tests/test_serve_loop.py regression).
+
+Event-driven serving (``serve.loop.ServeLoop``) wraps this engine with
+deadline-aware batching, admission control, and a snapshot double
+buffer: ``snapshot()`` cuts an immutable ``EngineSnapshot`` (store view
++ pre-agg states — O(#tables), no array copies) and
+``request_batch(..., snapshot=snap)`` serves from the frozen view while
+``ingest_many``/compaction/replication mutate the live store; the loop
+swaps snapshots atomically between flushes (docs/architecture.md,
+"Serving loop").
+
 Sharded serving (paper §5 tablet partitioning): constructing the engine
 with ``mesh=`` (a 1-D ``jax.sharding.Mesh``, see
 ``distributed.sharding.key_shard_mesh``) or ``n_shards=`` swaps the
@@ -70,7 +87,34 @@ from ..storage.replication import (FailoverController, PromotionRecord,
 from ..storage.timestore import OnlineStore, ShardedOnlineStore
 from .batcher import RequestBatcher
 
-__all__ = ["FeatureEngine", "ServingEngine"]
+__all__ = ["FeatureEngine", "EngineSnapshot", "ServingEngine"]
+
+
+class EngineSnapshot:
+    """Atomic point-in-time view of everything the request path reads:
+    the store (``storage.timestore.StoreSnapshot`` — frozen tables +
+    frozen routing) and the pre-aggregation bucket states (immutable
+    jnp pytrees, so holding the reference IS the snapshot).
+
+    The serving loop serves every flush from one of these and calls
+    ``refresh()`` only at controlled points (after an ingest apply /
+    compaction / failover), so a bulk write never stalls — or leaks
+    into — an in-flight batch.  ``refresh`` rebinds one reference per
+    field; readers see the old view or the new one, never a mix.
+    """
+
+    def __init__(self, engine: "FeatureEngine"):
+        self._engine = engine
+        self.store = engine.store.snapshot()
+        self.pre_states = engine.pre_states
+        self.version = 0
+
+    def refresh(self) -> int:
+        """Re-cut from the live engine (atomic swap); returns version."""
+        self.store.refresh()
+        self.pre_states = self._engine.pre_states
+        self.version += 1
+        return self.version
 
 
 class FeatureEngine:
@@ -148,9 +192,17 @@ class FeatureEngine:
         self._consumed_offset = 0
         self.n_requests = 0
         # bounded: sustained traffic must not grow host memory without
-        # limit; percentiles are over the most recent window
+        # limit; percentiles are over the most recent window.  Request
+        # and ingest timings are SEPARATE streams: latencies_ms holds
+        # only real request completion samples (latency_percentiles),
+        # ingest_ms holds write-path batch timings (ingest_stats) —
+        # mixing them would let a burst of cheap amortized ingest rows
+        # drown the request tail.
         self.latencies_ms: Deque[float] = collections.deque(
             maxlen=latency_window)
+        self.ingest_ms: Deque[float] = collections.deque(
+            maxlen=latency_window)
+        self.rows_ingested = 0
         # ---- replication (per-shard followers + failover) ------------
         self.replication = int(replication)
         if self.replication and not self.sharded:
@@ -283,6 +335,7 @@ class FeatureEngine:
         """Insert an event (Put path + async pre-agg via binlog)."""
         if self.sharded:   # same routing path as bulk ingest
             return self.ingest_many(table, [row])
+        t0 = time.perf_counter()
         key = self._encode(table, self._key_col(), row[self._key_col()])
         ts = int(row[self.cs.script.order_column])
         values = {c: float(self._encode(table, c, row[c]))
@@ -295,6 +348,8 @@ class FeatureEngine:
         if self.ttl_ms:
             self._evict_release(table, ts - self.ttl_ms)
         self._after_ingest(table, 1, ts)
+        self.ingest_ms.append((time.perf_counter() - t0) * 1e3)
+        self.rows_ingested += 1
 
     def ingest_many(self, table: str, rows: Sequence[Dict[str, Any]]):
         """Bulk insert of N events with one store sort-merge
@@ -302,6 +357,7 @@ class FeatureEngine:
         instead of N O(capacity) shifts + N scatters."""
         if not rows:
             return
+        t0 = time.perf_counter()
         kc = self._key_col()
         keys = np.asarray([self._encode(table, kc, r[kc]) for r in rows],
                           np.int32)
@@ -328,6 +384,11 @@ class FeatureEngine:
         if self.ttl_ms:
             self._evict_release(table, int(ts.max()) - self.ttl_ms)
         self._after_ingest(table, len(rows), int(ts.max()))
+        # write-path timing is tracked apart from request latencies:
+        # one amortized batch write must never appear as N cheap
+        # "request" samples and deflate the served percentiles
+        self.ingest_ms.append((time.perf_counter() - t0) * 1e3)
+        self.rows_ingested += len(rows)
 
     # ------------------------------------------------------------ request
     def request(self, row: Dict[str, Any]) -> Dict[str, np.ndarray]:
@@ -344,9 +405,17 @@ class FeatureEngine:
         self.latencies_ms.append((time.perf_counter() - t0) * 1e3)
         return feats
 
-    def request_batch(self, rows: Sequence[Dict[str, Any]]
+    def request_batch(self, rows: Sequence[Dict[str, Any]],
+                      snapshot: Optional[EngineSnapshot] = None
                       ) -> List[Dict[str, np.ndarray]]:
-        """Features for B requests in one jitted call (batched driver)."""
+        """Features for B requests in one jitted call (batched driver).
+
+        With ``snapshot=`` the batch is served from the frozen
+        ``EngineSnapshot`` view instead of the live store/pre-agg state
+        — the serving loop's double-buffered read path: concurrent
+        ``ingest_many`` + compaction mutate the live store without
+        stalling or dirtying this call.
+        """
         if not rows:
             return []
         t0 = time.perf_counter()
@@ -357,15 +426,26 @@ class FeatureEngine:
                   for c in self._need[self.cs.script.base_table]}
         driver = (self.cs.online_sharded_batch if self.sharded
                   else self.cs.online_batch)
-        feats = driver(
-            self.store, keys, ts, values,
-            preagg_states=self.pre_states if self.use_preagg else None)
+        store = self.store if snapshot is None else snapshot.store
+        pre = (self.pre_states if snapshot is None
+               else snapshot.pre_states)
+        feats = driver(store, keys, ts, values,
+                       preagg_states=pre if self.use_preagg else None)
         dt_ms = (time.perf_counter() - t0) * 1e3
         self.n_requests += len(rows)
-        per_req = dt_ms / len(rows)   # amortized per-request latency
-        self.latencies_ms.extend([per_req] * len(rows))
+        # every request in the batch completed when the batch call
+        # returned: the batch wall time IS each one's real service
+        # latency.  (The old amortized dt/B share was a throughput
+        # figure masquerading as B latency samples — it understated
+        # the percentiles by exactly the batching factor.)
+        self.latencies_ms.extend([dt_ms] * len(rows))
         return [{k: v[i] for k, v in feats.items()}
                 for i in range(len(rows))]
+
+    def snapshot(self) -> EngineSnapshot:
+        """Cut an immutable view of (store, pre-agg states) for the
+        double-buffered serving loop (O(#tables); no array copies)."""
+        return EngineSnapshot(self)
 
     def submit_request(self, row: Dict[str, Any]) -> int:
         """Enqueue a request for batched execution; returns its id."""
@@ -550,15 +630,31 @@ class FeatureEngine:
         return v
 
     def latency_percentiles(self) -> Dict[str, float]:
+        """Percentiles over REQUEST completion samples only ({} when no
+        requests have been served — never a fabricated zero row)."""
         if not self.latencies_ms:
             return {}
         arr = np.asarray(self.latencies_ms)
         return {f"TP{p}": float(np.percentile(arr, p))
                 for p in (50, 90, 95, 99)}
 
+    def ingest_stats(self) -> Dict[str, float]:
+        """Write-path timing, tracked apart from request latencies:
+        per-``ingest``/``ingest_many`` call wall times + total rows."""
+        if not self.ingest_ms:
+            return {}
+        arr = np.asarray(self.ingest_ms)
+        return {"rows": float(self.rows_ingested),
+                "calls": float(arr.size),
+                "TP50": float(np.percentile(arr, 50)),
+                "TP99": float(np.percentile(arr, 99)),
+                "max_ms": float(arr.max())}
+
     def reset_stats(self):
         """Drop warmup (compile) samples before measuring percentiles."""
         self.latencies_ms.clear()
+        self.ingest_ms.clear()
+        self.rows_ingested = 0
         self.n_requests = 0
 
     # ------------------------------------------------------------- offline

@@ -1,0 +1,218 @@
+"""Record-and-replay for the serving loop.
+
+A serving run is fully determined by (a) the engine's deployment
+(script + tables + config) and (b) the interleaved stream of external
+stimuli — requests, ingest batches, and the instants the loop was
+driven — because every decision inside ``ServeLoop`` reads the injected
+clock and jax computation is deterministic.  So a *trace* is just that
+stimulus stream with clock timestamps: replaying it through a fresh
+loop under a ``VirtualClock`` restamped from the recorded times
+reproduces every batching, shedding, and snapshot-swap decision and
+every served byte **bit-identically** — including runs with mid-trace
+eviction/compaction (tools/check_replay.py gates this in CI; the
+Causify DataFlow "same code, different clock" discipline, PAPERS.md).
+
+Traces serialize to JSON (``save``/``load``): a recorded tail-latency
+regression is a file you attach to the bug report, not a flake you hope
+to reproduce.
+
+``record_consistency_trace`` drives an engine through the canonical
+consistency interleaving (every row of every table arrives in the
+offline (ts, rank) tie-break order; each base row is served as a
+request *before* it is ingested) under a recording loop — the serving-
+loop mirror of ``core.consistency.replay_online``, whose outputs can be
+gated against ``offline()`` via
+``verify_consistency(bitwise=True, online_outputs=...)``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from .clock import VirtualClock
+from .engine import FeatureEngine
+from .loop import AdmissionError, ServeLoop
+
+__all__ = ["TraceEvent", "TraceRecorder", "save_trace", "load_trace",
+           "replay", "record_consistency_trace", "outputs_in_base_order",
+           "store_state_arrays"]
+
+
+def _plain(v):
+    """JSON-safe scalar: numpy -> python, arrays -> lists."""
+    if isinstance(v, np.generic):
+        return v.item()
+    if isinstance(v, np.ndarray):
+        return v.tolist()
+    return v
+
+
+@dataclasses.dataclass
+class TraceEvent:
+    """One external stimulus: op in {request, ingest, step, flush,
+    drain}, stamped with the loop clock's time at arrival."""
+
+    op: str
+    t: float
+    row: Optional[Dict[str, Any]] = None          # request payload
+    deadline_ms: Optional[float] = None           # request budget
+    table: Optional[str] = None                   # ingest target
+    rows: Optional[List[Dict[str, Any]]] = None   # ingest payload
+
+    def to_json(self) -> Dict[str, Any]:
+        d: Dict[str, Any] = {"op": self.op, "t": self.t}
+        if self.row is not None:
+            d["row"] = {k: _plain(v) for k, v in self.row.items()}
+        if self.deadline_ms is not None:
+            d["deadline_ms"] = float(self.deadline_ms)
+        if self.table is not None:
+            d["table"] = self.table
+        if self.rows is not None:
+            d["rows"] = [{k: _plain(v) for k, v in r.items()}
+                         for r in self.rows]
+        return d
+
+    @staticmethod
+    def from_json(d: Dict[str, Any]) -> "TraceEvent":
+        return TraceEvent(op=d["op"], t=float(d["t"]), row=d.get("row"),
+                          deadline_ms=d.get("deadline_ms"),
+                          table=d.get("table"), rows=d.get("rows"))
+
+
+class TraceRecorder:
+    """Passed as ``ServeLoop(recorder=...)``: collects the stimulus
+    stream.  Payloads are sanitized to plain python at serialization
+    time, so recording adds one append per event to the hot path."""
+
+    def __init__(self):
+        self.events: List[TraceEvent] = []
+
+    def record(self, op: str, t: float, **kw) -> None:
+        self.events.append(TraceEvent(op=op, t=t, **kw))
+
+    def to_json(self) -> List[Dict[str, Any]]:
+        return [e.to_json() for e in self.events]
+
+
+def save_trace(events: Sequence[TraceEvent], path: str) -> None:
+    with open(path, "w") as f:
+        json.dump([e.to_json() for e in events], f)
+
+
+def load_trace(path: str) -> List[TraceEvent]:
+    with open(path) as f:
+        return [TraceEvent.from_json(d) for d in json.load(f)]
+
+
+def replay(events: Sequence[TraceEvent],
+           engine_factory: Callable[[], FeatureEngine],
+           **loop_kwargs) -> ServeLoop:
+    """Re-drive a fresh loop through a recorded stimulus stream.
+
+    The loop runs under a ``VirtualClock`` restamped from each event's
+    recorded time, so every ``ready``/admission/swap decision replays
+    exactly; shed requests shed again (the ``AdmissionError`` is
+    re-raised and swallowed, mirroring the recording client).  Returns
+    the driven loop — ``loop.results`` holds every served feature map
+    keyed by request id (ids are assigned in submit order, so they
+    match the recording run), and ``loop.engine`` holds the final live
+    state for store-level comparison."""
+    clock = VirtualClock()
+    loop = ServeLoop(engine_factory(), clock=clock, **loop_kwargs)
+    for ev in events:
+        clock.set(ev.t)
+        if ev.op == "request":
+            try:
+                loop.submit(ev.row, deadline_ms=ev.deadline_ms, now=ev.t)
+            except AdmissionError:
+                pass                        # replayed shed
+        elif ev.op == "ingest":
+            loop.ingest(ev.table, ev.rows, now=ev.t)
+        elif ev.op == "step":
+            loop.step(now=ev.t)
+        elif ev.op == "flush":
+            loop.flush(now=ev.t)
+        elif ev.op == "drain":
+            loop.drain_ingest(now=ev.t)
+        else:
+            raise ValueError(f"unknown trace op {ev.op!r}")
+    return loop
+
+
+def store_state_arrays(engine: FeatureEngine
+                       ) -> List[Tuple[str, np.ndarray]]:
+    """Flatten the engine's live store state (all tables, all leaves)
+    to host arrays with stable path labels — the bitwise final-state
+    comparison surface for replay determinism gates."""
+    leaves = jax.tree_util.tree_flatten_with_path(engine.store.tables)[0]
+    return [(jax.tree_util.keystr(path), np.asarray(jax.device_get(x)))
+            for path, x in leaves]
+
+
+def record_consistency_trace(engine: FeatureEngine,
+                             tables: Dict[str, Any],
+                             slo_ms: float = 1e6
+                             ) -> Tuple[ServeLoop, List[TraceEvent],
+                                        List[int]]:
+    """Drive ``engine`` through the canonical consistency interleaving
+    under a recording ``ServeLoop``; returns (loop, events, rids).
+
+    Event order is ``core.consistency._event_stream`` — rows of all
+    tables merged by the offline (ts, rank, arrival) tie-break; each
+    base-table row is submitted and flushed as a request BEFORE being
+    ingested, and every ingest is drained (applied + snapshot swap)
+    before the next event, so request k observes exactly the rows the
+    offline fold gives it.  Virtual time is the event timestamp itself
+    (ms -> s), which also exercises deadline bookkeeping over the whole
+    trace.  Mid-trace evictions (engine ``retention=``/``ttl_ms``) are
+    *not* trace events — they replay implicitly because the same ingest
+    stream re-triggers the same retention ticks."""
+    from ..core.consistency import _event_stream
+
+    rec = TraceRecorder()
+    clock = VirtualClock()
+    loop = ServeLoop(engine, clock=clock, recorder=rec, batch_size=1,
+                     max_wait_ms=0.0, slo_ms=slo_ms,
+                     max_queue=max(4, len(tables[engine.cs.script
+                                          .base_table])))
+    base = engine.cs.script.base_table
+    rids: List[int] = []
+    for ts, rank, i, tname in _event_stream(engine.cs, tables):
+        table = tables[tname]
+        row = {c: table.columns[c][i]
+               for c in table.schema.column_names}
+        t = ts * 1e-3
+        clock.set(t)
+        if tname == base:
+            rids.append(loop.submit(row, now=t))
+            loop.flush(now=t)
+        loop.ingest(tname, [row], now=t)
+        loop.drain_ingest(now=t)
+    return loop, rec.events, rids
+
+
+def outputs_in_base_order(loop: ServeLoop, rids: Sequence[int],
+                          tables: Dict[str, Any], cs
+                          ) -> Dict[str, np.ndarray]:
+    """Assemble a consistency-trace run's results into offline row
+    order: ``rids`` are in replay (ts, arrival) order; invert the same
+    lexsort ``replay_online`` uses so feature arrays align with
+    ``cs.offline(tables)``."""
+    base = cs.script.base_table
+    base_ts = tables[base].columns[cs.script.order_column]
+    n_base = len(tables[base])
+    arrival = np.arange(n_base)
+    replay_order = np.lexsort((arrival, base_ts))
+    inv = np.empty(n_base, dtype=np.int64)
+    inv[replay_order] = np.arange(n_base)
+    out: Dict[str, np.ndarray] = {}
+    first = loop.results[rids[0]]
+    for name in first:
+        arr = np.stack([np.asarray(loop.results[r][name]) for r in rids])
+        out[name] = arr[inv]
+    return out

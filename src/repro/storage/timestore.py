@@ -36,10 +36,10 @@ import numpy as np
 
 INT_MAX = np.int32(2**31 - 1)
 
-__all__ = ["StoreState", "OnlineStore", "ShardedOnlineStore", "insert",
-           "insert_many", "insert_many_stacked", "range_bounds",
-           "evict_before", "gather_window", "gather_key_unit",
-           "next_pow2"]
+__all__ = ["StoreState", "OnlineStore", "ShardedOnlineStore",
+           "StoreSnapshot", "insert", "insert_many",
+           "insert_many_stacked", "range_bounds", "evict_before",
+           "gather_window", "gather_key_unit", "next_pow2"]
 
 
 def next_pow2(n: int) -> int:
@@ -266,6 +266,75 @@ def gather_window(state: StoreState, lo: jnp.ndarray, hi: jnp.ndarray,
     return cols, ts, valid
 
 
+class StoreSnapshot:
+    """Immutable point-in-time read view of a store — the snapshot half
+    of the serving loop's double buffer (``serve.loop.ServeLoop``).
+
+    Cutting a snapshot is O(#tables): every ``StoreState`` leaf is an
+    immutable jnp array and every store mutation *replaces* whole table
+    entries (``self.tables[t] = insert(...)``) instead of writing in
+    place, so a shallow copy of the ``tables`` dict IS a consistent
+    frozen view — no array is ever copied.  The sharded routing state
+    (``assignment``) is frozen with it so a concurrent ``rebalance()``
+    cannot desynchronize a snapshot's routing from its resident rows.
+
+    The view quacks like the store for the READ surface the online
+    drivers touch (``tables``, ``capacity``, and for sharded stores
+    ``n_shards``/``mesh``/``axis``/``owner_of_keys``), so
+    ``CompiledScript.online_batch`` / ``online_sharded_batch`` run
+    against it unchanged — including their two-level jitted-fn cache,
+    which keys on the view's (stable) identity.
+
+    ``refresh()`` re-cuts from the live store *in place*: a single
+    attribute rebind per field, so readers in the serving loop see
+    either the old frozen view or the new one, never a mix — the atomic
+    swap that lets ``ingest_many`` + compaction + replication shipping
+    proceed on the live store without stalling (or dirtying) in-flight
+    requests.
+    """
+
+    def __init__(self, store):
+        self._store = store
+        self.capacity = store.capacity
+        self.col_specs = store.col_specs
+        self.sharded = isinstance(store, ShardedOnlineStore)
+        if self.sharded:
+            self.n_shards = store.n_shards
+            self.mesh = store.mesh
+            self.axis = store.axis
+            self.n_route_slots = store.n_route_slots
+        self.version = -1
+        self.refresh()
+
+    def refresh(self) -> int:
+        """Atomically re-cut the view from the live store; returns the
+        new snapshot version."""
+        store = self._store
+        self.tables = dict(store.tables)
+        if self.sharded:
+            self.assignment = store.assignment.copy()
+        self.version += 1
+        return self.version
+
+    # ------------------------------------------------ read-only surface
+    def route_slots(self, keys) -> np.ndarray:
+        from ..core.hll import splitmix64
+
+        k = np.atleast_1d(np.asarray(keys)).astype(np.uint64)
+        return (splitmix64(k) % np.uint64(self.n_route_slots)).astype(
+            np.int64)
+
+    def owner_of_keys(self, keys) -> np.ndarray:
+        """Key -> owning shard under the FROZEN assignment."""
+        return self.assignment[self.route_slots(keys)].astype(np.int64)
+
+    def n_rows_per_shard(self, table: str) -> np.ndarray:
+        return np.asarray(self.tables[table]["count"])
+
+    def n_rows(self, table: str) -> int:
+        return int(np.sum(np.asarray(self.tables[table]["count"])))
+
+
 class _BinlogMixin:
     """Bounded binlog shared by both stores.
 
@@ -414,6 +483,10 @@ class OnlineStore(_BinlogMixin):
 
     def n_rows(self, table: str) -> int:
         return int(self.tables[table]["count"])
+
+    def snapshot(self) -> StoreSnapshot:
+        """Cut an immutable point-in-time read view (O(#tables))."""
+        return StoreSnapshot(self)
 
 
 class ShardedOnlineStore(_BinlogMixin):
@@ -725,6 +798,11 @@ class ShardedOnlineStore(_BinlogMixin):
 
             stacked = jax.tree_util.tree_map(_put, self.tables[name], st)
             self.tables[name] = self._place(stacked)
+
+    def snapshot(self) -> StoreSnapshot:
+        """Cut an immutable point-in-time read view: frozen tables AND
+        frozen routing (see ``StoreSnapshot``)."""
+        return StoreSnapshot(self)
 
     def wipe_shard(self, shard: int) -> None:
         """Fault injection: shard ``shard`` loses all resident rows (the

@@ -1,0 +1,110 @@
+"""Property tests for the deadline-aware ``RequestBatcher`` (ISSUE 7).
+
+Random interleavings of submit / clock-advance / flush under a
+simulated clock; the invariants hold for EVERY interleaving:
+
+* emitted request ids are strictly increasing across all batches
+  (FIFO service order — no request overtakes an older one);
+* staleness bound: whenever ``ready(now)`` is False, the oldest queued
+  request is younger than ``max_wait_ms`` AND younger than its own
+  deadline budget; conversely age >= max_wait forces readiness;
+* a full queue (>= batch_size) is always ready;
+* padded-slot accounting: ``padded_slots`` equals the exact sum of
+  ``batch_size - n_real`` over every non-empty batch emitted.
+
+tests/test_serve_loop.py carries a deterministic twin of these
+properties so tier-1 keeps the coverage when hypothesis is absent.
+"""
+
+import math
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.serve import RequestBatcher  # noqa: E402
+
+# ops: submit (with optional per-request budget), let time pass, flush
+OPS = st.lists(
+    st.one_of(
+        st.tuples(st.just("submit"),
+                  st.one_of(st.none(),
+                            st.floats(min_value=0.5, max_value=80.0))),
+        st.tuples(st.just("advance"),
+                  st.floats(min_value=0.0, max_value=0.02)),
+        st.tuples(st.just("batch"), st.none()),
+    ),
+    min_size=1, max_size=60)
+
+
+@settings(max_examples=120, deadline=None)
+@given(ops=OPS,
+       batch_size=st.integers(min_value=1, max_value=6),
+       max_wait_ms=st.floats(min_value=0.5, max_value=30.0),
+       slo_ms=st.one_of(st.none(),
+                        st.floats(min_value=1.0, max_value=100.0)))
+def test_batcher_invariants(ops, batch_size, max_wait_ms, slo_ms):
+    b = RequestBatcher(batch_size, max_wait_ms=max_wait_ms, slo_ms=slo_ms)
+    now = 0.0
+    emitted = []
+    pad_expected = 0
+    for op, arg in ops:
+        if op == "submit":
+            b.submit(object(), now=now, deadline_ms=arg)
+        elif op == "advance":
+            now += arg
+        else:
+            # decision-time invariants, checked BEFORE the flush
+            if b.queue:
+                oldest = b.queue[0]
+                age_ms = (now - oldest.enqueued_at) * 1e3
+                # 1e-6 ms slack: the property converts s<->ms, the
+                # implementation compares in seconds — same bound, not
+                # the same rounding
+                if len(b.queue) >= batch_size:
+                    assert b.ready(now)
+                if age_ms >= max_wait_ms + 1e-6:
+                    assert b.ready(now)
+                if not b.ready(now):
+                    assert age_ms < max_wait_ms + 1e-6
+                    assert now < oldest.deadline_at
+            else:
+                assert not b.ready(now)
+                assert math.isinf(b.next_flush_at())
+            ids, payloads, n_real = b.next_batch(now=now)
+            if n_real:
+                assert len(payloads) == batch_size
+                assert 1 <= n_real <= batch_size
+                pad_expected += batch_size - n_real
+                emitted.extend(ids)
+            else:
+                assert ids == []
+    # FIFO: ids strictly increasing across every batch emitted
+    assert all(a < c for a, c in zip(emitted, emitted[1:]))
+    assert b.padded_slots == pad_expected
+
+
+@settings(max_examples=60, deadline=None)
+@given(n=st.integers(min_value=1, max_value=12),
+       batch_size=st.integers(min_value=1, max_value=6),
+       gap_ms=st.floats(min_value=0.0, max_value=4.0))
+def test_batcher_drain_serves_everything_in_order(n, batch_size, gap_ms):
+    """Submitting n requests then draining emits each exactly once,
+    in order, with the padding ledger balancing the final tally."""
+    b = RequestBatcher(batch_size, max_wait_ms=5.0, slo_ms=50.0)
+    now = 0.0
+    want = []
+    for _ in range(n):
+        want.append(b.submit(object(), now=now))
+        now += gap_ms * 1e-3
+    got, pads = [], 0
+    while b.queue:
+        now += 5e-3                       # staleness bound always fires
+        assert b.ready(now)
+        ids, payloads, n_real = b.next_batch(now=now)
+        got.extend(ids)
+        pads += batch_size - n_real
+    assert got == want
+    assert b.padded_slots == pads
+    assert b.size_flushes + b.deadline_flushes == math.ceil(n / batch_size)

@@ -1,0 +1,119 @@
+"""CI gate: serving-loop record/replay determinism + offline parity.
+
+Three layers of ISSUE 7's hard gate, in one run over a mixed
+request/ingest trace with mid-trace retention eviction and compaction:
+
+  * **replay-vs-replay** — the recorded trace, round-tripped through
+    JSON, is replayed twice through fresh engines; every served feature
+    array AND every leaf of the final store state must be bitwise
+    identical (``np.array_equal``).
+  * **recorded-vs-replayed** — the replayed outputs must also match the
+    original recording run byte for byte (replay reproduces the run,
+    not merely *a* deterministic run).
+  * **serving-vs-offline** — the replayed outputs, reordered to offline
+    row order, must pass ``verify_consistency(bitwise=True)`` against
+    ``cs.offline(tables)``: the loop's batching/admission/snapshot
+    machinery adds NOTHING to the bytes the fold engine defines.
+
+Prices are floored to integer-valued f32 so the float sums stay exact
+through the eviction anchor move (same trick as check_recovery.py);
+the engine runs ``retention="auto"`` with a small ``compact_every`` so
+eviction genuinely fires inside the trace — the run aborts if it
+did not.
+
+    PYTHONPATH=src python tools/check_replay.py [n_actions]
+"""
+
+from __future__ import annotations
+
+import sys
+import tempfile
+
+sys.path.insert(0, "src")
+
+import numpy as np  # noqa: E402
+
+from repro.core import verify_consistency  # noqa: E402
+from repro.data.synthetic import make_action_tables  # noqa: E402
+from repro.serve.engine import FeatureEngine  # noqa: E402
+from repro.serve.trace import (load_trace, outputs_in_base_order,  # noqa
+                               record_consistency_trace, replay,
+                               save_trace, store_state_arrays)
+
+RAW_SQL = """
+SELECT sum(price) OVER w AS s, count(price) OVER w AS c,
+       max(price) OVER w AS mx, min(price) OVER w AS mn
+FROM actions
+WINDOW w AS (PARTITION BY userid ORDER BY ts
+             ROWS_RANGE BETWEEN 10s PRECEDING AND CURRENT ROW)
+"""
+
+REPLAY_KW = dict(batch_size=1, max_wait_ms=0.0, slo_ms=1e6)
+
+
+def _arrays_equal(a, b, what: str) -> bool:
+    for k in a:
+        if not np.array_equal(np.asarray(a[k]), np.asarray(b[k])):
+            print(f"replay: FAIL {what} feature {k!r} differs")
+            return False
+    return True
+
+
+def main(n_actions: int = 90) -> int:
+    tables = make_action_tables(n_actions=n_actions, n_orders=0,
+                                n_users=4, horizon_ms=600_000, seed=7,
+                                with_profile=False)
+    for t in tables.values():
+        t.columns["price"] = np.floor(t.columns["price"]).astype(
+            np.float32)
+
+    def factory():
+        return FeatureEngine(RAW_SQL, tables, capacity=256,
+                             retention="auto", compact_every=16)
+
+    eng = factory()
+    loop0, events, rids = record_consistency_trace(eng, tables)
+    evicted = n_actions - eng.store.n_rows("actions")
+    if evicted <= 0:
+        print("replay: FAIL trace produced no eviction — gate is vacuous")
+        return 1
+
+    with tempfile.NamedTemporaryFile(suffix=".json") as f:
+        save_trace(events, f.name)
+        events2 = load_trace(f.name)
+    lp1 = replay(events2, factory, **REPLAY_KW)
+    lp2 = replay(events2, factory, **REPLAY_KW)
+
+    cs = eng.cs
+    out0 = outputs_in_base_order(loop0, rids, tables, cs)
+    out1 = outputs_in_base_order(lp1, rids, tables, cs)
+    out2 = outputs_in_base_order(lp2, rids, tables, cs)
+
+    ok = _arrays_equal(out1, out2, "replay-vs-replay")
+    st1, st2 = store_state_arrays(lp1.engine), store_state_arrays(lp2.engine)
+    for (pa, xa), (pb, xb) in zip(st1, st2):
+        if pa != pb or not np.array_equal(xa, xb):
+            print(f"replay: FAIL final store leaf {pa} differs")
+            ok = False
+            break
+    if ok:
+        print(f"replay    : {len(events2)} events, {n_actions} requests, "
+              f"{evicted} rows evicted mid-trace -> replay x2 "
+              f"BITWISE-EQUAL ({len(st1)} store leaves)")
+
+    ok2 = _arrays_equal(out0, out1, "recorded-vs-replayed")
+    if ok2:
+        print(f"recorded  : replay reproduces the recording run byte for "
+              f"byte ({n_actions}x{len(out0)} features)")
+    ok &= ok2
+
+    rep = verify_consistency(cs, tables, bitwise=True,
+                             online_outputs=out1)
+    print(f"offline   : {rep}")
+    ok &= rep.passed and rep.bitwise_equal
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    sys.exit(main(int(argv[0]) if argv else 90))
