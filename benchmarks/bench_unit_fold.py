@@ -1,0 +1,125 @@
+"""Fused unit-fold megakernel vs the staged gather/bounds/build/query
+pipeline on the batched online path, plus the offline executor under the
+fused flag.
+
+The staged path lowers each request batch into separate gather, bounds,
+structure-build, and per-leaf query stages; the megakernel folds one
+window group's whole padded unit in a single dispatch (XLA ref on CPU,
+Pallas kernel on TPU).  Expected shape: the fused ref wins on CPU by
+eliminating inter-stage materialization, and the win grows with batch
+size; on TPU the Pallas path adds VMEM-resident scratch on top
+(>= 2x headroom expected over the ref, not measurable on CPU hosts).
+
+``UNIT_FOLD_SPEEDUP_FLOOR`` (CI gate): minimum fused-ref-vs-staged
+speedup at B=64, e.g. ``1.3``.
+
+    PYTHONPATH=src python -m benchmarks.bench_unit_fold [--tiny]
+"""
+
+from __future__ import annotations
+
+import os
+
+from repro.core import compile_script, parse
+from repro.data.synthetic import make_action_tables
+from repro.serve.engine import FeatureEngine
+
+from .common import emit, timeit
+
+SQL = """
+SELECT
+  sum(price) OVER w AS s, avg(price) OVER w AS a,
+  count(price) OVER w AS c, min(price) OVER w AS mn,
+  max(price) OVER w AS mx,
+  distinct_count(category) OVER w AS dc,
+  drawdown(price) OVER wr AS dd,
+  ew_avg(price, 0.5) OVER wr AS ew
+FROM actions
+WINDOW w AS (UNION orders PARTITION BY userid ORDER BY ts
+             ROWS_RANGE BETWEEN 60s PRECEDING AND CURRENT ROW),
+  wr AS (PARTITION BY userid ORDER BY ts
+         ROWS BETWEEN 100 PRECEDING AND CURRENT ROW)
+"""
+
+BATCH_SIZES = (1, 64, 256)
+
+
+def main(quick: bool = False, tiny: bool = False):
+    n_act = 2_000 if tiny else (20_000 if quick else 60_000)
+    n_ord = 1_000 if tiny else (10_000 if quick else 30_000)
+    iters = 3 if tiny else 10
+    tables = make_action_tables(n_actions=n_act, n_orders=n_ord,
+                                n_users=64, horizon_ms=30_000_000,
+                                seed=0, with_profile=False)
+    eng = FeatureEngine(SQL, tables, capacity=n_act + n_ord + 512)
+    eng.bulk_load("actions", tables["actions"])
+    eng.bulk_load("orders", tables["orders"])
+    cs = eng.cs
+    a = tables["actions"]
+
+    reqs = [dict(a.row(n_act - 1 - i)) for i in range(max(BATCH_SIZES))]
+    enc = [eng._encode_request(r) for r in reqs]
+    need = eng._need["actions"]
+
+    def batch_args(b):
+        keys = [e[0] for e in enc[:b]]
+        ts = [e[1] for e in enc[:b]]
+        values = {c: [e[2][c] for e in enc[:b]] for c in need}
+        return keys, ts, values
+
+    speedup_b64 = None
+    for b in BATCH_SIZES:
+        keys, ts, values = batch_args(b)
+        us_staged = timeit(
+            lambda: cs.online_batch(eng.store, keys, ts, values),
+            warmup=2, iters=iters)
+        us_fused = timeit(
+            lambda: cs.online_batch_fast(eng.store, keys, ts, values,
+                                         use_pallas=False),
+            warmup=2, iters=iters)
+        speedup = us_staged / us_fused
+        if b == 64:
+            speedup_b64 = speedup
+        emit(f"unit_fold_staged_b{b}_us_per_req", us_staged / b, "")
+        emit(f"unit_fold_fused_ref_b{b}_us_per_req", us_fused / b,
+             f"speedup={speedup:.2f}x")
+
+    # Pallas kernel body on CPU (interpret mode: correctness/VMEM-shape
+    # check, not a performance number — the Mosaic path needs a TPU)
+    keys, ts, values = batch_args(64)
+    us_pal = timeit(
+        lambda: cs.online_batch_fast(eng.store, keys, ts, values,
+                                     use_pallas=True, interpret=True),
+        warmup=1, iters=2)
+    emit("unit_fold_pallas_interpret_b64_us_per_req", us_pal / 64, "")
+
+    # offline executor: staged vs fused-flag compile
+    cs_fused = compile_script(parse(SQL), tables=tables,
+                              fused_unit_fold=True)
+    us_off = timeit(lambda: cs.offline(tables), warmup=1,
+                    iters=max(2, iters // 2))
+    us_off_f = timeit(lambda: cs_fused.offline(tables), warmup=1,
+                      iters=max(2, iters // 2))
+    emit("unit_fold_offline_staged_us", us_off, "")
+    emit("unit_fold_offline_fused_us", us_off_f,
+         f"speedup={us_off / us_off_f:.2f}x")
+
+    floor = os.environ.get("UNIT_FOLD_SPEEDUP_FLOOR")
+    if floor:
+        emit("unit_fold_b64_speedup_gate", speedup_b64,
+             f"floor={float(floor):.2f}")
+        assert speedup_b64 >= float(floor), (
+            f"fused unit-fold ref only {speedup_b64:.2f}x the staged "
+            f"path at B=64 (floor {float(floor):.2f}x)")
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke sizes (seconds, not minutes)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    main(quick=args.quick, tiny=args.tiny)

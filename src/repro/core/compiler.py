@@ -62,7 +62,10 @@ class CompileContext:
                  offline_slice_rows: int = 1024,
                  offline_max_slices: int = 8,
                  distinct_hll_p: Optional[int] = None,
-                 distinct_hll_min_card: int = 64):
+                 distinct_hll_min_card: int = 64,
+                 fused_unit_fold: bool = False,
+                 unit_fold_pallas: Optional[bool] = None,
+                 unit_fold_interpret: Optional[bool] = None):
         self.tables = tables or {}
         self.default_cardinality = default_cardinality
         self.max_cardinality = max_cardinality
@@ -81,6 +84,14 @@ class CompileContext:
         # state at ~1.04/sqrt(2^p) relative error
         self.distinct_hll_p = distinct_hll_p
         self.distinct_hll_min_card = distinct_hll_min_card
+        # fused unit-fold megakernel (kernels/unit_fold): route every
+        # driver's fold through one gather+bounds+build+query dispatch.
+        # Results are bitwise the staged path's (tests/test_kernels.py).
+        # The pallas/interpret selectors follow kernels.dispatch.resolve
+        # semantics: None autodetects TPU, explicit booleans win.
+        self.fused_unit_fold = fused_unit_fold
+        self.unit_fold_pallas = unit_fold_pallas
+        self.unit_fold_interpret = unit_fold_interpret
 
     def cardinality(self, expr: Expr) -> int:
         if isinstance(expr, ColumnRef):
@@ -245,35 +256,25 @@ class CompiledScript:
             for t in ts_list:
                 w.preagg.observe_query(int(t))
 
-    # -- fused additive fast path (kernels/batch_windowfold) ---------------
+    # -- fused megakernel fast path (kernels/unit_fold) --------------------
     def fast_batch_eligible(self) -> Tuple[bool, str]:
-        """Whether every feature folds through additive leaves over pure
-        RANGE frames — the precondition for the fused mask-matmul path."""
-        from .functions import AddLeaf
-
-        if self.script.last_joins:
-            return False, "LAST JOINs need per-request point lookups"
-        for w in self.windows:
-            spec = w.node.spec
-            if spec.frame_rows:
-                return False, f"window {spec.name} uses a ROWS frame"
-            if spec.maxsize:
-                return False, f"window {spec.name} has MAXSIZE"
-            for leaf in _lw.unique_leaves(w.aggs).values():
-                if not isinstance(leaf, AddLeaf):
-                    return False, f"non-additive leaf {leaf.key}"
+        """Whether the fused batch path can serve this script.  The unit
+        fold megakernel covers every leaf family and frame type (and the
+        LAST JOIN tail runs vmapped alongside it), so every script is
+        eligible; the method remains for callers that gate on it."""
         return True, ""
 
     def online_batch_fast(self, store: "timestore.OnlineStore",
                           keys: Sequence[int], ts: Sequence[int],
                           values: Dict[str, Sequence[float]],
-                          use_pallas: bool = False, interpret: bool = True
+                          use_pallas: Optional[bool] = None,
+                          interpret: Optional[bool] = None
                           ) -> Dict[str, np.ndarray]:
-        """Fused invertible-leaf fast path (see drivers.online_fast_fn).
-        Exact but reduction order differs from the tree fold, so results
-        match ``online_batch`` to float tolerance rather than bit-exactly.
-        Raises ValueError for ineligible scripts — callers fall back to
-        ``online_batch``."""
+        """Fused megakernel fast path (see drivers.online_fast_fn): one
+        ``kernels.unit_fold`` dispatch per window group serves the whole
+        batch, BITWISE equal to ``online_batch``.  ``use_pallas`` /
+        ``interpret`` default to TPU autodetection
+        (kernels.dispatch.resolve)."""
         return _drv.online_batch_fast(self, store, keys, ts, values,
                                       use_pallas=use_pallas,
                                       interpret=interpret)

@@ -29,10 +29,17 @@ and queries the SAME unit fold core (``windows.fold_unit``) at the
 request position — offline and online are two gather strategies over
 one fold engine, so raw request results are bitwise equal to
 ``offline()``, floats included.  ``online_fast_fn`` is the fused
-additive-leaf kernel path (kernels/batch_windowfold), exact to
-reduction-order tolerance.  LAST JOINs and scalar items resolve through
-the same ``lowering`` modules the offline schedules use — no fold or
-join is defined twice.
+megakernel path: a scatter-merge gather (``gather_unit_fused``) and ONE
+``kernels.unit_fold`` dispatch per window group for the whole batch —
+bitwise equal to the vmapped ``online_batch``.  LAST JOINs and scalar
+items resolve through the same ``lowering`` modules the offline
+schedules use — no fold or join is defined twice.
+
+Every driver honors the context's fold-implementation selector
+(``windows.fold_impl``): with ``fused_unit_fold`` set, the staged
+per-leaf build/query inside ``fold_unit``/``fold_units`` is swapped for
+the fused op — same bits, one dispatch — and the selector is part of
+every compilation-cache key.
 """
 
 from __future__ import annotations
@@ -49,8 +56,9 @@ from .. import skew
 
 from . import joins, scalars
 from .cache import cached
-from .windows import (GroupLowering, LoweredWindow, fold_unit, fold_units,
-                      gather_edges, gather_unit, group_windows,
+from .windows import (GroupLowering, LoweredWindow, fold_impl, fold_unit,
+                      fold_units, gather_edges, gather_unit,
+                      gather_unit_fused, group_windows,
                       lower_group_offline, unique_leaves)
 
 __all__ = [
@@ -137,13 +145,13 @@ def _join_scalar_fn(cs):
     return fn
 
 
-def _group_feats(members: List[LoweredWindow], dev
+def _group_feats(members: List[LoweredWindow], dev, impl=None
                  ) -> List[Dict[str, jnp.ndarray]]:
     """Finalized features per unit block of one group (leaf folds shared
     across member windows inside ``fold_units``)."""
     out = []
     for blk in dev["blocks"]:
-        per_member = fold_units(members, dict(dev, **blk))
+        per_member = fold_units(members, dict(dev, **blk), impl=impl)
         feats: Dict[str, jnp.ndarray] = {}
         for m, folded in zip(members, per_member):
             for name, agg in zip(m.feature_names, m.aggs):
@@ -171,7 +179,11 @@ def _plan_sig(cs, lws: Sequence[GroupLowering], arrays) -> Tuple:
     shapes = tuple(sorted(
         (name, tuple((c, v.shape) for c, v in sorted(cols.items())))
         for name, cols in arrays.items()))
-    return (cs.fingerprint, tuple(lw.signature for lw in lws), shapes)
+    # the fold-implementation selector is part of the signature: the
+    # same script compiled with/without the fused unit fold must never
+    # share a traced program
+    return (cs.fingerprint, fold_impl(cs.ctx),
+            tuple(lw.signature for lw in lws), shapes)
 
 
 def offline_fused(cs, tables) -> Dict[str, np.ndarray]:
@@ -183,10 +195,11 @@ def offline_fused(cs, tables) -> Dict[str, np.ndarray]:
     # resident device buffers in the never-evicted compilation cache
     members_per_group = [gl.members for gl in lws]
     js_fn = _join_scalar_fn(cs)
+    impl = fold_impl(cs.ctx)
 
     def build():
         def fn(devs, arrays_dev):
-            branch = [_group_feats(members, dev)
+            branch = [_group_feats(members, dev, impl)
                       for members, dev in zip(members_per_group, devs)]
             return branch, js_fn(arrays_dev)
         return jax.jit(fn)
@@ -211,8 +224,9 @@ def offline_branch(cs, tables, wi: int) -> Dict[str, np.ndarray]:
                   if target in g.members)
     key = ("offline_group", gi, _plan_sig(cs, lws, arrays))
     members = gl.members          # capture metadata only (see above)
+    impl = fold_impl(cs.ctx)
     fn = cached(key, lambda: jax.jit(
-        lambda dev: _group_feats(members, dev)))
+        lambda dev: _group_feats(members, dev, impl)))
     feats = fn(gl.device_args())
     out: Dict[str, np.ndarray] = {}
     _scatter_group(gl, feats, n_base, out)
@@ -226,11 +240,12 @@ def offline_serial(cs, tables) -> Dict[str, np.ndarray]:
     (The *seed-algorithm* baseline is ``offline_reference_serial``.)"""
     lws, arrays, n_base = plan_offline(cs, tables)
     out: Dict[str, np.ndarray] = {}
+    impl = fold_impl(cs.ctx)
     for gi, gl in enumerate(lws):
         key = ("offline_group", gi, _plan_sig(cs, lws, arrays))
         members = gl.members      # capture metadata only (see above)
         fn = cached(key, lambda members=members: jax.jit(
-            lambda dev: _group_feats(members, dev)))
+            lambda dev: _group_feats(members, dev, impl)))
         feats = fn(gl.device_args())
         jax.block_until_ready(feats)           # hard barrier
         _scatter_group(gl, feats, n_base, out)
@@ -347,10 +362,11 @@ def offline_sharded(cs, tables, mesh=None, n_shards: Optional[int] = None,
 
     key = ("offline_sharded", n_shards, _mesh_key(mesh), axis, sig)
     members_per_group = [gl.members for gl in lws]   # metadata only
+    impl = fold_impl(cs.ctx)
 
     def build():
         def per_shard(devs):
-            return [_group_feats(members, dev)
+            return [_group_feats(members, dev, impl)
                     for members, dev in zip(members_per_group, devs)]
 
         if mesh is None:
@@ -525,7 +541,7 @@ def online(cs, store, key: int, ts: int, values: Dict[str, float],
     """Features for one request tuple (virtually inserted)."""
     use_pre = preagg_states is not None
     fn = store_fn(
-        cs, store, "online", (use_pre,),
+        cs, store, "online", (use_pre, fold_impl(cs.ctx)),
         lambda: jax.jit(functools.partial(
             cs._online_fn, use_preagg=use_pre)))
     vals = {k: jnp.asarray(v, jnp.float32) for k, v in values.items()}
@@ -543,7 +559,8 @@ def online_batch(cs, store, keys, ts, values, preagg_states=None
     keys, tsa, vals_np, b = pad_batch(keys, ts, values)
     use_pre = preagg_states is not None
     fn = store_fn(
-        cs, store, "online_batch", (use_pre, keys.shape[0]),
+        cs, store, "online_batch",
+        (use_pre, keys.shape[0], fold_impl(cs.ctx)),
         lambda: jax.jit(jax.vmap(
             functools.partial(cs._online_fn, use_preagg=use_pre),
             in_axes=(None, 0, 0, 0, None))))
@@ -617,8 +634,8 @@ def online_sharded_batch(cs, store, keys, ts, values, preagg_states=None
 
 def _sharded_store_fn(cs, store, use_pre: bool, b_pad: int):
     """Jitted (shard_map or stacked-vmap) online driver, cached per
-    (store identity, preagg mode, padded sub-batch size)."""
-    local_key = (id(store), "sharded", use_pre, b_pad)
+    (store identity, preagg mode, padded sub-batch size, fold impl)."""
+    local_key = (id(store), "sharded", use_pre, b_pad, fold_impl(cs.ctx))
     fn = cs._online_fns.get(local_key)
     if fn is not None:
         return fn
@@ -648,12 +665,15 @@ def _sharded_store_fn(cs, store, use_pre: bool, b_pad: int):
     return fn
 
 
-def online_batch_fast(cs, store, keys, ts, values, use_pallas=False,
-                      interpret=True) -> Dict[str, np.ndarray]:
-    """Fused additive fast path entry (see ``online_fast_fn``)."""
+def online_batch_fast(cs, store, keys, ts, values, use_pallas=None,
+                      interpret=None) -> Dict[str, np.ndarray]:
+    """Fused megakernel fast path entry (see ``online_fast_fn``) —
+    bitwise equal to ``online_batch``."""
     ok, why = cs.fast_batch_eligible()
     if not ok:
         raise ValueError(f"script not eligible for fused path: {why}")
+    from ...kernels import dispatch
+    use_pallas, interpret = dispatch.resolve(use_pallas, interpret)
     keys, tsa, vals_np, b = pad_batch(keys, ts, values)
     fn = store_fn(
         cs, store, "online_fast", (keys.shape[0], use_pallas, interpret),
@@ -666,15 +686,19 @@ def online_batch_fast(cs, store, keys, ts, values, use_pallas=False,
 
 
 def online_window_unit(states, members: Sequence[LoweredWindow], key, ts,
-                       values) -> List[Dict[str, jnp.ndarray]]:
+                       values, impl=None) -> List[Dict[str, jnp.ndarray]]:
     """Serve one window GROUP for one request through the unit core:
     gather the key's history into the offline unit layout
-    (``gather_unit``) and query ``fold_unit`` at the request position.
+    (``gather_unit``, or the scatter-merge ``gather_unit_fused`` under a
+    fused impl) and query ``fold_unit`` at the request position.
     There is no online-only fold algebra — the scan / sparse-table /
     tree programs are the offline ones, which is what makes request
     results bitwise equal to ``offline()``, floats included."""
-    env, p = gather_unit(states, members, key, ts, values)
-    folded = fold_unit(members, env, queries=p[None])
+    if impl is not None:
+        env, p = gather_unit_fused(states, members, key, ts, values)
+    else:
+        env, p = gather_unit(states, members, key, ts, values)
+    folded = fold_unit(members, env, queries=p[None], impl=impl)
     return [{k: v[0] for k, v in f.items()} for f in folded]
 
 
@@ -685,6 +709,7 @@ def online_fn(cs, states, key, ts, values, preagg_states,
     the offline plan (``group_windows``): one history gather and one
     structure build per group, member windows pay only bounds +
     queries."""
+    impl = fold_impl(cs.ctx)
     out: Dict[str, jnp.ndarray] = {}
     raw_served: List[LoweredWindow] = []
     for wi, w in enumerate(cs.windows):
@@ -697,7 +722,8 @@ def online_fn(cs, states, key, ts, values, preagg_states,
         else:
             raw_served.append(w)
     for members in group_windows(raw_served):
-        per_member = online_window_unit(states, members, key, ts, values)
+        per_member = online_window_unit(states, members, key, ts, values,
+                                        impl=impl)
         for m, folded in zip(members, per_member):
             for name, agg in zip(m.feature_names, m.aggs):
                 out[name] = agg.finalize(folded)
@@ -713,45 +739,43 @@ def online_fn(cs, states, key, ts, values, preagg_states,
 
 def online_fast_fn(cs, states, keys, ts, values, use_pallas=False,
                    interpret=True):
-    """Fused additive fast path: one masked-matmul kernel per (window,
-    source) replaces per-request search + gather + fold
-    (kernels/batch_windowfold)."""
-    from ...kernels.batch_windowfold import store_windowfold
+    """Fused megakernel fast path: serve a whole request batch with ONE
+    ``kernels.unit_fold`` dispatch per window group.
 
-    b = keys.shape[0]
+    The per-request gather is the scatter-merge ``gather_unit_fused``
+    (vmapped over the batch); the stacked (B, R) unit envs then fold in
+    one fused op — every member window, every deduplicated leaf, bounds
+    + build + query — instead of B vmapped per-leaf folds.  Bitwise
+    equal to ``online_batch`` on every leaf family and frame type
+    (tests/test_online_batch.py): the gather produces the same unit
+    rows and the fused op is ``array_equal`` to the staged fold it
+    replaces."""
     out: Dict[str, jnp.ndarray] = {}
-    for w in cs.windows:
-        spec = w.node.spec
-        leaves = unique_leaves(w.aggs)
-        qt1 = ts
-        qt0 = ts - jnp.int32(min(spec.preceding, 2**30))
-        sizes = [int(np.prod(leaf.shape)) if leaf.shape else 1
-                 for leaf in leaves.values()]
-        total = jnp.zeros((b, sum(sizes)), jnp.float32)
-        for tname in w.sources:
-            st = states[tname]
-            env = dict(st["cols"])
-            env[spec.order_by] = st["ts"]
-            mats = [leaf.lift(env).reshape(st["ts"].shape[0], -1)
-                    for leaf in leaves.values()]
-            total = total + store_windowfold(
-                st, jnp.concatenate(mats, axis=1), keys, qt0, qt1,
-                use_pallas=use_pallas, interpret=interpret)
-        if not spec.instance_not_in_window:
-            env_r = dict(values)
-            env_r[spec.order_by] = ts
-            req = [leaf.lift(env_r).reshape(b, -1)
-                   for leaf in leaves.values()]
-            total = total + jnp.concatenate(req, axis=1)
-        folded, off = {}, 0
-        for (k, leaf), size in zip(leaves.items(), sizes):
-            folded[k] = total[:, off:off + size].reshape(
-                (b,) + leaf.shape)
-            off += size
-        for name, agg in zip(w.feature_names, w.aggs):
-            out[name] = agg.finalize(folded)
+    for members in group_windows(cs.windows):
+        spec0 = members[0].node.spec
+        env, p = jax.vmap(
+            lambda k, t, v: gather_unit_fused(states, members, k, t, v)
+        )(keys, ts, values)
+        group_leaves: Dict[str, Any] = {}
+        for m in members:
+            for k, leaf in unique_leaves(m.aggs).items():
+                group_leaves.setdefault(k, leaf)
+        from ...kernels.unit_fold import ops as unit_fold_ops
+        fused = unit_fold_ops.unit_fold(
+            [m.node.spec for m in members], group_leaves, env,
+            p[:, None], order_by=spec0.order_by, use_pallas=use_pallas,
+            interpret=interpret)
+        for m, f in zip(members, fused):
+            folded = {k: f[k][:, 0] for k in unique_leaves(m.aggs)}
+            for name, agg in zip(m.feature_names, m.aggs):
+                out[name] = agg.finalize(folded)
 
     env = dict(values)
     env[cs.script.order_column] = ts
+    for js in cs.script.last_joins:
+        env.update(jax.vmap(
+            lambda k, t, e: joins.online_last_join(
+                states, js, cs.join_cols, e, k, t)
+        )(keys, ts, env))
     out.update(scalars.eval_scalar_items(cs.plan, env))
     return scalars.select_outputs(cs.script, out)

@@ -66,11 +66,21 @@ __all__ = [
     "LoweredWindow", "lower_windows", "unique_leaves",
     "GroupLowering", "UnitBlock", "group_windows",
     "lower_group_offline", "unit_leaf_build", "unit_leaf_query",
-    "unit_bounds", "fold_unit", "fold_units", "gather_unit",
-    "gather_edges", "INT_MIN",
+    "unit_bounds", "fold_unit", "fold_units", "fold_impl",
+    "gather_unit", "gather_unit_fused", "gather_edges", "INT_MIN",
 ]
 
 INT_MIN = -(2**31) + 2
+
+
+def fold_impl(ctx) -> Optional[Tuple[bool, Optional[bool], Optional[bool]]]:
+    """The context's fold-implementation selector as a hashable cache-key
+    component: ``None`` = staged per-leaf fold; ``(True, use_pallas,
+    interpret)`` = the fused unit-fold op (``kernels.unit_fold``),
+    whose results are bitwise-equal to the staged path."""
+    if not getattr(ctx, "fused_unit_fold", False):
+        return None
+    return (True, ctx.unit_fold_pallas, ctx.unit_fold_interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -385,8 +395,35 @@ def unit_bounds(spec, ts_unit: jnp.ndarray, pos: jnp.ndarray, r: int
     return start, end
 
 
+def _group_leaf_set(members: Sequence[LoweredWindow]) -> Dict[str, Leaf]:
+    group_leaves: Dict[str, Leaf] = {}
+    for m in members:
+        for k, leaf in unique_leaves(m.aggs).items():
+            group_leaves.setdefault(k, leaf)
+    return group_leaves
+
+
+def _fold_unit_fused(members: Sequence[LoweredWindow],
+                     env: Dict[str, Any],
+                     queries: Optional[jnp.ndarray], impl,
+                     batched: bool) -> List[Dict[str, jnp.ndarray]]:
+    """Route one fold through the fused megakernel op; results are
+    bitwise the staged path's (tests/test_kernels.py).  The single-unit
+    route pins the XLA reference (vmap-safe under the online drivers);
+    batched blocks honor the context's pallas/interpret selection."""
+    from ...kernels.unit_fold import ops as unit_fold_ops
+    spec0 = members[0].node.spec
+    use_pallas, interpret = (impl[1], impl[2]) if batched else (False, True)
+    fused = unit_fold_ops.unit_fold(
+        [m.node.spec for m in members], _group_leaf_set(members), env,
+        queries, order_by=spec0.order_by, use_pallas=use_pallas,
+        interpret=interpret)
+    return [{k: fused[mi][k] for k in unique_leaves(m.aggs)}
+            for mi, m in enumerate(members)]
+
+
 def fold_unit(members: Sequence[LoweredWindow], env: Dict[str, Any],
-              queries: Optional[jnp.ndarray] = None
+              queries: Optional[jnp.ndarray] = None, impl=None
               ) -> List[Dict[str, jnp.ndarray]]:
     """THE unit fold core: fold one padded unit for every member window.
 
@@ -399,17 +436,21 @@ def fold_unit(members: Sequence[LoweredWindow], env: Dict[str, Any],
     member pays only its own bounds + queries.  Returns one
     ``{leaf key: (Q, *S)}`` dict per member; finalization happens in
     the driver.
+
+    ``impl`` (from ``fold_impl``) selects the executor: ``None`` runs
+    the staged per-leaf build/query below; a fused impl dispatches the
+    whole group to ``kernels.unit_fold`` — one op, same bits.
     """
+    if impl is not None:
+        return _fold_unit_fused(members, env, queries, impl,
+                                batched=False)
     spec0 = members[0].node.spec
     ts_unit = env[spec0.order_by]
     r = ts_unit.shape[0]
     if queries is None:
         queries = jnp.arange(r, dtype=jnp.int32)
 
-    group_leaves: Dict[str, Leaf] = {}
-    for m in members:
-        for k, leaf in unique_leaves(m.aggs).items():
-            group_leaves.setdefault(k, leaf)
+    group_leaves = _group_leaf_set(members)
     built = {k: unit_leaf_build(leaf, leaf.lift(env))
              for k, leaf in group_leaves.items()}
 
@@ -421,20 +462,24 @@ def fold_unit(members: Sequence[LoweredWindow], env: Dict[str, Any],
     return out
 
 
-def fold_units(members: Sequence[LoweredWindow], dev: Dict[str, Any]
-               ) -> List[Dict[str, jnp.ndarray]]:
+def fold_units(members: Sequence[LoweredWindow], dev: Dict[str, Any],
+               impl=None) -> List[Dict[str, jnp.ndarray]]:
     """Offline execution of the unit core over one (U, R) block.
 
     The gather through ``idx`` IS the §6.2 halo expansion: a hot key's
     later time slices pull their window context rows into the unit
     in-trace.  The fold itself is ``fold_unit`` vmapped over the units
-    — no offline-only fold algebra exists.
+    — no offline-only fold algebra exists.  With a fused ``impl`` the
+    whole block goes to ``kernels.unit_fold`` in one batched dispatch
+    (the Pallas grid folds unit x leaf-group tiles when enabled).
     """
     spec0 = members[0].node.spec
     idx = dev["idx"]
     env = {c: jnp.take(v, idx, axis=0) for c, v in dev["cols"].items()}
     env["__valid__"] = dev["valid"]
     env[spec0.order_by] = jnp.take(dev["ts"], idx)       # (U, R)
+    if impl is not None:
+        return _fold_unit_fused(members, env, None, impl, batched=True)
     return jax.vmap(lambda e: fold_unit(members, e))(env)
 
 
@@ -489,6 +534,84 @@ def gather_unit(states, members: Sequence[LoweredWindow], key, ts, values
     env["__valid__"] = jnp.take(valid, perm)
     env[spec.order_by] = jnp.take(sort_ts, perm)
     p = jnp.sum(valid.astype(jnp.int32)) - 1     # request row position
+    return env, p
+
+
+def gather_unit_fused(states, members: Sequence[LoweredWindow], key, ts,
+                      values) -> Tuple[Dict[str, jnp.ndarray],
+                                       jnp.ndarray]:
+    """``gather_unit`` without the lexsort: rank-merge by scatter.
+
+    The staged gather materializes a (ts, rank, arrival) ``lexsort`` —
+    an O(n log n) permutation — to merge the per-source buffers.  But
+    each source buffer is ALREADY time-sorted with its valid rows as a
+    prefix, so every valid row's merged position is computable directly:
+    its within-source index plus, per other source, a binary-search row
+    count (``searchsorted`` right for lower ranks — equal timestamps
+    sort before — left for higher).  ONE int32 scatter (invalid rows
+    dropped onto the out-of-range index) builds the source-row index per
+    unit slot; every column then fills by gather — scatters serialize on
+    CPU XLA, so scattering once and gathering K columns beats K column
+    scatters ~3x.  Unhit slots keep the pad index: timestamps read the
+    INT_MAX sentinel and values zero, exactly the dead-tail contents the
+    staged permutation produces on every position a fold can read
+    (invalid columns differ only where ``__valid__`` masks the lift to
+    identity) — so the folds downstream are bitwise the staged
+    gather's.  Integer math end to end; the request row lands after its
+    peers at rank ``n_sources``.
+    """
+    w0 = members[0]
+    spec = w0.node.spec
+    n_src = len(w0.sources)
+    buf = max(m.online_buffer for m in members)
+    needed = sorted(set().union(*(m.needed_cols for m in members)))
+    total = n_src * buf + 1
+
+    cols_p, ts_eff_p, valid_p = [], [], []
+    for rank, tname in enumerate(w0.sources):
+        cols, ts_arr, valid = timestore.gather_key_unit(
+            states[tname], key, ts, buf, needed)
+        cols_p.append(cols)
+        ts_eff_p.append(jnp.where(valid, ts_arr, jnp.int32(2**31 - 1)))
+        valid_p.append(valid)
+
+    pos_p = []
+    for r in range(n_src):
+        pos = jnp.arange(buf, dtype=jnp.int32)   # within-source index
+        for q in range(n_src):
+            if q == r:
+                continue
+            side = "right" if q < r else "left"
+            pos = pos + jnp.searchsorted(
+                ts_eff_p[q], ts_eff_p[r], side=side).astype(jnp.int32)
+        # invalid rows fall off the end of the scatter (mode='drop')
+        pos_p.append(jnp.where(valid_p[r], pos, jnp.int32(total)))
+
+    pos_all = jnp.concatenate(pos_p)
+    p = sum(jnp.sum(v.astype(jnp.int32)) for v in valid_p)
+
+    n_rows = n_src * buf
+    pad_idx, req_idx = jnp.int32(n_rows), jnp.int32(n_rows + 1)
+    src_idx = (jnp.full((total,), pad_idx)
+               .at[pos_all].set(jnp.arange(n_rows, dtype=jnp.int32),
+                                mode="drop")
+               .at[p].set(req_idx))
+
+    env: Dict[str, jnp.ndarray] = {}
+    for c in needed:
+        dt = cols_p[0][c].dtype
+        vals = jnp.concatenate(
+            [cp[c] for cp in cols_p]
+            + [jnp.zeros((1,), dt),
+               jnp.asarray(values.get(c, 0.0), dt)[None]])
+        env[c] = jnp.take(vals, src_idx)
+    env[spec.order_by] = jnp.take(
+        jnp.concatenate(ts_eff_p
+                        + [jnp.full((1,), 2**31 - 1, jnp.int32),
+                           jnp.asarray(ts, jnp.int32)[None]]), src_idx)
+    env["__valid__"] = jnp.take(
+        jnp.concatenate(valid_p + [jnp.zeros((1,), bool),
+                                   jnp.ones((1,), bool)]), src_idx)
     return env, p
 
 

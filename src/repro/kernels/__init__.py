@@ -1,3 +1,27 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Custom kernel layer: Pallas TPU kernels with hand-fused XLA refs.
+
+Each subpackage ships ``ref.py`` (XLA reference = CPU fast path),
+``kernel.py`` (Pallas TPU), and ``ops.py`` (public op; ref/kernel routing
+via :mod:`repro.kernels.dispatch` TPU autodetection).  Public ops:
+
+* :func:`repro.kernels.unit_fold.unit_fold` — fused unit-fold megakernel
+  (gather + bounds + build + query for every leaf family, one dispatch)
+* :func:`repro.kernels.batch_windowfold.batch_windowfold` — additive-leaf
+  masked-matmul request fold
+* :func:`repro.kernels.segagg.segagg` / ``bucket_build`` — segmented sums
+* :func:`repro.kernels.chunked_scan.linear_scan` — first-order recurrence
+* :func:`repro.kernels.feature_hash.feature_hash` — signature hashing
+* :func:`repro.kernels.flash_decode.decode_attention` — decode attention
+"""
+
+from . import dispatch  # noqa: F401
+from .batch_windowfold import batch_windowfold, store_windowfold  # noqa: F401
+from .chunked_scan import linear_scan  # noqa: F401
+from .feature_hash import feature_hash, signature_batch  # noqa: F401
+from .flash_decode import decode_attention, decode_partials  # noqa: F401
+from .segagg import bucket_build, segagg  # noqa: F401
+from .unit_fold import unit_fold  # noqa: F401
+
+__all__ = ["dispatch", "unit_fold", "batch_windowfold", "store_windowfold",
+           "segagg", "bucket_build", "linear_scan", "feature_hash",
+           "signature_batch", "decode_attention", "decode_partials"]

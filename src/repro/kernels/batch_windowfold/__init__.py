@@ -1,3 +1,9 @@
-"""Fused batched request-window fold (gather + masked time-frame sum)."""
+"""Fused batched request-window fold (gather + masked time-frame sum).
+
+Additive-leaf fast path: one masked matmul over pre-lifted store rows.
+It is *not* the only fused serving path — ``kernels.unit_fold`` fuses the
+full gather + bounds + build + query pipeline for every leaf family; this
+kernel remains the cheapest route when all leaves are invertible sums.
+"""
 
 from .ops import batch_windowfold, store_windowfold  # noqa: F401

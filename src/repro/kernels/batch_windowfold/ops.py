@@ -6,20 +6,24 @@ from typing import Dict, List
 
 import jax.numpy as jnp
 
+from .. import dispatch
 from .kernel import batch_windowfold_pallas
 from .ref import batch_windowfold_ref
 
 
 def batch_windowfold(keys: jnp.ndarray, ts: jnp.ndarray, vals: jnp.ndarray,
                      qkey: jnp.ndarray, qt0: jnp.ndarray, qt1: jnp.ndarray,
-                     use_pallas: bool = False, interpret: bool = True
+                     use_pallas: bool = None, interpret: bool = None
                      ) -> jnp.ndarray:
     """Per-request masked window sums: (C, F) x (B,) queries -> (B, F).
 
-    ``use_pallas=False`` routes to the XLA reference (CPU hosts and
-    dry-run lowering); the Pallas path targets TPU (validated against the
-    ref in interpret mode by tests/test_online_batch.py).
+    ``use_pallas``/``interpret`` default to ``dispatch.resolve`` TPU
+    autodetection: XLA reference on CPU hosts and dry-run lowering, the
+    Pallas kernel on TPU (validated against the ref in interpret mode by
+    tests/test_online_batch.py).  This is the additive-leaf fast path;
+    the general fused serving path is ``kernels.unit_fold``.
     """
+    use_pallas, interpret = dispatch.resolve(use_pallas, interpret)
     if use_pallas:
         return batch_windowfold_pallas(keys, ts, vals, qkey, qt0, qt1,
                                        interpret=interpret)
@@ -28,7 +32,7 @@ def batch_windowfold(keys: jnp.ndarray, ts: jnp.ndarray, vals: jnp.ndarray,
 
 def store_windowfold(state: Dict, vals: jnp.ndarray, qkey: jnp.ndarray,
                      qt0: jnp.ndarray, qt1: jnp.ndarray,
-                     use_pallas: bool = False, interpret: bool = True
+                     use_pallas: bool = None, interpret: bool = None
                      ) -> jnp.ndarray:
     """Fold pre-lifted store rows ``vals`` (capacity, F) against a batch
     of request frames, masking rows beyond the live count (their lifted

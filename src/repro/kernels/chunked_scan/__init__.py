@@ -1,0 +1,5 @@
+"""Chunked first-order linear recurrence (ew_avg decay scan, SSM blocks)."""
+
+from .ops import linear_scan  # noqa: F401
+
+__all__ = ["linear_scan"]

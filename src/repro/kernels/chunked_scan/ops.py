@@ -4,17 +4,20 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from .. import dispatch
 from .kernel import linear_scan_pallas
 from .ref import linear_scan_ref
 
 
-def linear_scan(a: jnp.ndarray, b: jnp.ndarray, use_pallas: bool = False,
-                chunk: int = 128, interpret: bool = True) -> jnp.ndarray:
+def linear_scan(a: jnp.ndarray, b: jnp.ndarray, use_pallas: bool = None,
+                chunk: int = 128, interpret: bool = None) -> jnp.ndarray:
     """y_t = a_t * y_{t-1} + b_t over the -2 axis.
 
     Shared by ``ew_avg`` (feature layer) and SSM/hybrid blocks (model
-    layer).  XLA ref on CPU / dry-run; Pallas path for TPU.
+    layer).  ``dispatch.resolve`` autodetection: XLA ref on CPU /
+    dry-run, Pallas path on TPU.
     """
+    use_pallas, interpret = dispatch.resolve(use_pallas, interpret)
     if use_pallas:
         squeeze = a.ndim == 2
         if squeeze:

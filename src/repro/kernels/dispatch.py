@@ -1,0 +1,40 @@
+"""Shared kernel dispatch policy — one place deciding ref vs Pallas.
+
+Every kernel package's ``ops.py`` used to repeat the ``use_pallas`` /
+``interpret`` boilerplate with slightly different defaults.  ``resolve``
+centralizes the policy:
+
+* explicit booleans always win (tests force ``use_pallas=True,
+  interpret=True`` to execute kernel bodies on CPU);
+* ``None`` autodetects: the Pallas path turns on when the default JAX
+  backend is a TPU, and interpret mode turns on everywhere else, so the
+  same call site runs the hand-fused XLA reference on CPU hosts and the
+  Mosaic-lowered kernel on real hardware.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+
+@functools.lru_cache(maxsize=1)
+def tpu_available() -> bool:
+    """True when the default JAX backend is a TPU (cached: the device
+    set is fixed for the process lifetime)."""
+    import jax
+
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except Exception:
+        return False
+
+
+def resolve(use_pallas: Optional[bool] = None,
+            interpret: Optional[bool] = None) -> Tuple[bool, bool]:
+    """Resolve (use_pallas, interpret) with TPU autodetection for None."""
+    if use_pallas is None:
+        use_pallas = tpu_available()
+    if interpret is None:
+        interpret = not tpu_available()
+    return bool(use_pallas), bool(interpret)

@@ -4,14 +4,16 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from .. import dispatch
 from .kernel import feature_hash_pallas
 from .ref import feature_hash_ref
 
 
 def feature_hash(codes: jnp.ndarray, dim: int, salt: int = 0x9E3779B9,
-                 use_pallas: bool = False, interpret: bool = True
+                 use_pallas: bool = None, interpret: bool = None
                  ) -> jnp.ndarray:
     """Hash discrete codes into [0, dim) feature indices (§4.1(5))."""
+    use_pallas, interpret = dispatch.resolve(use_pallas, interpret)
     if use_pallas:
         return feature_hash_pallas(codes, dim, salt=salt,
                                    interpret=interpret)
@@ -19,7 +21,7 @@ def feature_hash(codes: jnp.ndarray, dim: int, salt: int = 0x9E3779B9,
 
 
 def signature_batch(discrete_codes: jnp.ndarray, continuous: jnp.ndarray,
-                    dim: int, use_pallas: bool = False):
+                    dim: int, use_pallas: bool = None):
     """Assemble an ML-ready (indices, values) sparse batch + dense block:
     LibSVM-style output without materializing the high-dim space.
 

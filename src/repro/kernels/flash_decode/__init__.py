@@ -1,0 +1,7 @@
+"""Decode attention with mergeable partial-softmax states."""
+
+from .ops import (decode_attention, decode_partials,  # noqa: F401
+                  finalize_partials, merge_partials)
+
+__all__ = ["decode_partials", "decode_attention", "merge_partials",
+           "finalize_partials"]

@@ -4,18 +4,20 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from .. import dispatch
 from .kernel import decode_partials_pallas
 from .ref import (decode_attention_ref, decode_partials_ref,
                   finalize_partials, merge_partials)
 
 
 def decode_partials(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
-                    lengths: jnp.ndarray = None, use_pallas: bool = False,
-                    interpret: bool = True):
+                    lengths: jnp.ndarray = None, use_pallas: bool = None,
+                    interpret: bool = None):
     """Partial-softmax states (m, l, o) for one KV shard.
 
     q: (B, H, D); k/v: (B, S, H, D); lengths: (B,) live KV rows.
     """
+    use_pallas, interpret = dispatch.resolve(use_pallas, interpret)
     b, h, d = q.shape
     s = k.shape[1]
     if lengths is None:
@@ -32,8 +34,8 @@ def decode_partials(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     return decode_partials_ref(q, k, v, mask)
 
 
-def decode_attention(q, k, v, lengths=None, use_pallas: bool = False,
-                     interpret: bool = True):
+def decode_attention(q, k, v, lengths=None, use_pallas: bool = None,
+                     interpret: bool = None):
     """Full single-shard decode attention (partials finalized locally)."""
     m, l, o = decode_partials(q, k, v, lengths, use_pallas=use_pallas,
                               interpret=interpret)

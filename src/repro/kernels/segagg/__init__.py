@@ -1,0 +1,5 @@
+"""Segmented aggregation + pre-aggregation bucket build (§5.1)."""
+
+from .ops import bucket_build, segagg  # noqa: F401
+
+__all__ = ["segagg", "bucket_build"]

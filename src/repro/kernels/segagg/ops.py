@@ -5,18 +5,21 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from .. import dispatch
 from .kernel import segagg_pallas
 from .ref import segagg_ref
 
 
 def segagg(values: jnp.ndarray, seg_ids: jnp.ndarray, n_segments: int,
-           use_pallas: bool = False, interpret: bool = True) -> jnp.ndarray:
+           use_pallas: bool = None, interpret: bool = None) -> jnp.ndarray:
     """Per-segment sums: (N, F) x (N,) -> (n_segments, F).
 
-    ``use_pallas=False`` routes to the XLA reference (used on CPU hosts and
-    in dry-run lowering); the Pallas path targets TPU (validated against
-    the ref in interpret mode by tests/test_kernels.py).
+    ``use_pallas``/``interpret`` default to ``dispatch.resolve`` TPU
+    autodetection: the XLA reference on CPU hosts and in dry-run
+    lowering, the Pallas path on TPU (validated against the ref in
+    interpret mode by tests/test_kernels.py).
     """
+    use_pallas, interpret = dispatch.resolve(use_pallas, interpret)
     if use_pallas:
         return segagg_pallas(values, seg_ids, n_segments,
                              interpret=interpret)
@@ -24,7 +27,7 @@ def segagg(values: jnp.ndarray, seg_ids: jnp.ndarray, n_segments: int,
 
 
 def bucket_build(values: jnp.ndarray, ts: jnp.ndarray, bucket_ms: int,
-                 n_buckets: int, use_pallas: bool = False) -> jnp.ndarray:
+                 n_buckets: int, use_pallas: bool = None) -> jnp.ndarray:
     """Pre-aggregation bucket build (§5.1): sum + count per time bucket.
 
     Returns (n_buckets, F+1): per-bucket feature sums with a trailing

@@ -1,0 +1,7 @@
+"""Fused unit-fold megakernel: gather + bounds + build + query in one
+dispatch (ref.py = hand-fused XLA reference and CPU fast path;
+kernel.py = Pallas TPU implementation; ops.py = dispatch)."""
+
+from .ops import unit_fold
+
+__all__ = ["unit_fold"]

@@ -1,0 +1,310 @@
+"""Pallas TPU kernel: one window group's ENTIRE unit fold per dispatch.
+
+Grid (units, leaf groups); TPU grids run sequentially with the group
+dimension innermost, so for each unit the kernel
+
+  1. computes every member window's [start, end) frame bounds ONCE
+     (ROWS arithmetic + the batched ``first_geq`` binary search for
+     RANGE members) into int32 VMEM scratch that persists across the
+     group steps — the ``unit_bounds`` stage, fused;
+  2. per leaf group, builds the fold structure in VMEM scratch (packed
+     balanced-tree levels for scan/tree groups, sparse-table levels for
+     idempotent groups) and answers every (member, query) fold from it
+     — the build + query stages, fused.
+
+The carry-in-scratch / accumulate-across-sequential-grid idiom follows
+the in-tree ``chunked_scan`` and ``segagg`` kernels; the scan stage,
+however, canNOT reuse chunked_scan's Hillis–Steele recurrence: bitwise
+parity with the staged engine requires reproducing
+``jax.lax.associative_scan``'s exact bracketing.  The kernel exploits
+the identity (verified in tests/test_kernels.py) that scan prefix
+``[0, e)`` equals the MSB-first left fold of the position-aligned
+power-of-two block decomposition of ``[0, e)`` over balanced-tree
+levels — so it builds the same tree levels a segment tree needs and
+walks the decomposition per query, bit-for-bit equal to the scan.
+
+Inputs are padded to a power-of-two row count with identity rows
+(values) and INT_MAX sentinels (timestamps); every padded structure
+provably yields the staged values on real queries:
+
+* scan: decomposition blocks of ``[0, e)``, e <= R, never touch pads;
+* sparse: identity rows are absorbed lane-wise (min/max/HLL combines);
+* tree: the staged ``tree_levels`` pads to the same power of two with
+  the same identity rows — the levels are literally identical;
+* bounds: the extra binary-search steps on converged rows are no-ops.
+
+Query math (clamps, identity-seeded walk order, empty-range masking)
+replicates ``core.window`` line for line — see each helper's note.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, List, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .ref import UnitFoldPlan
+
+INT_MAX = 2**31 - 1
+
+
+# ---------------------------------------------------------------------------
+# In-kernel stages (all shapes static; queries are (M, Q) int32)
+# ---------------------------------------------------------------------------
+
+
+def _bounds(specs: Sequence[Any], ts: jnp.ndarray, q: jnp.ndarray,
+            r_real: int, rp: int):
+    """Frame bounds for every member — ``ref.unit_bounds_all`` with the
+    ``first_geq`` binary search unrolled in-kernel.  The search runs
+    ceil(log2(rp))+1 steps over the padded array; rows converge within
+    the staged step count and extra iterations leave (lo, hi) fixed, so
+    the result is bitwise the staged one."""
+    end0 = q + 1
+    range_ix = [i for i, s in enumerate(specs) if not s.frame_rows]
+    found = {}
+    if range_ix:
+        pres = [min(specs[i].preceding, 2**30) for i in range_ix]
+        tsq = jnp.take(ts, q)
+        targets = jnp.stack([tsq - jnp.int32(p) for p in pres])
+        lo = jnp.zeros_like(targets)
+        hi = jnp.broadcast_to(end0, targets.shape).astype(jnp.int32)
+        steps = max(1, int(math.ceil(math.log2(max(rp, 2)))) + 1)
+        for _ in range(steps):
+            mid = (lo + hi) // 2
+            v = jnp.take(ts, jnp.clip(mid, 0, rp - 1))
+            go_right = (v < targets) & (lo < hi)
+            lo = jnp.where(go_right, mid + 1, lo)
+            hi = jnp.where(go_right | (lo >= hi), hi, mid)
+        for row, i in enumerate(range_ix):
+            found[i] = lo[row]
+    starts, ends = [], []
+    for i, s in enumerate(specs):
+        end = end0
+        if s.frame_rows:
+            start = jnp.maximum(0, q - jnp.int32(min(s.preceding, r_real)))
+        else:
+            start = found[i]
+        if s.maxsize:
+            start = jnp.maximum(start, end - jnp.int32(s.maxsize))
+        if s.instance_not_in_window:
+            end = jnp.minimum(end, q)
+            start = jnp.minimum(start, end)
+        starts.append(jnp.broadcast_to(start, q.shape))
+        ends.append(jnp.broadcast_to(end, q.shape))
+    return (jnp.stack(starts).astype(jnp.int32),
+            jnp.stack(ends).astype(jnp.int32))
+
+
+def _pack_levels(proxy, data: jnp.ndarray, lvl_ref, rp: int) -> List[int]:
+    """Balanced-tree levels (pair combines, identical to ``tree_levels``
+    over the identity-padded rows) packed into one (2*rp, F) scratch;
+    returns each level's row offset."""
+    offs: List[int] = []
+    off = 0
+    cur = data
+    n = rp
+    while True:
+        offs.append(off)
+        lvl_ref[off:off + n] = cur
+        off += n
+        if n == 1:
+            break
+        cur = proxy.combine(cur[0::2], cur[1::2])
+        n //= 2
+    return offs
+
+
+def _gather_nodes(lvl: jnp.ndarray, idx: jnp.ndarray, f: int):
+    """(M, Q) row gather out of packed (rows, F) scratch."""
+    m, q = idx.shape
+    return jnp.take(lvl, idx.reshape(-1), axis=0).reshape(m, q, f)
+
+
+def _prefix_at(proxy, lvl: jnp.ndarray, offs: List[int], e: jnp.ndarray,
+               rp: int, f: int) -> jnp.ndarray:
+    """Scan prefix of rows [0, e) (e >= 1) from packed tree levels:
+    MSB-first left fold of e's set-bit blocks, each block the
+    position-aligned tree node covering it.  Bitwise equal to
+    ``associative_scan(combine, data)[e-1]`` — same bracketing."""
+    m, q = e.shape
+    pos = jnp.zeros_like(e)
+    acc = jnp.zeros((m, q, f), lvl.dtype)
+    first = jnp.ones(e.shape, bool)
+    for k in range(rp.bit_length() - 1, -1, -1):
+        taken = ((e >> k) & 1) == 1
+        node = _gather_nodes(lvl, offs[k] + (pos >> k), f)
+        cand = jnp.where(first[..., None], node, proxy.combine(acc, node))
+        acc = jnp.where(taken[..., None], cand, acc)
+        first = first & ~taken
+        pos = pos + jnp.where(taken, jnp.int32(1 << k), 0)
+    return acc
+
+
+def _scan_group(grp, data, identv, lvl_ref, starts, ends, rp: int):
+    """Invertible stage: tree build + two prefix walks + prefix diff —
+    the in-kernel ``prefix_window_fold`` (same identity substitution at
+    segment start, same empty-range masking)."""
+    f = data.shape[-1]
+    offs = _pack_levels(grp.proxy, data, lvl_ref, rp)
+    lvl = lvl_ref[...]
+    ident = jnp.broadcast_to(identv, starts.shape + (f,))
+    last = _prefix_at(grp.proxy, lvl, offs, jnp.maximum(ends, 1), rp, f)
+    prev = _prefix_at(grp.proxy, lvl, offs, jnp.maximum(starts, 1), rp, f)
+    prev = jnp.where((starts <= 0)[..., None], ident, prev)
+    folded = grp.proxy.invert_prefix(last, prev)
+    return jnp.where((ends <= starts)[..., None], ident, folded)
+
+
+def _sparse_group(grp, data, identv, lvl_ref, starts, ends, rp: int):
+    """Idempotent stage: ``sparse_levels`` build (concat-shift combine
+    per level) + ``sparse_query`` 2-lookup math, replicated exactly."""
+    proxy = grp.proxy
+    f = data.shape[-1]
+    cur = data
+    lvl_ref[0] = cur
+    j = 1
+    while (1 << j) <= rp:
+        off = 1 << (j - 1)
+        pad = jnp.broadcast_to(identv, (off, f))
+        cur = proxy.combine(cur, jnp.concatenate([cur[off:], pad], axis=0))
+        lvl_ref[j] = cur
+        j += 1
+    table = lvl_ref[...].reshape(-1, f)        # (L*rp, F)
+    span = jnp.maximum(ends - starts, 1).astype(jnp.int32)
+    jlev = 31 - jax.lax.clz(span)
+    lo = jnp.clip(starts, 0, rp - 1)
+    hi = jnp.clip(ends - (1 << jlev).astype(jnp.int32), 0, rp - 1)
+    a = _gather_nodes(table, jlev * rp + lo, f)
+    b = _gather_nodes(table, jlev * rp + hi, f)
+    out = proxy.combine(a, b)
+    empty = (ends <= starts)[..., None]
+    return jnp.where(empty, jnp.broadcast_to(identv, out.shape), out)
+
+
+def _tree_group(grp, data, identv, lvl_ref, starts, ends, rp: int):
+    """Order-sensitive stage: the bidirectional ``tree_query`` walk
+    (left accumulator grows rightward, right leftward, root included),
+    replicated clamp-for-clamp over the packed levels."""
+    proxy = grp.proxy
+    f = data.shape[-1]
+    offs = _pack_levels(proxy, data, lvl_ref, rp)
+    lvl = lvl_ref[...]
+    ident = jnp.broadcast_to(identv, starts.shape + (f,))
+    res_l = ident
+    res_r = ident
+    l = starts.astype(jnp.int32)
+    r = ends.astype(jnp.int32)
+    for k, off in enumerate(offs):
+        m_nodes = rp >> k
+        active = l < r
+        take_l = active & ((l & 1) == 1)
+        take_r = active & ((r & 1) == 1)
+        node_l = _gather_nodes(lvl, off + jnp.clip(l, 0, m_nodes - 1), f)
+        node_r = _gather_nodes(lvl, off + jnp.clip(r - 1, 0, m_nodes - 1),
+                               f)
+        res_l = jnp.where(take_l[..., None],
+                          proxy.combine(res_l, node_l), res_l)
+        res_r = jnp.where(take_r[..., None],
+                          proxy.combine(node_r, res_r), res_r)
+        l = (l + take_l.astype(jnp.int32)) >> 1
+        r = (r - take_r.astype(jnp.int32)) >> 1
+    return proxy.combine(res_l, res_r)
+
+
+# ---------------------------------------------------------------------------
+# Kernel body + pallas_call wrapper
+# ---------------------------------------------------------------------------
+
+
+def _unit_fold_kernel(ts_ref, q_ref, *refs, plan: UnitFoldPlan,
+                      r_real: int, rp: int):
+    g = pl.program_id(1)
+    n_groups = len(plan.groups)
+    data_refs = refs[:n_groups]
+    ident_refs = refs[n_groups:2 * n_groups]
+    out_refs = refs[2 * n_groups:3 * n_groups]
+    st_ref, en_ref = refs[3 * n_groups], refs[3 * n_groups + 1]
+    lvl_refs = refs[3 * n_groups + 2:]
+
+    @pl.when(g == 0)
+    def _do_bounds():
+        starts, ends = _bounds(plan.specs, ts_ref[0], q_ref[0], r_real, rp)
+        st_ref[...] = starts
+        en_ref[...] = ends
+
+    for gi, grp in enumerate(plan.groups):
+        @pl.when(g == gi)
+        def _do_group(gi=gi, grp=grp):
+            data = data_refs[gi][0]            # (rp, F)
+            identv = ident_refs[gi][0]         # (F,)
+            starts = st_ref[...]
+            ends = en_ref[...]
+            if grp.kind == "scan":
+                folded = _scan_group(grp, data, identv, lvl_refs[gi],
+                                     starts, ends, rp)
+            elif grp.kind == "sparse":
+                folded = _sparse_group(grp, data, identv, lvl_refs[gi],
+                                       starts, ends, rp)
+            else:
+                folded = _tree_group(grp, data, identv, lvl_refs[gi],
+                                     starts, ends, rp)
+            out_refs[gi][0] = folded
+
+
+def unit_fold_pallas(plan: UnitFoldPlan, data_list: List[jnp.ndarray],
+                     ident_list: List[jnp.ndarray], ts: jnp.ndarray,
+                     queries: jnp.ndarray, r_real: int,
+                     interpret: bool = True) -> List[jnp.ndarray]:
+    """Run the fused fold: ``data_list[g]`` is group g's identity-padded
+    (U, rp, F_g) lane block, ``ident_list[g]`` its (1, F_g) identity
+    lane vector (a kernel input — Pallas kernels cannot capture array
+    constants), ``ts`` the (U, rp) sentinel-padded order column,
+    ``queries`` the (U, Q) unit positions.  Returns one (U, M, Q, F_g)
+    fold block per group.
+
+    VMEM per step: the group's lane block + its structure scratch
+    (2*rp*F packed tree rows, or log2(rp)+1 sparse levels) + the (M, Q)
+    bounds — bounded by the largest single group, not the group sum.
+    """
+    u, rp = ts.shape
+    nq = queries.shape[1]
+    m = len(plan.specs)
+    widths = [int(d.shape[-1]) for d in data_list]
+    grid = (u, len(plan.groups))
+
+    in_specs = [pl.BlockSpec((1, rp), lambda i, g: (i, 0)),
+                pl.BlockSpec((1, nq), lambda i, g: (i, 0))]
+    for w in widths:
+        in_specs.append(pl.BlockSpec((1, rp, w), lambda i, g: (i, 0, 0)))
+    for w in widths:
+        in_specs.append(pl.BlockSpec((1, w), lambda i, g: (0, 0)))
+    out_specs = [pl.BlockSpec((1, m, nq, w), lambda i, g: (i, 0, 0, 0))
+                 for w in widths]
+    out_shape = [jax.ShapeDtypeStruct((u, m, nq, w), jnp.float32)
+                 for w in widths]
+    scratch = [pltpu.VMEM((m, nq), jnp.int32),
+               pltpu.VMEM((m, nq), jnp.int32)]
+    for grp, w in zip(plan.groups, widths):
+        if grp.kind == "sparse":
+            scratch.append(pltpu.VMEM((rp.bit_length(), rp, w),
+                                      jnp.float32))
+        else:
+            scratch.append(pltpu.VMEM((2 * rp, w), jnp.float32))
+
+    outs = pl.pallas_call(
+        functools.partial(_unit_fold_kernel, plan=plan, r_real=r_real,
+                          rp=rp),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(ts, queries, *data_list, *ident_list)
+    return list(outs) if isinstance(outs, (list, tuple)) else [outs]

@@ -1,0 +1,106 @@
+"""Public entry for the fused unit-fold op.
+
+``unit_fold(specs, leaves, env, queries)`` folds one window group's
+padded unit(s) — every member window, every deduplicated leaf — in one
+dispatch.  It accepts both unit layouts the engine produces:
+
+* **single unit** (env arrays (R, ...)): the online request path;
+  vmap-safe, always served by the hand-fused XLA reference;
+* **batched units** (env arrays (U, R, ...)): the offline block fold
+  and the batched fast serving path; served by the vmapped reference
+  or, with ``use_pallas``, the Pallas kernel (rows padded to a power
+  of two with identity values / INT_MAX timestamps — provably
+  value-preserving, see kernel.py).
+
+Both paths are bitwise (``array_equal``) against the staged
+``lowering.windows.fold_unit`` — gated by tests/test_kernels.py.
+Dispatch policy lives in ``kernels.dispatch``: explicit booleans win,
+``None`` autodetects TPU (Pallas compiled) vs everything else (ref;
+kernel bodies still run under ``interpret=True`` in tests).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .. import dispatch
+from . import ref as _ref
+from . import kernel as _kernel
+
+__all__ = ["unit_fold"]
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, (n - 1).bit_length())
+
+
+def _pallas_batched(plan, env: Dict[str, Any], queries: jnp.ndarray,
+                    interpret: bool) -> List[Dict[str, jnp.ndarray]]:
+    ts = env[plan.order_by]
+    u, r = ts.shape
+    rp = max(2, _next_pow2(r))
+    data_list = []
+    for grp in plan.groups:
+        data = jax.vmap(lambda e, g=grp: _ref.lift_group(g, e))(env)
+        data = data.reshape(u, r, -1)
+        if rp > r:
+            pad = jnp.broadcast_to(_ref.group_identity(grp),
+                                   (u, rp - r, data.shape[-1]))
+            data = jnp.concatenate([data, pad], axis=1)
+        data_list.append(data)
+    if rp > r:
+        ts = jnp.concatenate(
+            [ts, jnp.full((u, rp - r), _ref.INT_MAX, ts.dtype)], axis=1)
+    ident_list = [_ref.group_identity(grp)[None] for grp in plan.groups]
+    folded_groups = _kernel.unit_fold_pallas(
+        plan, data_list, ident_list, ts, queries.astype(jnp.int32),
+        r_real=r, interpret=interpret)
+    out: List[Dict[str, jnp.ndarray]] = [{} for _ in plan.specs]
+    for grp, folded in zip(plan.groups, folded_groups):
+        for mi in range(len(plan.specs)):
+            fm = folded[:, mi]                 # (U, Q, F)
+            off = 0
+            for key, leaf, size in zip(grp.keys, grp.leaves, grp.sizes):
+                out[mi][key] = fm[..., off:off + size].reshape(
+                    fm.shape[:2] + leaf.shape)
+                off += size
+    return out
+
+
+def unit_fold(specs: Sequence[Any], leaves: Dict[str, Any],
+              env: Dict[str, Any],
+              queries: Optional[jnp.ndarray] = None, *, order_by: str,
+              use_pallas: Optional[bool] = None,
+              interpret: Optional[bool] = None
+              ) -> List[Dict[str, jnp.ndarray]]:
+    """Fused fold of one window group over one unit or a (U, R) block.
+
+    ``specs`` are the member WindowSpecs, ``leaves`` the group's
+    deduplicated ``{key: Leaf}`` set, ``env`` the padded unit columns
+    (incl. ``order_by`` and ``__valid__``), ``queries`` the unit
+    positions to emit (default: every row).  Returns one
+    ``{leaf key: (..., Q, *S)}`` dict per member covering the full
+    group leaf set.
+    """
+    use_pallas, interpret = dispatch.resolve(use_pallas, interpret)
+    plan = _ref.build_plan(specs, leaves, order_by)
+    ts = jnp.asarray(env[order_by])
+    batched = ts.ndim == 2
+    if queries is None:
+        q = jnp.arange(ts.shape[-1], dtype=jnp.int32)
+        queries = jnp.broadcast_to(q, ts.shape) if batched else q
+    queries = jnp.asarray(queries, jnp.int32)
+    if not use_pallas:
+        if batched:
+            return jax.vmap(
+                lambda e, qq: _ref.unit_fold_ref(plan, e, qq)
+            )(dict(env), queries)
+        return _ref.unit_fold_ref(plan, env, queries)
+    if not batched:
+        env_b = {k: jnp.asarray(v)[None] for k, v in env.items()}
+        out = _pallas_batched(plan, env_b, queries[None], interpret)
+        return [{k: v[0] for k, v in d.items()} for d in out]
+    return _pallas_batched(plan, dict(env), queries, interpret)

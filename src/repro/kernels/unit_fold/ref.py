@@ -1,0 +1,269 @@
+"""Hand-fused XLA reference for the unit-fold megakernel.
+
+One window group's ENTIRE unit fold — frame-bounds search, invertible
+combine-scan + prefix difference, idempotent sparse-table build +
+2-lookup query, ordered tree-walk fallback — as one traceable function
+with no intermediate materialization between stages.  This reference is
+itself the fast path on CPU: the win over the staged
+``lowering.windows.fold_unit`` comes from *leaf stacking*.
+
+Stacking is the load-bearing trick, and it is bitwise-safe by
+construction: ``jax.lax.associative_scan``'s bracketing (and the sparse
+table's level recursion) depends only on the axis-0 length, and the
+add/min/max combines are elementwise per lane — so flattening every
+same-combine leaf into one (R, F) lane block runs ONE scan / ONE
+sparse-table build for the whole family and still produces, lane for
+lane, the exact bits the per-leaf staged path produces:
+
+* every ``AddLeaf`` (scalar sums/counts and histogram states) stacks
+  into one combine-scan;
+* every ``MinLeaf`` stacks into one sparse table; ``MaxLeaf`` and
+  ``HLLLeaf`` (both elementwise-max combines) stack into another, with a
+  per-lane identity row covering their different fill values;
+* order-sensitive leaves (``EWLeaf``, ``DrawdownLeaf``) keep their own
+  structure — their combines mix state lanes, so they fold exactly as
+  the staged path does.
+
+All member windows' frame bounds batch into one (M, Q) computation (one
+``first_geq`` call covers every RANGE member), and every query stage is
+a gather over the shared structures — nothing is rebuilt per member.
+
+The grouping *plan* built here is shared verbatim by the Pallas kernel
+(``kernel.py``), so both paths fold the same lane layout.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ...core import window as W
+from ...core.functions import AddLeaf, HLLLeaf, Leaf, MaxLeaf, MinLeaf
+
+__all__ = ["LeafGroup", "UnitFoldPlan", "build_plan", "lift_group",
+           "group_identity", "unit_bounds_all", "unit_fold_ref",
+           "unstack_group", "INT_MAX"]
+
+INT_MAX = 2**31 - 1
+
+
+class _StackLeaf:
+    """Leaf-shaped proxy driving ``core.window`` structure builds over a
+    stacked (R, F) lane block: elementwise combine, per-lane identity."""
+
+    def __init__(self, combine, ident, invert=None):
+        self._combine = combine
+        self._ident = ident
+        self._invert = invert
+
+    def identity(self):
+        return self._ident
+
+    def combine(self, a, b):
+        return self._combine(a, b)
+
+    def invert_prefix(self, p_end, p_start):
+        return self._invert(p_end, p_start)
+
+
+@dataclasses.dataclass
+class LeafGroup:
+    """One fold structure shared by one or more stacked leaves."""
+
+    kind: str                            # 'scan' | 'sparse' | 'tree'
+    keys: Tuple[str, ...]                # leaf keys in lane order
+    leaves: Tuple[Leaf, ...]
+    sizes: Tuple[int, ...]               # flat lane width per leaf
+    proxy: Any                           # combine/identity/invert driver
+    stacked: bool                        # lanes flattened (R, F) vs (R, *S)
+
+    @property
+    def width(self) -> int:
+        return sum(self.sizes)
+
+
+@dataclasses.dataclass
+class UnitFoldPlan:
+    """Static fold plan for one window group: member specs + leaf
+    groups.  Derived from compile-time metadata only — both the XLA
+    reference and the Pallas kernel execute this same plan."""
+
+    specs: Tuple[Any, ...]               # member WindowSpecs
+    order_by: str
+    groups: Tuple[LeafGroup, ...]
+
+
+def _flat(leaf: Leaf) -> int:
+    n = 1
+    for d in leaf.shape:
+        n *= d
+    return n
+
+
+def _stack_group(kind: str, items, combine, invert=None) -> LeafGroup:
+    keys = tuple(k for k, _ in items)
+    leaves = tuple(l for _, l in items)
+    sizes = tuple(_flat(l) for l in leaves)
+    ident = jnp.concatenate(
+        [jnp.broadcast_to(jnp.asarray(l.identity(), jnp.float32),
+                          l.shape).reshape(-1) if l.shape
+         else jnp.asarray(l.identity(), jnp.float32).reshape(1)
+         for l in leaves])
+    return LeafGroup(kind=kind, keys=keys, leaves=leaves, sizes=sizes,
+                     proxy=_StackLeaf(combine, ident, invert),
+                     stacked=True)
+
+
+def build_plan(specs: Sequence[Any], leaves: Dict[str, Leaf],
+               order_by: str) -> UnitFoldPlan:
+    """Partition the group's deduplicated leaves into fold structures.
+
+    Exact-type checks (not isinstance) gate the stacks: stacking is only
+    bitwise-safe when the combine really is the elementwise add/min/max
+    these classes define; any other leaf gets its own structure chosen
+    by the same invertible/idempotent classification the staged
+    ``unit_leaf_build`` uses.
+    """
+    add, mn, mx, solo = [], [], [], []
+    for k, leaf in leaves.items():
+        if type(leaf) is AddLeaf:
+            add.append((k, leaf))
+        elif type(leaf) is MinLeaf:
+            mn.append((k, leaf))
+        elif type(leaf) in (MaxLeaf, HLLLeaf):
+            mx.append((k, leaf))
+        else:
+            solo.append((k, leaf))
+    groups: List[LeafGroup] = []
+    if add:
+        groups.append(_stack_group(
+            "scan", add, combine=lambda a, b: a + b,
+            invert=lambda p_end, p_start: p_end - p_start))
+    if mn:
+        groups.append(_stack_group("sparse", mn, combine=jnp.minimum))
+    if mx:
+        groups.append(_stack_group("sparse", mx, combine=jnp.maximum))
+    for k, leaf in solo:
+        kind = ("scan" if leaf.invertible
+                else "sparse" if leaf.idempotent else "tree")
+        groups.append(LeafGroup(kind=kind, keys=(k,), leaves=(leaf,),
+                                sizes=(_flat(leaf),), proxy=leaf,
+                                stacked=False))
+    return UnitFoldPlan(specs=tuple(specs), order_by=order_by,
+                        groups=tuple(groups))
+
+
+def group_identity(group: LeafGroup) -> jnp.ndarray:
+    """The group's identity as a flat (F,) lane vector (per-lane fill
+    values for stacked families; the solo leaf's identity flattened)."""
+    if group.stacked:
+        return group.proxy.identity()
+    leaf = group.leaves[0]
+    ident = jnp.asarray(leaf.identity(), jnp.float32)
+    if leaf.shape:
+        return jnp.broadcast_to(ident, leaf.shape).reshape(-1)
+    return ident.reshape(1)
+
+
+def lift_group(group: LeafGroup, env: Dict[str, Any]) -> jnp.ndarray:
+    """Lift one unit env into the group's lane layout: (R, F) for
+    stacked families, (R, *S) for solo leaves.  Row masking (padding
+    rows lift to each leaf's fill value) happens inside ``leaf.lift``."""
+    if not group.stacked:
+        return group.leaves[0].lift(env)
+    mats = []
+    for leaf in group.leaves:
+        lifted = leaf.lift(env)
+        mats.append(lifted.reshape(lifted.shape[0], -1))
+    return jnp.concatenate(mats, axis=1)
+
+
+def unit_bounds_all(specs: Sequence[Any], ts_unit: jnp.ndarray,
+                    queries: jnp.ndarray, r: int
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(M, Q) [start, end) frame bounds for every member at once.
+
+    Replicates ``lowering.windows.unit_bounds`` member by member —
+    identical integer results — but batches every RANGE member's binary
+    search into ONE ``first_geq`` call over (M_range, Q) targets.
+    """
+    end0 = queries + 1
+    range_ix = [i for i, s in enumerate(specs) if not s.frame_rows]
+    range_start = {}
+    if range_ix:
+        pres = jnp.asarray([min(specs[i].preceding, 2**30)
+                            for i in range_ix], jnp.int32)
+        targets = jnp.take(ts_unit, queries)[None, :] - pres[:, None]
+        lo = jnp.zeros_like(targets)
+        hi = jnp.broadcast_to(end0, targets.shape)
+        found = W.first_geq(ts_unit, targets, lo, hi)
+        for row, i in enumerate(range_ix):
+            range_start[i] = found[row]
+    starts, ends = [], []
+    for i, spec in enumerate(specs):
+        end = end0
+        if spec.frame_rows:
+            start = jnp.maximum(0, queries - jnp.int32(
+                min(spec.preceding, r)))
+        else:
+            start = range_start[i]
+        if spec.maxsize:
+            start = jnp.maximum(start, end - jnp.int32(spec.maxsize))
+        if spec.instance_not_in_window:
+            end = jnp.minimum(end, queries)
+            start = jnp.minimum(start, end)
+        starts.append(jnp.broadcast_to(start, queries.shape))
+        ends.append(jnp.broadcast_to(end, queries.shape))
+    return jnp.stack(starts).astype(jnp.int32), \
+        jnp.stack(ends).astype(jnp.int32)
+
+
+def unstack_group(group: LeafGroup, folded: jnp.ndarray,
+                  out: List[Dict[str, jnp.ndarray]]):
+    """Scatter one group's (M, Q, F) (or (M, Q, *S)) query results into
+    the per-member leaf dicts, un-flattening stacked lanes."""
+    for mi, member_out in enumerate(out):
+        if not group.stacked:
+            member_out[group.keys[0]] = folded[mi]
+            continue
+        off = 0
+        q = folded.shape[1]
+        for key, leaf, size in zip(group.keys, group.leaves, group.sizes):
+            member_out[key] = folded[mi, :, off:off + size].reshape(
+                (q,) + leaf.shape)
+            off += size
+
+
+def unit_fold_ref(plan: UnitFoldPlan, env: Dict[str, Any],
+                  queries: jnp.ndarray) -> List[Dict[str, jnp.ndarray]]:
+    """Fold one padded unit for every member window, fused.
+
+    Returns one ``{leaf key: (Q, *S)}`` dict per member covering the
+    group's full deduplicated leaf set.  Bitwise-equal to the staged
+    ``fold_unit`` on every leaf/frame combination (tests/test_kernels).
+    """
+    ts_unit = env[plan.order_by]
+    r = ts_unit.shape[0]
+    starts, ends = unit_bounds_all(plan.specs, ts_unit, queries, r)
+    out: List[Dict[str, jnp.ndarray]] = [{} for _ in plan.specs]
+    seg_start = jnp.zeros_like(starts)
+    for group in plan.groups:
+        data = lift_group(group, env)
+        if group.kind == "scan":
+            prefix = jax.lax.associative_scan(group.proxy.combine, data,
+                                              axis=0)
+            folded = W.prefix_window_fold(group.proxy, prefix, starts,
+                                          ends, seg_start)
+        elif group.kind == "sparse":
+            table = W.sparse_levels(group.proxy, data)
+            folded = W.sparse_query(group.proxy, table, starts, ends)
+        else:
+            levels = W.tree_levels(group.proxy, data)
+            flat = W.tree_query(group.proxy, levels, starts.reshape(-1),
+                                ends.reshape(-1))
+            folded = flat.reshape(starts.shape + flat.shape[1:])
+        unstack_group(group, folded, out)
+    return out

@@ -131,9 +131,14 @@ class FeatureEngine:
                  retention=None, compact_every: int = 256,
                  replication: int = 0, ship_every: int = 64,
                  checkpoint_dir: Optional[str] = None,
-                 heartbeat_timeout_s: float = 60.0):
+                 heartbeat_timeout_s: float = 60.0,
+                 fused_fold: bool = False):
+        # fused_fold routes every request's window folds through the
+        # unit-fold megakernel (kernels/unit_fold) — bitwise equal to
+        # the staged fold engine, one dispatch per window group
         self.cs: CompiledScript = compile_script(
-            _parse(script_sql, time_unit), tables=tables)
+            _parse(script_sql, time_unit), tables=tables,
+            fused_unit_fold=fused_fold)
         self.use_preagg = use_preagg
         self.ttl_ms = ttl_ms
         self.sharded = mesh is not None or (n_shards or 0) > 1

@@ -1,18 +1,26 @@
 """Per-kernel validation: shape/dtype sweeps vs the pure-jnp oracles
-(interpret=True executes kernel bodies on CPU)."""
+(interpret=True executes kernel bodies on CPU), plus the unit-fold
+megakernel parity suite (fused ref / Pallas-interpret vs the staged
+``fold_unit`` engine, bitwise)."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-hypothesis = pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st  # noqa: E402
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYP = True
+except ImportError:          # property tests skip; parity suite still runs
+    HAVE_HYP = False
 
+from repro.core import compile_script, parse, verify_consistency
+from repro.core.lowering import windows as W
 from repro.kernels.segagg import ops as segagg_ops
 from repro.kernels.chunked_scan import ops as scan_ops
 from repro.kernels.feature_hash import ops as hash_ops
 from repro.kernels.flash_decode import ops as fd_ops
+from repro.kernels.unit_fold import ops as uf_ops
 
 
 # ------------------------------------------------------------------ segagg
@@ -61,19 +69,22 @@ def test_chunked_scan_shapes(b, t, d, chunk):
                                atol=1e-4)
 
 
-@given(t=st.integers(2, 80), d=st.integers(1, 9))
-@settings(max_examples=10, deadline=None)
-def test_chunked_scan_property(t, d):
-    rng = np.random.default_rng(t * 100 + d)
-    a = jnp.asarray(rng.uniform(0.2, 0.99, (1, t, d)).astype(np.float32))
-    x = jnp.asarray(rng.standard_normal((1, t, d)).astype(np.float32))
-    y1 = np.asarray(scan_ops.linear_scan(a, x, use_pallas=True, chunk=16))
-    # sequential oracle
-    h = np.zeros((d,), np.float32)
-    an, xn = np.asarray(a)[0], np.asarray(x)[0]
-    for i in range(t):
-        h = an[i] * h + xn[i]
-        np.testing.assert_allclose(y1[0, i], h, rtol=2e-3, atol=2e-3)
+if HAVE_HYP:
+    @given(t=st.integers(2, 80), d=st.integers(1, 9))
+    @settings(max_examples=10, deadline=None)
+    def test_chunked_scan_property(t, d):
+        rng = np.random.default_rng(t * 100 + d)
+        a = jnp.asarray(rng.uniform(0.2, 0.99, (1, t, d))
+                        .astype(np.float32))
+        x = jnp.asarray(rng.standard_normal((1, t, d)).astype(np.float32))
+        y1 = np.asarray(scan_ops.linear_scan(a, x, use_pallas=True,
+                                             chunk=16))
+        # sequential oracle
+        h = np.zeros((d,), np.float32)
+        an, xn = np.asarray(a)[0], np.asarray(x)[0]
+        for i in range(t):
+            h = an[i] * h + xn[i]
+            np.testing.assert_allclose(y1[0, i], h, rtol=2e-3, atol=2e-3)
 
 
 def test_ew_avg_equivalence():
@@ -158,3 +169,129 @@ def test_flash_decode_shard_merge_is_exact():
     merged = fd_ops.finalize_partials(*acc)
     np.testing.assert_allclose(np.asarray(merged), np.asarray(full),
                                rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------- unit_fold megakernel
+
+UNIT_SQL = """
+SELECT
+  sum(price) OVER w3s AS s_price,
+  avg(price) OVER w3s AS a_price,
+  count(price) OVER w3s AS c_price,
+  min(price) OVER w3s AS mn_price,
+  max(price) OVER w3s AS mx_price,
+  distinct_count(item) OVER w3s AS dc_item,
+  topn_frequency(item, 3) OVER w3s AS topn_item,
+  avg_cate_where(price, item, price > 1.0) OVER w3s AS acw,
+  drawdown(price) OVER wr AS dd_price,
+  ew_avg(price, 0.5) OVER wr AS ew_price,
+  sum(price) OVER wx AS s_price_x,
+  min(price) OVER wm AS mn_price_m
+FROM actions
+WINDOW w3s AS (PARTITION BY uid ORDER BY ts
+               ROWS_RANGE BETWEEN 3s PRECEDING AND CURRENT ROW),
+  wr AS (PARTITION BY uid ORDER BY ts
+         ROWS BETWEEN 50 PRECEDING AND CURRENT ROW),
+  wx AS (PARTITION BY uid ORDER BY ts
+         ROWS_RANGE BETWEEN 5s PRECEDING AND CURRENT ROW
+         MAXSIZE 7 EXCLUDE CURRENT_ROW),
+  wm AS (PARTITION BY uid ORDER BY ts
+         ROWS BETWEEN 10 PRECEDING AND CURRENT ROW MAXSIZE 4)
+"""
+
+
+@pytest.fixture(scope="module")
+def unit_case():
+    """One window group covering every leaf family x frame shape, plus a
+    padded unit env with a garbage invalid tail (the fused gather writes
+    identity there; parity must hold anyway)."""
+    cs = compile_script(UNIT_SQL, distinct_hll_p=None)
+    (members,) = W.group_windows(cs.windows)
+    rng = np.random.default_rng(0)
+    r = 37
+    ts = np.sort(rng.integers(0, 20000, r)).astype(np.int32)
+    price = rng.normal(2.0, 1.5, r).astype(np.float32)
+    item = rng.integers(0, 9, r).astype(np.int32)
+    valid = np.ones(r, bool)
+    valid[-7:] = False
+    price[~valid] = 99.0
+    env = {"ts": jnp.asarray(ts), "price": jnp.asarray(price),
+           "item": jnp.asarray(item), "__valid__": jnp.asarray(valid)}
+    specs = [m.node.spec for m in members]
+    leaves = {}
+    for m in members:
+        for k, leaf in W.unique_leaves(m.aggs).items():
+            leaves.setdefault(k, leaf)
+    return members, specs, leaves, env
+
+
+def _assert_unit_parity(members, staged, fused, batch=None):
+    for mi, m in enumerate(members):
+        for k in W.unique_leaves(m.aggs):
+            a = np.asarray(staged[mi][k])
+            b = np.asarray(fused[mi][k])
+            if batch is None:
+                np.testing.assert_array_equal(
+                    a, b, err_msg=f"{m.node.spec.name}/{k}")
+            else:
+                for u in range(batch):
+                    np.testing.assert_array_equal(
+                        a, b[u], err_msg=f"{m.node.spec.name}/{k}[{u}]")
+
+
+def test_unit_fold_ref_parity(unit_case):
+    """Fused XLA ref == staged fold_unit, bitwise, all leaves/frames."""
+    members, specs, leaves, env = unit_case
+    staged = W.fold_unit(members, env)
+    fused = uf_ops.unit_fold(specs, leaves, env, order_by="ts",
+                             use_pallas=False, interpret=True)
+    _assert_unit_parity(members, staged, fused)
+
+
+def test_unit_fold_pallas_parity(unit_case):
+    """Pallas kernel (interpret mode, batched unit axis) == the JITTED
+    staged path.  Jitted, not eager: XLA constant-folds ew_avg's
+    ``log(decay)`` to different bits than the eager op, and every
+    production driver runs jitted."""
+    members, specs, leaves, env = unit_case
+    staged = jax.jit(lambda e: W.fold_unit(members, e))(env)
+    u = 3
+    env_b = {k: jnp.stack([v] * u) for k, v in env.items()}
+    fused = uf_ops.unit_fold(specs, leaves, env_b, order_by="ts",
+                             use_pallas=True, interpret=True)
+    _assert_unit_parity(members, staged, fused, batch=u)
+
+
+def test_unit_fold_single_query_parity(unit_case):
+    """Online-style single-request query position, bitwise."""
+    members, specs, leaves, env = unit_case
+    p = jnp.int32(env["ts"].shape[0] - 8)
+    staged = W.fold_unit(members, env, queries=p[None])
+    fused = uf_ops.unit_fold(specs, leaves, env, p[None], order_by="ts",
+                             use_pallas=False)
+    _assert_unit_parity(members, staged, fused)
+
+
+@pytest.mark.parametrize("n_shards", [None, 2])
+def test_fused_fold_consistency_gate(action_tables, micro_sql, n_shards):
+    """verify_consistency(bitwise=True) with the megakernel driving both
+    executors: scalar online replay vs offline (n_shards=None) and
+    sharded batch serving vs offline_sharded (n_shards=2)."""
+    cs = compile_script(parse(micro_sql), tables=action_tables,
+                        fused_unit_fold=True)
+    rep = verify_consistency(cs, action_tables, n_shards=n_shards,
+                             bitwise=True)
+    assert rep.passed and rep.bitwise_equal, str(rep)
+
+
+def test_fused_offline_bitwise_vs_staged(action_tables, micro_sql):
+    """Cross-impl gate: the fused-flag offline run reproduces the staged
+    offline run bit for bit on every feature."""
+    staged = compile_script(parse(micro_sql), tables=action_tables)
+    fused = compile_script(parse(micro_sql), tables=action_tables,
+                           fused_unit_fold=True)
+    a, b = staged.offline(action_tables), fused.offline(action_tables)
+    assert set(a) == set(b)
+    for k in a:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]),
+                                      err_msg=k)

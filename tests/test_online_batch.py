@@ -1,5 +1,5 @@
 """Batched online execution: vmapped request path, bulk store ingest,
-batched pre-agg maintenance, and the fused Pallas window-fold kernel."""
+batched pre-agg maintenance, and the fused unit-fold megakernel."""
 
 import jax.numpy as jnp
 import numpy as np
@@ -263,6 +263,7 @@ def test_batch_windowfold_kernel_matches_ref():
 
 
 def test_online_batch_fast_matches_batched_path(action_tables):
+    """The fused megakernel path is BITWISE the vmapped batch driver."""
     eng = FeatureEngine(ADDITIVE_SQL, action_tables, capacity=1024)
     o, a = action_tables["orders"], action_tables["actions"]
     eng.ingest_many("orders", [o.row(i) for i in range(80)])
@@ -277,17 +278,29 @@ def test_online_batch_fast_matches_batched_path(action_tables):
         fast = cs.online_batch_fast(eng.store, keys, ts, values,
                                     use_pallas=use_pallas)
         for k in ref:
-            np.testing.assert_allclose(
+            np.testing.assert_array_equal(
                 np.asarray(fast[k]), np.asarray(ref[k]),
-                rtol=2e-5, atol=2e-5, err_msg=f"{k} pallas={use_pallas}")
+                err_msg=f"{k} pallas={use_pallas}")
 
 
-def test_online_batch_fast_rejects_ineligible(action_tables, micro_sql):
-    eng = FeatureEngine(micro_sql, action_tables, capacity=256)
+def test_online_batch_fast_serves_every_leaf_family(action_tables,
+                                                    micro_sql):
+    """The unit-fold megakernel lifted the old additive-only
+    eligibility: ROWS frames, min/max, drawdown, ew_avg, topn all serve
+    through the fused path now, bitwise vs ``online_batch``."""
+    eng = FeatureEngine(micro_sql, action_tables, capacity=1024)
     ok, why = eng.cs.fast_batch_eligible()
-    assert not ok and why
-    with pytest.raises(ValueError):
-        eng.cs.online_batch_fast(eng.store, [0], [0], {})
+    assert ok, why
+    o, a = action_tables["orders"], action_tables["actions"]
+    eng.ingest_many("orders", [o.row(i) for i in range(60)])
+    eng.ingest_many("actions", [a.row(i) for i in range(40)])
+    rows = [a.row(100 + i) for i in range(9)]
+    keys, ts, values, _ = _encoded_batch(eng, rows)
+    ref = eng.cs.online_batch(eng.store, keys, ts, values)
+    fast = eng.cs.online_batch_fast(eng.store, keys, ts, values)
+    for k in ref:
+        np.testing.assert_array_equal(np.asarray(fast[k]),
+                                      np.asarray(ref[k]), err_msg=k)
 
 
 # --------------------------------------------------- serving integration
