@@ -74,4 +74,6 @@ def main(quick: bool = False):
 
 
 if __name__ == "__main__":
-    main()
+    from .common import bench_main
+
+    bench_main("glq_compile", main)

@@ -142,12 +142,6 @@ def main(quick: bool = False, tiny: bool = False):
 
 
 if __name__ == "__main__":
-    import argparse
+    from .common import bench_main
 
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--quick", action="store_true")
-    ap.add_argument("--tiny", action="store_true",
-                    help="CI smoke sizes (seconds, not minutes)")
-    args = ap.parse_args()
-    print("name,us_per_call,derived")
-    main(quick=args.quick, tiny=args.tiny)
+    bench_main("online_batch", main)

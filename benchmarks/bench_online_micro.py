@@ -80,4 +80,6 @@ def main(quick: bool = False):
 
 
 if __name__ == "__main__":
-    main()
+    from .common import bench_main
+
+    bench_main("online_micro", main)

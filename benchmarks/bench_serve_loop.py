@@ -182,5 +182,6 @@ def main(quick: bool = False, tiny: bool = False) -> int:
 
 
 if __name__ == "__main__":
-    argv = sys.argv[1:]
-    sys.exit(main(quick="--quick" in argv, tiny="--tiny" in argv))
+    from .common import bench_main
+
+    bench_main("serve_loop", main)

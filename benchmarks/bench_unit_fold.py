@@ -93,13 +93,24 @@ def main(quick: bool = False, tiny: bool = False):
         warmup=1, iters=2)
     emit("unit_fold_pallas_interpret_b64_us_per_req", us_pal / 64, "")
 
-    # offline executor: staged vs fused-flag compile
+    # offline executor: staged vs fused-flag compile, interleaved A/B
+    # samples (see bench_offline._interleaved_ratio: back-to-back blocks
+    # drift +-15% process to process; interleaving makes the ratio tight)
+    import jax
+
+    from .bench_offline import _interleaved_ratio
+    from .common import record_samples
+
     cs_fused = compile_script(parse(SQL), tables=tables,
                               fused_unit_fold=True)
-    us_off = timeit(lambda: cs.offline(tables), warmup=1,
-                    iters=max(2, iters // 2))
-    us_off_f = timeit(lambda: cs_fused.offline(tables), warmup=1,
-                      iters=max(2, iters // 2))
+    jax.block_until_ready(cs.offline(tables))
+    jax.block_until_ready(cs_fused.offline(tables))
+    us_off, us_off_f, s_stg, s_fus = _interleaved_ratio(
+        lambda: jax.block_until_ready(cs.offline(tables)),
+        lambda: jax.block_until_ready(cs_fused.offline(tables)),
+        reps=max(3, iters // 2))
+    record_samples("offline_staged_us", s_stg)
+    record_samples("offline_fused_us", s_fus)
     emit("unit_fold_offline_staged_us", us_off, "")
     emit("unit_fold_offline_fused_us", us_off_f,
          f"speedup={us_off / us_off_f:.2f}x")
@@ -114,12 +125,6 @@ def main(quick: bool = False, tiny: bool = False):
 
 
 if __name__ == "__main__":
-    import argparse
+    from .common import bench_main
 
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--quick", action="store_true")
-    ap.add_argument("--tiny", action="store_true",
-                    help="CI smoke sizes (seconds, not minutes)")
-    args = ap.parse_args()
-    print("name,us_per_call,derived")
-    main(quick=args.quick, tiny=args.tiny)
+    bench_main("unit_fold", main)

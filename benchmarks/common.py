@@ -1,20 +1,45 @@
-"""Benchmark utilities: timing + CSV emission.
+"""Benchmark utilities: timing, CSV emission, JSON artifacts.
 
 Every benchmark prints ``name,us_per_call,derived`` rows (harness
 contract).  ``derived`` carries the figure-specific metric (speedup,
 reduction %, tuples/sec, ...).
+
+With ``--json`` (or ``BENCH_JSON=1``) the run additionally writes
+``BENCH_<name>.json`` in the current directory: the parsed config, the
+emitted rows, every ``timeit`` call's raw per-iteration samples, and
+the per-row medians — the machine-readable form of the CSV stream, so
+CI and docs can diff numbers without scraping stdout.
+
+``bench_main(name, main)`` is the shared entry driver: uniform
+``--quick`` / ``--tiny`` / ``--json`` parsing, CSV header, JSON
+artifact, exit-code passthrough.
 """
 
 from __future__ import annotations
 
+import inspect
+import json
+import sys
 import time
-from typing import Callable, Optional
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
+# run-wide collector (one benchmark process == one artifact)
+_rows: List[Dict[str, object]] = []
+_samples: Dict[str, List[float]] = {}
+_config: Dict[str, object] = {}
 
-def timeit(fn: Callable, *, warmup: int = 1, iters: int = 5) -> float:
-    """Median wall-clock microseconds per call."""
+
+def set_config(**kw) -> None:
+    """Record run parameters (sizes, flags) into the JSON artifact."""
+    _config.update(kw)
+
+
+def timeit(fn: Callable, *, warmup: int = 1, iters: int = 5,
+           label: Optional[str] = None) -> float:
+    """Median wall-clock microseconds per call.  Raw per-iteration
+    samples land in the JSON artifact under ``label`` (or an ordinal)."""
     for _ in range(warmup):
         fn()
     times = []
@@ -22,8 +47,58 @@ def timeit(fn: Callable, *, warmup: int = 1, iters: int = 5) -> float:
         t0 = time.perf_counter()
         fn()
         times.append((time.perf_counter() - t0) * 1e6)
+    _samples[label or f"timeit_{len(_samples)}"] = [float(t) for t in times]
     return float(np.median(times))
+
+
+def record_samples(label: str, samples) -> None:
+    """Store raw measurement samples (us) into the JSON artifact under
+    ``label`` — for measurements not taken through ``timeit`` (e.g.
+    interleaved A/B pairs)."""
+    _samples[label] = [float(s) for s in samples]
 
 
 def emit(name: str, us_per_call: float, derived: str = ""):
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+    _rows.append({"name": name, "us_per_call": float(us_per_call),
+                  "derived": derived})
+
+
+def write_json(bench_name: str, path: Optional[str] = None) -> str:
+    """Write ``BENCH_<bench_name>.json`` (cwd unless ``path``)."""
+    payload = {
+        "bench": bench_name,
+        "config": _config,
+        "rows": _rows,
+        "medians": {r["name"]: r["us_per_call"] for r in _rows},
+        "samples": _samples,
+    }
+    path = path or f"BENCH_{bench_name}.json"
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def bench_main(name: str, main: Callable, argv: Optional[List[str]] = None
+               ) -> None:
+    """Shared benchmark entry: parse --quick/--tiny/--json, print the
+    CSV header, run ``main`` with whatever subset of (quick, tiny) it
+    accepts, write the JSON artifact when asked, exit with its code."""
+    import argparse
+
+    ap = argparse.ArgumentParser(prog=f"bench_{name}")
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke sizes (seconds, not minutes)")
+    ap.add_argument("--json", action="store_true",
+                    help=f"also write BENCH_{name}.json")
+    args = ap.parse_args(argv)
+    set_config(quick=args.quick, tiny=args.tiny)
+    accepted = set(inspect.signature(main).parameters)
+    kw = {k: getattr(args, k) for k in ("quick", "tiny") if k in accepted}
+    print("name,us_per_call,derived")
+    rc = main(**kw)
+    if args.json or __import__("os").environ.get("BENCH_JSON"):
+        write_json(name)
+    sys.exit(rc)

@@ -54,7 +54,7 @@ import numpy as np
 from ...storage import timestore
 from .. import skew
 
-from . import joins, scalars
+from . import joins, scalars, windows
 from .cache import cached
 from .windows import (GroupLowering, LoweredWindow, fold_impl, fold_unit,
                       fold_units, gather_edges, gather_unit,
@@ -148,10 +148,14 @@ def _join_scalar_fn(cs):
 def _group_feats(members: List[LoweredWindow], dev, impl=None
                  ) -> List[Dict[str, jnp.ndarray]]:
     """Finalized features per unit block of one group (leaf folds shared
-    across member windows inside ``fold_units``)."""
+    across member windows inside ``fold_units``; under a fused impl the
+    flat lane lifts are built once here and shared by every block)."""
+    prelift = (windows.fused_prelift(members, dev)
+               if impl is not None else None)
     out = []
     for blk in dev["blocks"]:
-        per_member = fold_units(members, dict(dev, **blk), impl=impl)
+        per_member = fold_units(members, dict(dev, **blk), impl=impl,
+                                prelift=prelift)
         feats: Dict[str, jnp.ndarray] = {}
         for m, folded in zip(members, per_member):
             for name, agg in zip(m.feature_names, m.aggs):
@@ -673,13 +677,21 @@ def online_batch_fast(cs, store, keys, ts, values, use_pallas=None,
     if not ok:
         raise ValueError(f"script not eligible for fused path: {why}")
     from ...kernels import dispatch
-    use_pallas, interpret = dispatch.resolve(use_pallas, interpret)
+    use_pallas, interpret = dispatch.resolve(use_pallas, interpret,
+                                             flag="unit_fold_pallas")
     keys, tsa, vals_np, b = pad_batch(keys, ts, values)
+    # keys/ts/values are fresh per-call device buffers the caller never
+    # reads back — donating them lets XLA alias the (B, R) gather
+    # scratch onto them instead of allocating per request batch.  The
+    # store tables (arg 0) stay undonated: they live across calls.
+    # (The CPU runtime can't alias these buffers and would warn, so
+    # donation turns on only where the runtime honors it.)
+    donate = () if dispatch._platform() == "cpu" else (1, 2, 3)
     fn = store_fn(
         cs, store, "online_fast", (keys.shape[0], use_pallas, interpret),
         lambda: jax.jit(functools.partial(
             online_fast_fn, cs, use_pallas=use_pallas,
-            interpret=interpret)))
+            interpret=interpret), donate_argnums=donate))
     vals = {k: jnp.asarray(v) for k, v in vals_np.items()}
     out = fn(store.tables, jnp.asarray(keys), jnp.asarray(tsa), vals)
     return {k: np.asarray(v)[:b] for k, v in out.items()}
@@ -763,8 +775,9 @@ def online_fast_fn(cs, states, keys, ts, values, use_pallas=False,
         from ...kernels.unit_fold import ops as unit_fold_ops
         fused = unit_fold_ops.unit_fold(
             [m.node.spec for m in members], group_leaves, env,
-            p[:, None], order_by=spec0.order_by, use_pallas=use_pallas,
-            interpret=interpret)
+            p[:, None], order_by=spec0.order_by,
+            member_keys=[tuple(unique_leaves(m.aggs)) for m in members],
+            use_pallas=use_pallas, interpret=interpret)
         for m, f in zip(members, fused):
             folded = {k: f[k][:, 0] for k in unique_leaves(m.aggs)}
             for name, agg in zip(m.feature_names, m.aggs):

@@ -416,8 +416,51 @@ def _fold_unit_fused(members: Sequence[LoweredWindow],
     use_pallas, interpret = (impl[1], impl[2]) if batched else (False, True)
     fused = unit_fold_ops.unit_fold(
         [m.node.spec for m in members], _group_leaf_set(members), env,
-        queries, order_by=spec0.order_by, use_pallas=use_pallas,
-        interpret=interpret)
+        queries, order_by=spec0.order_by,
+        member_keys=[tuple(unique_leaves(m.aggs)) for m in members],
+        use_pallas=use_pallas, interpret=interpret)
+    return [{k: fused[mi][k] for k in unique_leaves(m.aggs)}
+            for mi, m in enumerate(members)]
+
+
+def fused_prelift(members: Sequence[LoweredWindow], dev: Dict[str, Any]
+                  ) -> Tuple:
+    """Lift a group lowering's FLAT pad-appended columns into the fused
+    op's lane layout, once for ALL of the group's unit blocks: the plan
+    (cached), the per-group identity vectors, and each leaf group's
+    (n_flat, F) lane data.  The flat ``__valid__`` is derived from the
+    sentinel invariant (valid == idx < n_flat; the one pad row is
+    last).  Feed the result to every ``fold_units`` call of the group
+    (``drivers._group_feats``) so multi-block groups lift once."""
+    from ...kernels.unit_fold import ops as unit_fold_ops
+    spec0 = members[0].node.spec
+    n = dev["ts"].shape[0]
+    flat_env: Dict[str, Any] = dict(dev["cols"])
+    flat_env[spec0.order_by] = dev["ts"]
+    flat_env["__valid__"] = jnp.arange(n, dtype=jnp.int32) < n - 1
+    return unit_fold_ops.prelift_blocks(
+        [m.node.spec for m in members], _group_leaf_set(members),
+        flat_env, order_by=spec0.order_by,
+        member_keys=[tuple(unique_leaves(m.aggs)) for m in members])
+
+
+def _fold_units_fused(members: Sequence[LoweredWindow],
+                      dev: Dict[str, Any], impl, prelift=None
+                      ) -> List[Dict[str, jnp.ndarray]]:
+    """Offline block fold through the relayout-free fused entry: the
+    flat pad-appended columns and the (U, R) gather index go straight to
+    ``kernels.unit_fold.unit_fold_blocks`` — lane blocks are built by
+    one lift over the flat rows (shared across blocks via ``prelift``)
+    + one gather per leaf group, in the layout the kernel consumes (no
+    per-call reshape/concat)."""
+    from ...kernels.unit_fold import ops as unit_fold_ops
+    spec0 = members[0].node.spec
+    if prelift is None:
+        prelift = fused_prelift(members, dev)
+    fused = unit_fold_ops.unit_fold_blocks(
+        [m.node.spec for m in members], _group_leaf_set(members),
+        {}, dev["idx"], order_by=spec0.order_by,
+        use_pallas=impl[1], interpret=impl[2], prelift=prelift)
     return [{k: fused[mi][k] for k in unique_leaves(m.aggs)}
             for mi, m in enumerate(members)]
 
@@ -463,23 +506,24 @@ def fold_unit(members: Sequence[LoweredWindow], env: Dict[str, Any],
 
 
 def fold_units(members: Sequence[LoweredWindow], dev: Dict[str, Any],
-               impl=None) -> List[Dict[str, jnp.ndarray]]:
+               impl=None, prelift=None) -> List[Dict[str, jnp.ndarray]]:
     """Offline execution of the unit core over one (U, R) block.
 
     The gather through ``idx`` IS the §6.2 halo expansion: a hot key's
     later time slices pull their window context rows into the unit
     in-trace.  The fold itself is ``fold_unit`` vmapped over the units
     — no offline-only fold algebra exists.  With a fused ``impl`` the
-    whole block goes to ``kernels.unit_fold`` in one batched dispatch
-    (the Pallas grid folds unit x leaf-group tiles when enabled).
+    block takes the relayout-free route: flat columns + gather index go
+    to ``kernels.unit_fold.unit_fold_blocks`` in one batched dispatch
+    (the Pallas grid folds lane tiles of units when enabled).
     """
+    if impl is not None:
+        return _fold_units_fused(members, dev, impl, prelift=prelift)
     spec0 = members[0].node.spec
     idx = dev["idx"]
     env = {c: jnp.take(v, idx, axis=0) for c, v in dev["cols"].items()}
     env["__valid__"] = dev["valid"]
     env[spec0.order_by] = jnp.take(dev["ts"], idx)       # (U, R)
-    if impl is not None:
-        return _fold_unit_fused(members, env, None, impl, batched=True)
     return jax.vmap(lambda e: fold_unit(members, e))(env)
 
 

@@ -1,21 +1,28 @@
 """Pallas TPU kernel: one window group's ENTIRE unit fold per dispatch.
 
-Grid (units, leaf groups); TPU grids run sequentially with the group
-dimension innermost, so for each unit the kernel
+Lane-tiled grid ``(unit tiles, leaf groups)``: each step folds a tile of
+``LANES`` units at once.  TPU grids run sequentially with the group
+dimension innermost, so for each tile the kernel
 
   1. computes every member window's [start, end) frame bounds ONCE
      (ROWS arithmetic + the batched ``first_geq`` binary search for
-     RANGE members) into int32 VMEM scratch that persists across the
-     group steps — the ``unit_bounds`` stage, fused;
-  2. per leaf group, builds the fold structure in VMEM scratch (packed
+     RANGE members) into (LANES, M, Q) int32 VMEM scratch that persists
+     across the group steps — the ``unit_bounds`` stage, fused and
+     shared by every leaf group in the tile;
+  2. per leaf group, builds the fold structure as VALUES (packed
      balanced-tree levels for scan/tree groups, sparse-table levels for
-     idempotent groups) and answers every (member, query) fold from it
-     — the build + query stages, fused.
+     idempotent groups, vmapped over the lane axis) and answers the
+     (member, query) folds for exactly the members that use the group
+     (``LeafGroup.members_ix``) — the build + query stages, fused.
 
-The carry-in-scratch / accumulate-across-sequential-grid idiom follows
-the in-tree ``chunked_scan`` and ``segagg`` kernels; the scan stage,
-however, canNOT reuse chunked_scan's Hillis–Steele recurrence: bitwise
-parity with the staged engine requires reproducing
+Tiling the units this way stops small-group plans from serializing the
+grid: a plan with G leaf groups over U units runs ceil(U/LANES)*G steps
+instead of U*G, and every step's compute is (LANES, ...)-vectorized.
+Tiles are value-complete — structure builds never write scratch, so the
+whole per-unit fold vmaps over the lane axis without cross-lane state.
+
+The scan stage canNOT use a Hillis–Steele recurrence: bitwise parity
+with the staged engine requires reproducing
 ``jax.lax.associative_scan``'s exact bracketing.  The kernel exploits
 the identity (verified in tests/test_kernels.py) that scan prefix
 ``[0, e)`` equals the MSB-first left fold of the position-aligned
@@ -24,14 +31,18 @@ levels — so it builds the same tree levels a segment tree needs and
 walks the decomposition per query, bit-for-bit equal to the scan.
 
 Inputs are padded to a power-of-two row count with identity rows
-(values) and INT_MAX sentinels (timestamps); every padded structure
-provably yields the staged values on real queries:
+(values) and INT_MAX sentinels (timestamps), and the unit axis to a
+multiple of ``LANES`` with all-sentinel units (sliced off on return);
+every padded structure provably yields the staged values on real
+queries:
 
 * scan: decomposition blocks of ``[0, e)``, e <= R, never touch pads;
 * sparse: identity rows are absorbed lane-wise (min/max/HLL combines);
 * tree: the staged ``tree_levels`` pads to the same power of two with
   the same identity rows — the levels are literally identical;
-* bounds: the extra binary-search steps on converged rows are no-ops.
+* bounds: the extra binary-search steps on converged rows are no-ops;
+* lane pads: a whole-unit pad computes garbage bounds over INT_MAX
+  timestamps, folds identity data, and is dropped before returning.
 
 Query math (clamps, identity-seeded walk order, empty-range masking)
 replicates ``core.window`` line for line — see each helper's note.
@@ -41,7 +52,7 @@ from __future__ import annotations
 
 import functools
 import math
-from typing import Any, List, Sequence
+from typing import Any, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -52,15 +63,20 @@ from .ref import UnitFoldPlan
 
 INT_MAX = 2**31 - 1
 
+# units folded per grid step; edge shapes (U = 1, LANES +/- 1, ...) are
+# padded up and gated bitwise in tests/test_kernels.py
+LANES = 8
+
 
 # ---------------------------------------------------------------------------
-# In-kernel stages (all shapes static; queries are (M, Q) int32)
+# In-kernel stages (all shapes static; one unit each — vmapped over the
+# lane axis by the kernel body; queries are (M, Q) int32)
 # ---------------------------------------------------------------------------
 
 
 def _bounds(specs: Sequence[Any], ts: jnp.ndarray, q: jnp.ndarray,
             r_real: int, rp: int):
-    """Frame bounds for every member — ``ref.unit_bounds_all`` with the
+    """Frame bounds for every member — ``ref.unit_bounds_each`` with the
     ``first_geq`` binary search unrolled in-kernel.  The search runs
     ceil(log2(rp))+1 steps over the padded array; rows converge within
     the staged step count and extra iterations leave (lo, hi) fixed, so
@@ -101,27 +117,28 @@ def _bounds(specs: Sequence[Any], ts: jnp.ndarray, q: jnp.ndarray,
             jnp.stack(ends).astype(jnp.int32))
 
 
-def _pack_levels(proxy, data: jnp.ndarray, lvl_ref, rp: int) -> List[int]:
+def _pack_levels(proxy, data: jnp.ndarray, rp: int
+                 ) -> Tuple[jnp.ndarray, List[int]]:
     """Balanced-tree levels (pair combines, identical to ``tree_levels``
-    over the identity-padded rows) packed into one (2*rp, F) scratch;
-    returns each level's row offset."""
-    offs: List[int] = []
-    off = 0
+    over the identity-padded rows) packed into one (2*rp-1, F) value;
+    returns the pack and each level's row offset."""
+    levels = [data]
     cur = data
     n = rp
-    while True:
-        offs.append(off)
-        lvl_ref[off:off + n] = cur
-        off += n
-        if n == 1:
-            break
+    while n > 1:
         cur = proxy.combine(cur[0::2], cur[1::2])
+        levels.append(cur)
         n //= 2
-    return offs
+    offs: List[int] = []
+    off = 0
+    for lv in levels:
+        offs.append(off)
+        off += lv.shape[0]
+    return jnp.concatenate(levels, axis=0), offs
 
 
 def _gather_nodes(lvl: jnp.ndarray, idx: jnp.ndarray, f: int):
-    """(M, Q) row gather out of packed (rows, F) scratch."""
+    """(M, Q) row gather out of packed (rows, F) levels."""
     m, q = idx.shape
     return jnp.take(lvl, idx.reshape(-1), axis=0).reshape(m, q, f)
 
@@ -146,13 +163,12 @@ def _prefix_at(proxy, lvl: jnp.ndarray, offs: List[int], e: jnp.ndarray,
     return acc
 
 
-def _scan_group(grp, data, identv, lvl_ref, starts, ends, rp: int):
+def _scan_group(grp, data, identv, starts, ends, rp: int):
     """Invertible stage: tree build + two prefix walks + prefix diff —
     the in-kernel ``prefix_window_fold`` (same identity substitution at
     segment start, same empty-range masking)."""
     f = data.shape[-1]
-    offs = _pack_levels(grp.proxy, data, lvl_ref, rp)
-    lvl = lvl_ref[...]
+    lvl, offs = _pack_levels(grp.proxy, data, rp)
     ident = jnp.broadcast_to(identv, starts.shape + (f,))
     last = _prefix_at(grp.proxy, lvl, offs, jnp.maximum(ends, 1), rp, f)
     prev = _prefix_at(grp.proxy, lvl, offs, jnp.maximum(starts, 1), rp, f)
@@ -161,21 +177,21 @@ def _scan_group(grp, data, identv, lvl_ref, starts, ends, rp: int):
     return jnp.where((ends <= starts)[..., None], ident, folded)
 
 
-def _sparse_group(grp, data, identv, lvl_ref, starts, ends, rp: int):
+def _sparse_group(grp, data, identv, starts, ends, rp: int):
     """Idempotent stage: ``sparse_levels`` build (concat-shift combine
     per level) + ``sparse_query`` 2-lookup math, replicated exactly."""
     proxy = grp.proxy
     f = data.shape[-1]
+    levels = [data]
     cur = data
-    lvl_ref[0] = cur
     j = 1
     while (1 << j) <= rp:
         off = 1 << (j - 1)
         pad = jnp.broadcast_to(identv, (off, f))
         cur = proxy.combine(cur, jnp.concatenate([cur[off:], pad], axis=0))
-        lvl_ref[j] = cur
+        levels.append(cur)
         j += 1
-    table = lvl_ref[...].reshape(-1, f)        # (L*rp, F)
+    table = jnp.concatenate(levels, axis=0)    # (L*rp, F)
     span = jnp.maximum(ends - starts, 1).astype(jnp.int32)
     jlev = 31 - jax.lax.clz(span)
     lo = jnp.clip(starts, 0, rp - 1)
@@ -187,14 +203,13 @@ def _sparse_group(grp, data, identv, lvl_ref, starts, ends, rp: int):
     return jnp.where(empty, jnp.broadcast_to(identv, out.shape), out)
 
 
-def _tree_group(grp, data, identv, lvl_ref, starts, ends, rp: int):
+def _tree_group(grp, data, identv, starts, ends, rp: int):
     """Order-sensitive stage: the bidirectional ``tree_query`` walk
     (left accumulator grows rightward, right leftward, root included),
     replicated clamp-for-clamp over the packed levels."""
     proxy = grp.proxy
     f = data.shape[-1]
-    offs = _pack_levels(proxy, data, lvl_ref, rp)
-    lvl = lvl_ref[...]
+    lvl, offs = _pack_levels(proxy, data, rp)
     ident = jnp.broadcast_to(identv, starts.shape + (f,))
     res_l = ident
     res_r = ident
@@ -223,38 +238,41 @@ def _tree_group(grp, data, identv, lvl_ref, starts, ends, rp: int):
 
 
 def _unit_fold_kernel(ts_ref, q_ref, *refs, plan: UnitFoldPlan,
-                      r_real: int, rp: int):
+                      r_real: int, rp: int, lanes: int):
     g = pl.program_id(1)
     n_groups = len(plan.groups)
     data_refs = refs[:n_groups]
     ident_refs = refs[n_groups:2 * n_groups]
     out_refs = refs[2 * n_groups:3 * n_groups]
     st_ref, en_ref = refs[3 * n_groups], refs[3 * n_groups + 1]
-    lvl_refs = refs[3 * n_groups + 2:]
 
     @pl.when(g == 0)
     def _do_bounds():
-        starts, ends = _bounds(plan.specs, ts_ref[0], q_ref[0], r_real, rp)
-        st_ref[...] = starts
+        starts, ends = jax.vmap(
+            lambda t, q: _bounds(plan.specs, t, q, r_real, rp)
+        )(ts_ref[...], q_ref[...])
+        st_ref[...] = starts                   # (lanes, M, Q)
         en_ref[...] = ends
 
+    n_members = len(plan.specs)
     for gi, grp in enumerate(plan.groups):
         @pl.when(g == gi)
         def _do_group(gi=gi, grp=grp):
-            data = data_refs[gi][0]            # (rp, F)
+            ix = grp.members_ix or tuple(range(n_members))
+            st = st_ref[...]
+            en = en_ref[...]
+            starts = jnp.stack([st[:, i] for i in ix], axis=1)
+            ends = jnp.stack([en[:, i] for i in ix], axis=1)
             identv = ident_refs[gi][0]         # (F,)
-            starts = st_ref[...]
-            ends = en_ref[...]
             if grp.kind == "scan":
-                folded = _scan_group(grp, data, identv, lvl_refs[gi],
-                                     starts, ends, rp)
+                fold = _scan_group
             elif grp.kind == "sparse":
-                folded = _sparse_group(grp, data, identv, lvl_refs[gi],
-                                       starts, ends, rp)
+                fold = _sparse_group
             else:
-                folded = _tree_group(grp, data, identv, lvl_refs[gi],
-                                     starts, ends, rp)
-            out_refs[gi][0] = folded
+                fold = _tree_group
+            out_refs[gi][...] = jax.vmap(
+                lambda d, s, e: fold(grp, d, identv, s, e, rp)
+            )(data_refs[gi][...], starts, ends)
 
 
 def unit_fold_pallas(plan: UnitFoldPlan, data_list: List[jnp.ndarray],
@@ -265,41 +283,51 @@ def unit_fold_pallas(plan: UnitFoldPlan, data_list: List[jnp.ndarray],
     (U, rp, F_g) lane block, ``ident_list[g]`` its (1, F_g) identity
     lane vector (a kernel input — Pallas kernels cannot capture array
     constants), ``ts`` the (U, rp) sentinel-padded order column,
-    ``queries`` the (U, Q) unit positions.  Returns one (U, M, Q, F_g)
-    fold block per group.
+    ``queries`` the (U, Q) unit positions.  Returns one (U, Mg, Q, F_g)
+    fold block per group, rows in ``members_ix`` order.
 
-    VMEM per step: the group's lane block + its structure scratch
-    (2*rp*F packed tree rows, or log2(rp)+1 sparse levels) + the (M, Q)
-    bounds — bounded by the largest single group, not the group sum.
+    VMEM per step: one lane tile of the group's blocks + its value-form
+    structure levels + the (LANES, M, Q) bounds — bounded by the largest
+    single group times the tile width, not the group sum.
     """
     u, rp = ts.shape
     nq = queries.shape[1]
     m = len(plan.specs)
+    lanes = min(LANES, max(1, u))
+    u_pad = -(-u // lanes) * lanes
+    if u_pad > u:
+        extra = u_pad - u
+        ts = jnp.concatenate(
+            [ts, jnp.full((extra, rp), INT_MAX, ts.dtype)], axis=0)
+        queries = jnp.concatenate(
+            [queries, jnp.zeros((extra, nq), queries.dtype)], axis=0)
+        data_list = [
+            jnp.concatenate(
+                [d, jnp.broadcast_to(iv[0], (extra,) + d.shape[1:])],
+                axis=0)
+            for d, iv in zip(data_list, ident_list)]
     widths = [int(d.shape[-1]) for d in data_list]
-    grid = (u, len(plan.groups))
+    mg_list = [len(grp.members_ix or range(m)) for grp in plan.groups]
+    grid = (u_pad // lanes, len(plan.groups))
 
-    in_specs = [pl.BlockSpec((1, rp), lambda i, g: (i, 0)),
-                pl.BlockSpec((1, nq), lambda i, g: (i, 0))]
+    in_specs = [pl.BlockSpec((lanes, rp), lambda i, g: (i, 0)),
+                pl.BlockSpec((lanes, nq), lambda i, g: (i, 0))]
     for w in widths:
-        in_specs.append(pl.BlockSpec((1, rp, w), lambda i, g: (i, 0, 0)))
+        in_specs.append(
+            pl.BlockSpec((lanes, rp, w), lambda i, g: (i, 0, 0)))
     for w in widths:
         in_specs.append(pl.BlockSpec((1, w), lambda i, g: (0, 0)))
-    out_specs = [pl.BlockSpec((1, m, nq, w), lambda i, g: (i, 0, 0, 0))
-                 for w in widths]
-    out_shape = [jax.ShapeDtypeStruct((u, m, nq, w), jnp.float32)
-                 for w in widths]
-    scratch = [pltpu.VMEM((m, nq), jnp.int32),
-               pltpu.VMEM((m, nq), jnp.int32)]
-    for grp, w in zip(plan.groups, widths):
-        if grp.kind == "sparse":
-            scratch.append(pltpu.VMEM((rp.bit_length(), rp, w),
-                                      jnp.float32))
-        else:
-            scratch.append(pltpu.VMEM((2 * rp, w), jnp.float32))
+    out_specs = [
+        pl.BlockSpec((lanes, mg, nq, w), lambda i, g: (i, 0, 0, 0))
+        for mg, w in zip(mg_list, widths)]
+    out_shape = [jax.ShapeDtypeStruct((u_pad, mg, nq, w), jnp.float32)
+                 for mg, w in zip(mg_list, widths)]
+    scratch = [pltpu.VMEM((lanes, m, nq), jnp.int32),
+               pltpu.VMEM((lanes, m, nq), jnp.int32)]
 
     outs = pl.pallas_call(
         functools.partial(_unit_fold_kernel, plan=plan, r_real=r_real,
-                          rp=rp),
+                          rp=rp, lanes=lanes),
         grid=grid,
         in_specs=in_specs,
         out_specs=out_specs,
@@ -307,4 +335,7 @@ def unit_fold_pallas(plan: UnitFoldPlan, data_list: List[jnp.ndarray],
         scratch_shapes=scratch,
         interpret=interpret,
     )(ts, queries, *data_list, *ident_list)
-    return list(outs) if isinstance(outs, (list, tuple)) else [outs]
+    outs = list(outs) if isinstance(outs, (list, tuple)) else [outs]
+    if u_pad > u:
+        outs = [o[:u] for o in outs]
+    return outs

@@ -44,8 +44,9 @@ from ...core import window as W
 from ...core.functions import AddLeaf, HLLLeaf, Leaf, MaxLeaf, MinLeaf
 
 __all__ = ["LeafGroup", "UnitFoldPlan", "build_plan", "lift_group",
-           "group_identity", "unit_bounds_all", "unit_fold_ref",
-           "unstack_group", "INT_MAX"]
+           "group_identity", "unit_bounds_all", "unit_bounds_each",
+           "unit_fold_ref", "unit_fold_ref_data", "unstack_group",
+           "INT_MAX"]
 
 INT_MAX = 2**31 - 1
 
@@ -79,6 +80,8 @@ class LeafGroup:
     sizes: Tuple[int, ...]               # flat lane width per leaf
     proxy: Any                           # combine/identity/invert driver
     stacked: bool                        # lanes flattened (R, F) vs (R, *S)
+    members_ix: Tuple[int, ...] = ()     # member rows querying this group
+    lane_proxies: Tuple[Any, ...] = ()   # per-leaf proxy over its lanes
 
     @property
     def width(self) -> int:
@@ -94,6 +97,8 @@ class UnitFoldPlan:
     specs: Tuple[Any, ...]               # member WindowSpecs
     order_by: str
     groups: Tuple[LeafGroup, ...]
+    # per-member needed leaf keys (None = every member, every leaf)
+    member_need: Optional[Tuple[frozenset, ...]] = None
 
 
 def _flat(leaf: Leaf) -> int:
@@ -103,22 +108,32 @@ def _flat(leaf: Leaf) -> int:
     return n
 
 
+def _leaf_ident_vec(leaf: Leaf) -> jnp.ndarray:
+    if leaf.shape:
+        return jnp.broadcast_to(jnp.asarray(leaf.identity(), jnp.float32),
+                                leaf.shape).reshape(-1)
+    return jnp.asarray(leaf.identity(), jnp.float32).reshape(1)
+
+
 def _stack_group(kind: str, items, combine, invert=None) -> LeafGroup:
     keys = tuple(k for k, _ in items)
     leaves = tuple(l for _, l in items)
     sizes = tuple(_flat(l) for l in leaves)
-    ident = jnp.concatenate(
-        [jnp.broadcast_to(jnp.asarray(l.identity(), jnp.float32),
-                          l.shape).reshape(-1) if l.shape
-         else jnp.asarray(l.identity(), jnp.float32).reshape(1)
-         for l in leaves])
+    ident_vecs = [_leaf_ident_vec(l) for l in leaves]
+    ident = jnp.concatenate(ident_vecs)
+    # per-leaf proxies over each leaf's own lane slice: the query stage
+    # answers (member, leaf) pairs individually against the shared build
+    lane_proxies = tuple(_StackLeaf(combine, iv, invert)
+                         for iv in ident_vecs)
     return LeafGroup(kind=kind, keys=keys, leaves=leaves, sizes=sizes,
                      proxy=_StackLeaf(combine, ident, invert),
-                     stacked=True)
+                     stacked=True, lane_proxies=lane_proxies)
 
 
 def build_plan(specs: Sequence[Any], leaves: Dict[str, Leaf],
-               order_by: str) -> UnitFoldPlan:
+               order_by: str,
+               member_keys: Optional[Sequence[Sequence[str]]] = None
+               ) -> UnitFoldPlan:
     """Partition the group's deduplicated leaves into fold structures.
 
     Exact-type checks (not isinstance) gate the stacks: stacking is only
@@ -126,6 +141,13 @@ def build_plan(specs: Sequence[Any], leaves: Dict[str, Leaf],
     these classes define; any other leaf gets its own structure chosen
     by the same invertible/idempotent classification the staged
     ``unit_leaf_build`` uses.
+
+    ``member_keys`` (one leaf-key collection per member window) masks
+    the query stage: each leaf group records which members use any of
+    its lanes (``members_ix``) and is queried ONLY at those members'
+    bounds — matching the staged core, where builds are shared but each
+    member pays just its own queries.  ``None`` queries every group for
+    every member (the full-leaf-set contract).
     """
     add, mn, mx, solo = [], [], [], []
     for k, leaf in leaves.items():
@@ -137,23 +159,38 @@ def build_plan(specs: Sequence[Any], leaves: Dict[str, Leaf],
             mx.append((k, leaf))
         else:
             solo.append((k, leaf))
+    all_members = tuple(range(len(specs)))
+
+    def members_for(keys: Tuple[str, ...]) -> Tuple[int, ...]:
+        if member_keys is None:
+            return all_members
+        need = set(keys)
+        return tuple(mi for mi, ks in enumerate(member_keys)
+                     if need.intersection(ks)) or all_members
+
     groups: List[LeafGroup] = []
     if add:
-        groups.append(_stack_group(
+        g = _stack_group(
             "scan", add, combine=lambda a, b: a + b,
-            invert=lambda p_end, p_start: p_end - p_start))
+            invert=lambda p_end, p_start: p_end - p_start)
+        groups.append(dataclasses.replace(g, members_ix=members_for(g.keys)))
     if mn:
-        groups.append(_stack_group("sparse", mn, combine=jnp.minimum))
+        g = _stack_group("sparse", mn, combine=jnp.minimum)
+        groups.append(dataclasses.replace(g, members_ix=members_for(g.keys)))
     if mx:
-        groups.append(_stack_group("sparse", mx, combine=jnp.maximum))
+        g = _stack_group("sparse", mx, combine=jnp.maximum)
+        groups.append(dataclasses.replace(g, members_ix=members_for(g.keys)))
     for k, leaf in solo:
         kind = ("scan" if leaf.invertible
                 else "sparse" if leaf.idempotent else "tree")
         groups.append(LeafGroup(kind=kind, keys=(k,), leaves=(leaf,),
                                 sizes=(_flat(leaf),), proxy=leaf,
-                                stacked=False))
+                                stacked=False, members_ix=members_for((k,)),
+                                lane_proxies=(leaf,)))
+    need = (None if member_keys is None
+            else tuple(frozenset(ks) for ks in member_keys))
     return UnitFoldPlan(specs=tuple(specs), order_by=order_by,
-                        groups=tuple(groups))
+                        groups=tuple(groups), member_need=need)
 
 
 def group_identity(group: LeafGroup) -> jnp.ndarray:
@@ -181,14 +218,17 @@ def lift_group(group: LeafGroup, env: Dict[str, Any]) -> jnp.ndarray:
     return jnp.concatenate(mats, axis=1)
 
 
-def unit_bounds_all(specs: Sequence[Any], ts_unit: jnp.ndarray,
-                    queries: jnp.ndarray, r: int
-                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """(M, Q) [start, end) frame bounds for every member at once.
+def unit_bounds_each(specs: Sequence[Any], ts_unit: jnp.ndarray,
+                     queries: jnp.ndarray, r: int
+                     ) -> Tuple[List[jnp.ndarray], List[jnp.ndarray]]:
+    """Per-member (Q,) [start, end) frame bounds.
 
     Replicates ``lowering.windows.unit_bounds`` member by member —
     identical integer results — but batches every RANGE member's binary
     search into ONE ``first_geq`` call over (M_range, Q) targets.
+    Members stay SEPARATE arrays so a ROWS member's purely query-derived
+    bounds remain constant-foldable instead of being entangled with its
+    RANGE siblings' data-dependent rows.
     """
     end0 = queries + 1
     range_ix = [i for i, s in enumerate(specs) if not s.frame_rows]
@@ -215,24 +255,36 @@ def unit_bounds_all(specs: Sequence[Any], ts_unit: jnp.ndarray,
         if spec.instance_not_in_window:
             end = jnp.minimum(end, queries)
             start = jnp.minimum(start, end)
-        starts.append(jnp.broadcast_to(start, queries.shape))
-        ends.append(jnp.broadcast_to(end, queries.shape))
-    return jnp.stack(starts).astype(jnp.int32), \
-        jnp.stack(ends).astype(jnp.int32)
+        starts.append(jnp.broadcast_to(start, queries.shape)
+                      .astype(jnp.int32))
+        ends.append(jnp.broadcast_to(end, queries.shape)
+                    .astype(jnp.int32))
+    return starts, ends
+
+
+def unit_bounds_all(specs: Sequence[Any], ts_unit: jnp.ndarray,
+                    queries: jnp.ndarray, r: int
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(M, Q) [start, end) frame bounds for every member at once."""
+    starts, ends = unit_bounds_each(specs, ts_unit, queries, r)
+    return jnp.stack(starts), jnp.stack(ends)
 
 
 def unstack_group(group: LeafGroup, folded: jnp.ndarray,
                   out: List[Dict[str, jnp.ndarray]]):
-    """Scatter one group's (M, Q, F) (or (M, Q, *S)) query results into
-    the per-member leaf dicts, un-flattening stacked lanes."""
-    for mi, member_out in enumerate(out):
+    """Scatter one group's (Mg, Q, F) (or (Mg, Q, *S)) query results
+    into the leaf dicts of the members that queried it
+    (``group.members_ix`` row order), un-flattening stacked lanes."""
+    members_ix = group.members_ix or tuple(range(len(out)))
+    for row, mi in enumerate(members_ix):
+        member_out = out[mi]
         if not group.stacked:
-            member_out[group.keys[0]] = folded[mi]
+            member_out[group.keys[0]] = folded[row]
             continue
         off = 0
         q = folded.shape[1]
         for key, leaf, size in zip(group.keys, group.leaves, group.sizes):
-            member_out[key] = folded[mi, :, off:off + size].reshape(
+            member_out[key] = folded[row, :, off:off + size].reshape(
                 (q,) + leaf.shape)
             off += size
 
@@ -245,25 +297,61 @@ def unit_fold_ref(plan: UnitFoldPlan, env: Dict[str, Any],
     group's full deduplicated leaf set.  Bitwise-equal to the staged
     ``fold_unit`` on every leaf/frame combination (tests/test_kernels).
     """
-    ts_unit = env[plan.order_by]
+    return unit_fold_ref_data(
+        plan, [lift_group(g, env) for g in plan.groups],
+        env[plan.order_by], queries)
+
+
+def unit_fold_ref_data(plan: UnitFoldPlan,
+                       data_list: Sequence[jnp.ndarray],
+                       ts_unit: jnp.ndarray, queries: jnp.ndarray
+                       ) -> List[Dict[str, jnp.ndarray]]:
+    """``unit_fold_ref`` over pre-built lane blocks — the relayout-free
+    entry.  ``data_list[g]`` is group g's already-lifted lane block
+    ((R, F) stacked / (R, *S) solo).  Because every ``Leaf.lift`` is
+    row-local with fill == identity, lifting flat pad-appended columns
+    once and gathering rows by unit index produces, bit for bit, the
+    same blocks as lifting each gathered unit env — the offline block
+    driver exploits exactly that (``lowering.windows.fold_units``)."""
     r = ts_unit.shape[0]
-    starts, ends = unit_bounds_all(plan.specs, ts_unit, queries, r)
+    starts_m, ends_m = unit_bounds_each(plan.specs, ts_unit, queries, r)
     out: List[Dict[str, jnp.ndarray]] = [{} for _ in plan.specs]
-    seg_start = jnp.zeros_like(starts)
-    for group in plan.groups:
-        data = lift_group(group, env)
+    need = plan.member_need
+    for group, data in zip(plan.groups, data_list):
+        ix = group.members_ix or tuple(range(len(plan.specs)))
+        # build ONCE (the whole stacked lane block shares one structure)
         if group.kind == "scan":
-            prefix = jax.lax.associative_scan(group.proxy.combine, data,
-                                              axis=0)
-            folded = W.prefix_window_fold(group.proxy, prefix, starts,
-                                          ends, seg_start)
+            built = jax.lax.associative_scan(group.proxy.combine, data,
+                                             axis=0)
         elif group.kind == "sparse":
-            table = W.sparse_levels(group.proxy, data)
-            folded = W.sparse_query(group.proxy, table, starts, ends)
+            built = W.sparse_levels(group.proxy, data)
         else:
-            levels = W.tree_levels(group.proxy, data)
-            flat = W.tree_query(group.proxy, levels, starts.reshape(-1),
-                                ends.reshape(-1))
-            folded = flat.reshape(starts.shape + flat.shape[1:])
-        unstack_group(group, folded, out)
+            built = W.tree_levels(group.proxy, data)
+        # query per (member, needed leaf) at that member's OWN (Q,)
+        # bounds: lane-sliced queries are bitwise the full-width ones
+        # (stacked combines are elementwise per lane), each member pays
+        # exactly the staged path's query count, and a ROWS member's
+        # purely query-derived bounds stay constant-foldable
+        for mi in ix:
+            starts, ends = starts_m[mi], ends_m[mi]
+            off = 0
+            for key, leaf, size, lane_proxy in zip(
+                    group.keys, group.leaves, group.sizes,
+                    group.lane_proxies or (group.proxy,)):
+                lo, off = off, off + size
+                if need is not None and key not in need[mi]:
+                    continue
+                if group.kind == "scan":
+                    sub = built[:, lo:off] if group.stacked else built
+                    folded = W.prefix_window_fold(
+                        lane_proxy, sub, starts, ends,
+                        jnp.zeros_like(starts))
+                elif group.kind == "sparse":
+                    sub = built[..., lo:off] if group.stacked else built
+                    folded = W.sparse_query(lane_proxy, sub, starts, ends)
+                else:
+                    folded = W.tree_query(lane_proxy, built, starts, ends)
+                if group.stacked:
+                    folded = folded.reshape(starts.shape + leaf.shape)
+                out[mi][key] = folded
     return out

@@ -429,13 +429,23 @@ class FeatureEngine:
         ts = [e[1] for e in enc]
         values = {c: [e[2][c] for e in enc]
                   for c in self._need[self.cs.script.base_table]}
-        driver = (self.cs.online_sharded_batch if self.sharded
-                  else self.cs.online_batch)
         store = self.store if snapshot is None else snapshot.store
         pre = (self.pre_states if snapshot is None
                else snapshot.pre_states)
-        feats = driver(store, keys, ts, values,
-                       preagg_states=pre if self.use_preagg else None)
+        if self.sharded:
+            feats = self.cs.online_sharded_batch(
+                store, keys, ts, values,
+                preagg_states=pre if self.use_preagg else None)
+        elif (not self.use_preagg
+              and getattr(self.cs.ctx, "fused_unit_fold", False)):
+            # fused scripts serve batches through the megakernel fast
+            # path (bitwise equal to online_batch; one unit_fold
+            # dispatch per window group, warm executable per pad class)
+            feats = self.cs.online_batch_fast(store, keys, ts, values)
+        else:
+            feats = self.cs.online_batch(
+                store, keys, ts, values,
+                preagg_states=pre if self.use_preagg else None)
         dt_ms = (time.perf_counter() - t0) * 1e3
         self.n_requests += len(rows)
         # every request in the batch completed when the batch call

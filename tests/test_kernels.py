@@ -295,3 +295,185 @@ def test_fused_offline_bitwise_vs_staged(action_tables, micro_sql):
     for k in a:
         np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]),
                                       err_msg=k)
+
+
+# ------------------------------------------------- lane-tiling edge shapes
+
+from repro.kernels.unit_fold import ref as uf_ref
+from repro.kernels.unit_fold.kernel import LANES
+
+EDGE_SQL = """
+SELECT sum(price) OVER wa AS s, min(price) OVER wa AS mn,
+       sum(price) OVER wb AS sb
+FROM actions
+WINDOW wa AS (PARTITION BY uid ORDER BY ts
+              ROWS BETWEEN 5 PRECEDING AND CURRENT ROW),
+  wb AS (PARTITION BY uid ORDER BY ts
+         ROWS_RANGE BETWEEN 2s PRECEDING AND CURRENT ROW)
+"""
+
+SOLO_SQL = """
+SELECT sum(price) OVER wa AS s
+FROM actions
+WINDOW wa AS (PARTITION BY uid ORDER BY ts
+              ROWS BETWEEN 5 PRECEDING AND CURRENT ROW)
+"""
+
+
+def _edge_case(sql):
+    cs = compile_script(sql, distinct_hll_p=None)
+    (members,) = W.group_windows(cs.windows)
+    specs = [m.node.spec for m in members]
+    leaves = {}
+    for m in members:
+        for k, leaf in W.unique_leaves(m.aggs).items():
+            leaves.setdefault(k, leaf)
+    return members, specs, leaves
+
+
+def _edge_env(r, seed, n_valid=None):
+    rng = np.random.default_rng(seed)
+    ts = np.sort(rng.integers(0, 10_000, r)).astype(np.int32)
+    price = rng.normal(0.0, 2.0, r).astype(np.float32)
+    valid = np.zeros(r, bool)
+    valid[:r if n_valid is None else n_valid] = True
+    price[~valid] = 123.0                 # garbage in invalid slots
+    return {"ts": jnp.asarray(ts), "price": jnp.asarray(price),
+            "__valid__": jnp.asarray(valid)}
+
+
+def _assert_tile_parity(members, envs, fused, queries=None):
+    staged_fn = jax.jit(
+        lambda e, q: W.fold_unit(members, e, queries=q))
+    r = envs[0]["ts"].shape[0]
+    for i, env in enumerate(envs):
+        q = (jnp.arange(r, dtype=jnp.int32) if queries is None
+             else queries[i])
+        staged = staged_fn(env, q)
+        for mi, m in enumerate(members):
+            for k in W.unique_leaves(m.aggs):
+                np.testing.assert_array_equal(
+                    np.asarray(staged[mi][k]),
+                    np.asarray(fused[mi][k][i]),
+                    err_msg=f"unit={i} member={mi} {k}")
+
+
+@pytest.mark.parametrize("u", [1, LANES - 1, LANES, LANES + 1])
+def test_unit_fold_lane_tile_unit_counts(u):
+    """Tile-boundary unit counts (1, LANES-1, LANES, LANES+1): the
+    padded sentinel lanes never leak into real units' results."""
+    members, specs, leaves = _edge_case(EDGE_SQL)
+    envs = [_edge_env(13, seed=u * 100 + i, n_valid=13 - (i % 3))
+            for i in range(u)]
+    env_b = {k: jnp.stack([e[k] for e in envs]) for k in envs[0]}
+    fused = uf_ops.unit_fold(specs, leaves, env_b, order_by="ts",
+                             use_pallas=True, interpret=True)
+    _assert_tile_parity(members, envs, fused)
+
+
+def test_unit_fold_lane_tile_single_member_group():
+    """A one-member, one-leaf group (solo lane, Mg=1) through the tiled
+    kernel."""
+    members, specs, leaves = _edge_case(SOLO_SQL)
+    envs = [_edge_env(9, seed=i) for i in range(3)]
+    env_b = {k: jnp.stack([e[k] for e in envs]) for k in envs[0]}
+    fused = uf_ops.unit_fold(specs, leaves, env_b, order_by="ts",
+                             use_pallas=True, interpret=True)
+    _assert_tile_parity(members, envs, fused)
+
+
+def test_unit_fold_lane_tile_single_query():
+    """Q=1 (the online request shape) across a ragged tile."""
+    members, specs, leaves = _edge_case(EDGE_SQL)
+    u = LANES + 1
+    envs = [_edge_env(11, seed=i, n_valid=11 - (i % 4)) for i in range(u)]
+    env_b = {k: jnp.stack([e[k] for e in envs]) for k in envs[0]}
+    q = jnp.asarray([[3 + (i % 5)] for i in range(u)], jnp.int32)
+    fused = uf_ops.unit_fold(specs, leaves, env_b, q, order_by="ts",
+                             use_pallas=True, interpret=True)
+    _assert_tile_parity(members, envs, fused, queries=q)
+
+
+def test_unit_fold_lane_tile_empty_unit():
+    """A unit with zero valid rows folds to pure identities — parity
+    with the staged fold on the same all-invalid env."""
+    members, specs, leaves = _edge_case(EDGE_SQL)
+    envs = [_edge_env(8, seed=i, n_valid=0 if i == 2 else 8)
+            for i in range(LANES)]
+    env_b = {k: jnp.stack([e[k] for e in envs]) for k in envs[0]}
+    fused = uf_ops.unit_fold(specs, leaves, env_b, order_by="ts",
+                             use_pallas=True, interpret=True)
+    _assert_tile_parity(members, envs, fused)
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_unit_fold_blocks_parity_with_padded_units(unit_case, use_pallas):
+    """The relayout-free blocks entry (flat columns + (U, R) gather
+    index, halos, sentinel pad slots, one fully padded-out unit) is
+    bitwise the staged fold of each gathered unit.  Covers both lift
+    placements: wide leaf groups prelift the flat rows, narrow groups
+    lift from the gathered raw columns.  Honors the §6.2 layout
+    invariant the producer (lowering.windows.fused_prelift) guarantees:
+    every flat row except the trailing sentinel is valid."""
+    members, specs, leaves, env = unit_case
+    n = int(np.asarray(env["__valid__"]).sum())  # valid prefix length
+    flat_env = {
+        "ts": jnp.concatenate([env["ts"][:n],
+                               jnp.asarray([uf_ref.INT_MAX], jnp.int32)]),
+        "price": jnp.concatenate([env["price"][:n],
+                                  jnp.zeros(1, jnp.float32)]),
+        "item": jnp.concatenate([env["item"][:n],
+                                 jnp.zeros(1, jnp.int32)]),
+        "__valid__": jnp.concatenate([jnp.ones(n, bool),
+                                      jnp.zeros(1, bool)]),
+    }
+    r = 16
+    idx = np.full((4, r), n, np.int64)      # sentinel-initialized
+    idx[0, :r] = np.arange(r)               # plain block
+    idx[1, :r] = np.arange(8, 8 + r)        # overlapping halo block
+    idx[2, :n - 20] = np.arange(20, n)      # partial block, sentinel tail
+    # idx[3] stays all-sentinel: a fully padded-out unit
+    idx = jnp.asarray(idx)
+    # jitted on both sides: XLA constant-folds ew_avg's log(decay) to
+    # different bits than the eager op (see test_unit_fold_pallas_parity)
+    fused = jax.jit(lambda fe, ix: uf_ops.unit_fold_blocks(
+        specs, leaves, fe, ix, order_by="ts",
+        use_pallas=use_pallas, interpret=True))(flat_env, idx)
+    staged_fn = jax.jit(lambda e: W.fold_unit(members, e))
+    for u in range(idx.shape[0]):
+        env_u = {c: v[idx[u]] for c, v in flat_env.items()}
+        staged = staged_fn(env_u)
+        for mi, m in enumerate(members):
+            for k in W.unique_leaves(m.aggs):
+                np.testing.assert_array_equal(
+                    np.asarray(staged[mi][k]),
+                    np.asarray(fused[mi][k][u]),
+                    err_msg=f"unit={u} {k}")
+
+
+# ------------------------------------------------------ dispatch policy
+
+def test_dispatch_cpu_autodetect_falls_back_to_ref():
+    from repro.kernels import dispatch
+    if dispatch.tpu_available():
+        pytest.skip("TPU backend: autodetect selects the compiled kernel")
+    assert dispatch.resolve(None, None) == (False, True)
+
+
+def test_dispatch_forced_interpret_runs_off_tpu():
+    from repro.kernels import dispatch
+    assert dispatch.resolve(True, True) == (True, True)
+    assert dispatch.resolve(True, None)[0] is True   # interpret follows
+    if not dispatch.tpu_available():
+        assert dispatch.resolve(True, None)[1] is True
+
+
+def test_dispatch_compiled_pallas_off_tpu_raises_typed_error(unit_case):
+    from repro.kernels import dispatch
+    if dispatch.tpu_available():
+        pytest.skip("TPU backend lowers the compiled kernel")
+    members, specs, leaves, env = unit_case
+    with pytest.raises(dispatch.PallasUnsupportedError,
+                       match="unit_fold_pallas"):
+        uf_ops.unit_fold(specs, leaves, env, order_by="ts",
+                         use_pallas=True, interpret=False)

@@ -398,3 +398,42 @@ def test_latency_percentile_edge_cases(loop_tables):
     assert set(pct) == {"TP50", "TP90", "TP95", "TP99"}
     loop = ServeLoop(eng, clock=VirtualClock())
     assert loop.latency_percentiles() == {}       # loop: same contract
+
+
+def test_fused_loop_no_retrace_across_snapshot_swaps(loop_tables):
+    """Executable reuse (ISSUE 9 tentpole c): under ServeLoop traffic a
+    fused engine serves every batch through the megakernel fast path,
+    and snapshot refreshes / repeated flushes of the same pad class
+    never retrace — one jitted executable per (B-pad, backend) class,
+    traced exactly once."""
+    eng = FeatureEngine(RAW_SQL, loop_tables, capacity=512,
+                        fused_fold=True)
+    clock = VirtualClock()
+    loop = ServeLoop(eng, clock=clock, batch_size=4, max_wait_ms=5.0,
+                     slo_ms=50.0)
+    a = loop_tables["actions"]
+    loop.ingest("actions", [a.row(i) for i in range(20)])
+    loop.drain_ingest()
+    for rnd in range(3):
+        # a full batch (B=4) and a partial flush (pads to B=2): two
+        # pad classes, both revisited every round
+        for i in range(4):
+            loop.submit(dict(a.row(20 + 4 * rnd + i)))
+        loop.step()
+        loop.submit(dict(a.row(40 + rnd)))
+        loop.submit(dict(a.row(44 + rnd)))
+        clock.advance(0.0051)
+        loop.step()
+        # a bulk write + snapshot swap between rounds
+        loop.ingest("actions", [a.row(47 + rnd)])
+        loop.run_until_idle()
+    assert loop.stats["snapshot_swaps"] >= 3
+    fast_fns = {k: fn for k, fn in eng.cs._online_fns.items()
+                if "online_fast" in k}
+    # the fused engine actually routed through the fast path: one
+    # cached executable per pad class (B=4 and B=2), each traced once
+    assert len(fast_fns) == 2, sorted(fast_fns)
+    for key, fn in fast_fns.items():
+        assert fn._cache_size() == 1, (key, fn._cache_size())
+    # staged batch driver never engaged
+    assert not any(k[2] == "online_batch" for k in eng.cs._online_fns)

@@ -90,6 +90,15 @@ def main(n_shards: int = 4, bitwise: bool = False) -> int:
                                   n_shards=n_shards, bitwise=True)
         print(f"preagg-int(S={n_shards}): {rep3}")
         ok &= rep3.passed
+
+        # fused unit-fold megakernel driving BOTH executors (offline
+        # blocks + online fast path) through the same bitwise gate
+        cs_f = compile_script(parse(RAW_SQL), tables=tables,
+                              fused_unit_fold=True)
+        rep_f = verify_consistency(cs_f, tables, n_shards=n_shards,
+                                   bitwise=True)
+        print(f"raw-fused (S={n_shards}): {rep_f}")
+        ok &= rep_f.passed
     return 0 if ok else 1
 
 
