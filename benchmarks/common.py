@@ -64,8 +64,76 @@ def emit(name: str, us_per_call: float, derived: str = ""):
                   "derived": derived})
 
 
+# BENCH_*.json artifact schema — the contract CI and docs rely on when
+# diffing numbers.  validate_payload() enforces it on every write (and
+# on any artifact handed back for re-reading).
+BENCH_SCHEMA = {
+    "bench": str,              # benchmark name (matches the filename)
+    "config": dict,            # run parameters from set_config()
+    "rows": list,              # [{name, us_per_call, derived}] CSV rows
+    "medians": dict,           # {row name: us_per_call}
+    "samples": dict,           # {label: [raw us per iteration]}
+}
+_ROW_SCHEMA = {"name": str, "us_per_call": (int, float), "derived": str}
+
+
+def validate_payload(payload) -> List[str]:
+    """Validate a BENCH_*.json payload; returns problem strings ([] ok).
+
+    Checks the top-level shape (BENCH_SCHEMA), every row against
+    _ROW_SCHEMA with finite non-negative timings, medians/rows
+    agreement, and that samples are flat lists of finite floats.
+    """
+    probs: List[str] = []
+    if not isinstance(payload, dict):
+        return [f"payload is {type(payload).__name__}, expected dict"]
+    for key, typ in BENCH_SCHEMA.items():
+        if key not in payload:
+            probs.append(f"missing key {key!r}")
+        elif not isinstance(payload[key], typ):
+            probs.append(f"{key!r} is {type(payload[key]).__name__}, "
+                         f"expected {typ.__name__}")
+    for extra in sorted(set(payload) - set(BENCH_SCHEMA)):
+        probs.append(f"unknown key {extra!r}")
+    if probs:
+        return probs
+
+    names = []
+    for i, row in enumerate(payload["rows"]):
+        if not isinstance(row, dict):
+            probs.append(f"rows[{i}] is not an object")
+            continue
+        for key, typ in _ROW_SCHEMA.items():
+            if key not in row:
+                probs.append(f"rows[{i}] missing {key!r}")
+            elif not isinstance(row[key], typ) or isinstance(row[key],
+                                                             bool):
+                probs.append(f"rows[{i}].{key} has type "
+                             f"{type(row[key]).__name__}")
+        us = row.get("us_per_call")
+        if isinstance(us, (int, float)) and not isinstance(us, bool):
+            if not np.isfinite(us) or us < 0:
+                probs.append(f"rows[{i}].us_per_call = {us!r} is not a "
+                             f"finite non-negative time")
+        if isinstance(row.get("name"), str):
+            names.append(row["name"])
+    med = payload["medians"]
+    if set(med) != set(names):
+        probs.append(f"medians keys {sorted(set(med) ^ set(names))} "
+                     f"disagree with row names")
+    for label, samples in payload["samples"].items():
+        if not isinstance(samples, list) or not all(
+                isinstance(s, (int, float)) and not isinstance(s, bool)
+                and np.isfinite(s) for s in samples):
+            probs.append(f"samples[{label!r}] is not a flat list of "
+                         f"finite numbers")
+    return probs
+
+
 def write_json(bench_name: str, path: Optional[str] = None) -> str:
-    """Write ``BENCH_<bench_name>.json`` (cwd unless ``path``)."""
+    """Write ``BENCH_<bench_name>.json`` (cwd unless ``path``),
+    schema-validated — a malformed artifact fails the run loudly
+    instead of poisoning downstream diffs."""
     payload = {
         "bench": bench_name,
         "config": _config,
@@ -73,6 +141,10 @@ def write_json(bench_name: str, path: Optional[str] = None) -> str:
         "medians": {r["name"]: r["us_per_call"] for r in _rows},
         "samples": _samples,
     }
+    probs = validate_payload(json.loads(json.dumps(payload)))
+    if probs:
+        raise ValueError("BENCH artifact fails schema: "
+                         + "; ".join(probs))
     path = path or f"BENCH_{bench_name}.json"
     with open(path, "w") as f:
         json.dump(payload, f, indent=1, sort_keys=True)

@@ -11,3 +11,4 @@ from .sql import parse  # noqa: F401
 from .compiler import (CompileContext, CompiledScript,  # noqa: F401
                        cache_stats, clear_cache, compile_script)
 from .consistency import verify_consistency, replay_online  # noqa: F401
+from .analysis import DeploymentCertificate, certify  # noqa: F401

@@ -1,0 +1,148 @@
+"""Static retrace bound: pad/shape classes through the §4.2 cache.
+
+Every lowering driver keys the compilation cache with a *class*, not a
+request: batch sizes pad to the next power of two (``pad_batch``),
+sharded sub-batches pad to powers of two up to 32 then multiples of
+32, offline units bucket into power-of-two width classes.  The number
+of distinct classes a deployment can reach therefore bounds the
+number of traced executables — the property PR 9's no-retrace harness
+gates dynamically under ServeLoop traffic, derived here statically.
+
+Each entry reports the reachable pad classes for one driver against a
+single store identity / table signature; new store identities, store
+capacity changes, or new table content signatures open fresh classes
+(reported as hazards, not counted).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from ...storage.timestore import next_pow2
+from ..lowering.windows import group_windows
+
+__all__ = ["retrace_bound", "pow2_classes", "sharded_pad_classes"]
+
+
+def pow2_classes(max_n: int) -> List[int]:
+    """Reachable ``pad_batch`` classes for batch sizes 1..max_n."""
+    out, b = [], 1
+    top = next_pow2(max(1, max_n))
+    while b <= top:
+        out.append(b)
+        b *= 2
+    return out
+
+
+def sharded_pad_classes(max_batch: int) -> List[int]:
+    """Reachable per-shard sub-batch pads: powers of two while <= 32,
+    then multiples of 32 (``_sharded_store_fn``)."""
+    out = [b for b in (1, 2, 4, 8, 16, 32)
+           if b <= next_pow2(max(1, min(max_batch, 32)))]
+    if max_batch > 32:
+        out += list(range(64, ((max_batch + 31) // 32) * 32 + 1, 32))
+    return out
+
+
+def retrace_bound(cs, tables=None, max_batch: int = 1024,
+                  max_ingest_batch: int = 4096,
+                  plan=None) -> Dict[str, object]:
+    """Enumerate the executable classes a script can generate.
+
+    ``max_batch`` bounds the request batch size (the serving loop's
+    admission cap); ``max_ingest_batch`` bounds one ``put_many`` /
+    binlog-ship batch.  ``plan`` optionally injects the offline
+    ``GroupLowering`` list (from ``plan_offline``) for exact unit
+    width classes; otherwise the offline entry is data-dependent.
+    """
+    hazards: List[str] = []
+    drivers: Dict[str, Dict[str, object]] = {}
+
+    batch_classes = pow2_classes(max_batch)
+    drivers["online"] = {
+        "pad_classes": [1], "max_executables": 1, "bounded": True,
+        "note": "one scalar-request executable per (store, preagg) pair",
+    }
+    drivers["online_batch"] = {
+        "pad_classes": batch_classes,
+        "max_executables": len(batch_classes), "bounded": True,
+        "note": f"batch pads to next_pow2 -> log2({max_batch})+1 "
+                f"classes per (store, preagg) pair",
+    }
+    fast_ok, fast_why = cs.fast_batch_eligible()
+    drivers["online_batch_fast"] = {
+        "eligible": fast_ok, "reason": fast_why,
+        "pad_classes": batch_classes if fast_ok else [],
+        "max_executables": len(batch_classes) if fast_ok else 0,
+        "bounded": True,
+    }
+    shard_ok, shard_why = cs.sharded_eligible()
+    s_classes = sharded_pad_classes(max_batch) if shard_ok else []
+    drivers["online_sharded_batch"] = {
+        "eligible": shard_ok, "reason": shard_why,
+        "pad_classes": s_classes,
+        "max_executables": len(s_classes), "bounded": True,
+    }
+    if shard_ok and max_batch > 32:
+        hazards.append(
+            f"online_sharded_batch pad classes grow LINEARLY in the "
+            f"per-shard sub-batch beyond 32 ({len(s_classes)} classes "
+            f"at max_batch={max_batch}): cap admission batches or "
+            f"shard count x 32 to stay logarithmic")
+
+    # ---- offline: unit width classes per window group
+    groups = group_windows(cs.windows)
+    if plan is not None:
+        width = sorted({b.idx.shape[1] for gl in plan
+                        for b in gl.blocks})
+        n_blocks = sum(len(gl.blocks) for gl in plan)
+        drivers["offline"] = {
+            "unit_width_classes": width,
+            "max_executables": 1 + (0 if not groups else 1),
+            "bounded": True,
+            "note": f"one fused executable (+1 scalar pass) per table "
+                    f"signature; {n_blocks} unit blocks over width "
+                    f"classes {width}",
+        }
+    else:
+        drivers["offline"] = {
+            "unit_width_classes": None,
+            "max_executables": None, "bounded": tables is not None,
+            "note": "unit width classes are data-derived (pow2 >= 16, "
+                    "bounded <2x by §6.2 slicing); pass tables for the "
+                    "exact class list",
+        }
+        if tables is None:
+            hazards.append(
+                "offline unit width classes unknown without table "
+                "statistics (bounded per signature, but each new table "
+                "signature retraces)")
+
+    # ---- pre-agg ingest folds (per-PreAgg jit, outside the global
+    # cache): batches pad to next_pow2, out-of-order batches split
+    # into in-order runs through the SAME classes
+    n_pre = sum(1 for w in cs.windows if w.preagg is not None)
+    ingest_classes = pow2_classes(max_ingest_batch)
+    drivers["preagg_update_many"] = {
+        "pad_classes": ingest_classes if n_pre else [],
+        "max_executables": n_pre * len(ingest_classes),
+        "bounded": True,
+        "note": f"{n_pre} pre-agg plane(s) x log2({max_ingest_batch})"
+                f"+1 ingest pad classes (+1 vmapped sharded variant "
+                f"each)",
+    }
+
+    hazards.append(
+        "per STORE IDENTITY bound: a new/grown store or a changed "
+        "capacity re-keys every online class; a new table content "
+        "signature re-keys the offline plan")
+    total = sum(int(d.get("max_executables") or 0)
+                for d in drivers.values())
+    return {
+        "max_batch": max_batch,
+        "max_ingest_batch": max_ingest_batch,
+        "drivers": drivers,
+        "max_executables_total": total,
+        "bounded": all(bool(d.get("bounded")) for d in drivers.values()),
+        "hazards": hazards,
+    }

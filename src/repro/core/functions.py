@@ -28,12 +28,12 @@ avg_cate_where) into *exact* bounded-state monoids: their state is a
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
-from .expr import AggCall, ColumnRef, Expr, Literal, eval_scalar
+from .expr import AggCall, Expr, eval_scalar
 
 __all__ = [
     "Leaf", "AddLeaf", "MinLeaf", "MaxLeaf", "DrawdownLeaf", "EWLeaf",

@@ -17,9 +17,9 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Tuple
 
-from .expr import AggCall, ColumnRef, Expr, collect_columns
+from .expr import AggCall, Expr, collect_columns
 from .window import WindowSpec
 
 __all__ = [

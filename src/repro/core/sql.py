@@ -24,7 +24,7 @@ keeping the parser small and auditable.
 from __future__ import annotations
 
 import re
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from .expr import (AggCall, BinaryOp, ColumnRef, Expr, FuncCall, Literal,
                    UnaryOp)

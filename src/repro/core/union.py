@@ -32,12 +32,11 @@ Where these policies are consumed today:
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Optional
 
 import numpy as np
 
-from .functions import Aggregator, Leaf
+from .functions import Leaf
 
 __all__ = ["LoadBalancer", "SlidingAggregator", "static_hash_assign"]
 

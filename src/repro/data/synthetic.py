@@ -4,7 +4,7 @@ TalkingData-like click log for the memory benchmark)."""
 
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
 import numpy as np
 

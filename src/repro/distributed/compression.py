@@ -19,8 +19,6 @@ Both return pytree->pytree functions pluggable into
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -28,7 +28,7 @@ Routing itself (key -> shard) is host-side hash + rebalance, owned by
 from __future__ import annotations
 
 import re
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import numpy as np

@@ -26,7 +26,7 @@ from pathlib import Path
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from ..configs import ARCHS, SHAPES, get
 from ..distributed.sharding import (batch_pspec, cache_pspecs,

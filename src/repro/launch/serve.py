@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..configs import get, reduced
+from ..configs import reduced
 from ..data.synthetic import make_action_tables
 from ..models import init_params
 from ..serve.batcher import RequestBatcher

@@ -13,14 +13,12 @@ Conventions:
 
 from __future__ import annotations
 
-import functools
 import math
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from ..kernels.flash_decode.ref import finalize_partials, merge_partials
 
 Params = Dict[str, Any]
 

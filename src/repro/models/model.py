@@ -14,7 +14,6 @@ Entry points:
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

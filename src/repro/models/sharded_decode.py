@@ -14,8 +14,7 @@ EXPERIMENTS.md §Perf (llama3-8b x decode_32k hillclimb).
 
 from __future__ import annotations
 
-import functools
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

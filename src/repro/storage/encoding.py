@@ -21,11 +21,10 @@ The module also reproduces the §7.1 memory-saving example (20 ints,
 from __future__ import annotations
 
 import struct
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List
 
-import numpy as np
 
-from ..core.types import Column, ColumnType, TableSchema
+from ..core.types import ColumnType, TableSchema
 
 __all__ = ["CompactRowCodec", "SparkRowCodec", "row_size_compact",
            "row_size_spark"]

@@ -17,7 +17,7 @@ exercised by tests and the serving engine.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, Optional, Sequence
 
 __all__ = ["TableMemSpec", "estimate_memory", "recommend_engine",
            "MemoryGuard"]

@@ -27,7 +27,6 @@ All operations are pure jax (jit-able, static shapes):
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Dict, List, Optional, Tuple
 
 import jax

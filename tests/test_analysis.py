@@ -1,0 +1,348 @@
+"""Static plan certifier vs the dynamic gates (ISSUE 10 tentpole).
+
+The certifier's contract is CONSERVATIVE, NEVER OPTIMISTIC: a column
+the certificate marks bitwise must be observed bitwise-equal by
+``verify_consistency(bitwise=True)``; a tolerance marking is a
+non-promise (integer-valued floats may still replay bitwise).  The
+sweep below holds that contract over the same config matrix
+``tests/test_fold_engine.py`` gates dynamically, plus deliberate
+degradation scripts proving the analyzer actually flags them.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (DeploymentCertificate, certify, compile_script,
+                        parse, verify_consistency)
+from repro.core.analysis import (classify_consistency, explain_sharding,
+                                 memory_bound, retrace_bound)
+from repro.core.analysis.memory import preagg_plane_bytes
+from repro.core.analysis.retrace import pow2_classes, sharded_pad_classes
+from repro.core.compiler import cache_stats
+from repro.data.synthetic import make_action_tables
+from repro.serve.engine import FeatureEngine
+
+from test_fold_engine import (PREAGG_SAFE_AGGS, RAW_AGGS, SWEEP,
+                              _int_prices, _script)
+
+PREAGG_SQL = """
+SELECT sum(price) OVER w AS s, count(price) OVER w AS c,
+       max(price) OVER w AS mx
+FROM actions
+WINDOW w AS (PARTITION BY userid ORDER BY ts
+             ROWS_RANGE BETWEEN 3000s PRECEDING AND CURRENT ROW)
+OPTIONS (long_windows = "w:100s")
+"""
+
+
+def _sweep_case(seed, n_aggs, frame, union, join, preagg, maxsize):
+    rng = np.random.default_rng(seed)
+    pool = PREAGG_SAFE_AGGS if preagg else RAW_AGGS
+    aggs = list(rng.choice(pool, size=min(n_aggs, len(pool)),
+                           replace=False))
+    sql = _script(aggs, frame, union, join, preagg, maxsize)
+    tables = make_action_tables(
+        n_actions=90, n_orders=60 if union else 0, n_users=4,
+        horizon_ms=12_000_000 if preagg else 60_000,
+        seed=100 + seed, with_profile=join)
+    if preagg:
+        tables = _int_prices(tables)
+    return sql, tables
+
+
+# ------------------------------------------------- conservative contract
+
+
+@pytest.mark.parametrize(
+    "seed,n_aggs,frame,union,join,preagg,n_shards,maxsize", SWEEP)
+def test_certificate_conservative_vs_dynamic(seed, n_aggs, frame, union,
+                                             join, preagg, n_shards,
+                                             maxsize):
+    """For every SWEEP config: static bitwise ==> observed bitwise."""
+    sql, tables = _sweep_case(seed, n_aggs, frame, union, join, preagg,
+                              maxsize)
+    cs = compile_script(parse(sql), tables=tables)
+    cert = certify(cs, tables=tables)
+    mode = "preagg" if preagg else "raw"
+
+    rep = verify_consistency(cs, tables, use_preagg=preagg,
+                             n_shards=n_shards, bitwise=True)
+    not_bitwise = set(rep.mismatched)
+    for col, entry in cert.consistency["columns"].items():
+        assert not (entry[mode] == "bitwise" and col in not_bitwise), (
+            f"{col}: certified bitwise but dynamically tolerance-only\n"
+            f"{sql}\nhits={entry['rules']}")
+
+    if not preagg:
+        # raw serving over in-buffer histories: the certificate must
+        # actually PROVE bitwise, not just fail to disprove it
+        assert all(e["raw"] == "bitwise"
+                   for e in cert.consistency["columns"].values()), sql
+        assert cert.consistency["raw_bitwise"]
+
+
+def test_preagg_classification_by_aggregate():
+    """count/min/max/distinct/topn stay bitwise under pre-agg; sum/avg/
+    stddev degrade to tolerance with C-PREAGG-FLOAT."""
+    aggs = ["sum(price)", "avg(price)", "count(price)", "min(price)",
+            "max(price)", "stddev(price)", "distinct_count(category)",
+            "topn_frequency(category, 3)"]
+    sql = _script(aggs, "range", False, False, True)
+    tables = make_action_tables(n_actions=90, n_orders=0, n_users=4,
+                                horizon_ms=12_000_000, seed=3,
+                                with_profile=False)
+    cs = compile_script(parse(sql), tables=tables)
+    cert = certify(cs, tables=tables)
+    cls = {f"f{i}": a.split("(")[0] for i, a in enumerate(aggs)}
+    for col, kind in cls.items():
+        entry = cert.consistency["columns"][col]
+        rules = {h["rule"] for h in entry["rules"]}
+        if kind in ("count", "min", "max", "distinct_count",
+                    "topn_frequency"):
+            assert entry["preagg"] == "bitwise", (col, kind, rules)
+        else:
+            assert entry["preagg"] == "tolerance", (col, kind)
+            assert "C-PREAGG-FLOAT" in rules, (col, kind, rules)
+        assert entry["raw"] == "bitwise", (col, kind)
+
+
+def test_tolerance_only_script_flagged_and_observed():
+    """The acceptance-criterion degradation script: float prices + float
+    pre-agg sums — the analyzer must flag it AND the dynamic replay must
+    actually degrade (so the flag is load-bearing, not paranoia)."""
+    tables = make_action_tables(n_actions=120, n_orders=0, n_users=4,
+                                horizon_ms=12_000_000, seed=12,
+                                with_profile=False)   # float prices!
+    cs = compile_script(parse(PREAGG_SQL), tables=tables)
+    cert = certify(cs, tables=tables)
+    s = cert.consistency["columns"]["s"]
+    assert s["preagg"] == "tolerance"
+    assert "C-PREAGG-FLOAT" in {h["rule"] for h in s["rules"]}
+    assert not cert.consistency["preagg_bitwise"]
+
+    rep = verify_consistency(cs, tables, use_preagg=True, bitwise=True)
+    assert "s" in rep.mismatched, (
+        "expected the float pre-agg sum to actually degrade; if this "
+        "data became exact, pick a different seed")
+    # ...and the tolerance gate still passes: degradation, not breakage
+    rep_tol = verify_consistency(cs, tables, use_preagg=True,
+                                 bitwise=False)
+    assert rep_tol.passed
+    # conservative direction: nothing certified bitwise degraded
+    for col, entry in cert.consistency["columns"].items():
+        assert not (entry["preagg"] == "bitwise"
+                    and col in rep.mismatched), col
+
+
+def test_small_buffer_flags_c_buf():
+    """History beyond the online gather buffer moves the fold anchor:
+    the certificate must drop to tolerance with C-BUF."""
+    sql = _script(["sum(price)", "count(price)"], "range", False, False,
+                  False)
+    tables = make_action_tables(n_actions=150, n_orders=0, n_users=2,
+                                seed=5, with_profile=False)
+    cs = compile_script(parse(sql), tables=tables, online_buffer=8)
+    cert = certify(cs, tables=tables)
+    entry = cert.consistency["columns"]["f0"]
+    assert entry["raw"] == "tolerance"
+    assert "C-BUF" in {h["rule"] for h in entry["rules"]}
+    # big enough buffer on the same data: back to bitwise
+    cs2 = compile_script(parse(sql), tables=tables, online_buffer=256)
+    cert2 = certify(cs2, tables=tables)
+    assert cert2.consistency["columns"]["f0"]["raw"] == "bitwise"
+
+
+def test_no_tables_is_strictly_conservative():
+    """Without data statistics the data-dependent rules cannot be
+    discharged: nothing data-dependent may be certified bitwise."""
+    sql = _script(["sum(price)"], "range", False, False, False)
+    cs = compile_script(parse(sql))
+    cert = certify(cs)
+    assert cert.consistency["evidence"] == "none"
+    assert cert.consistency["columns"]["f0"]["raw"] == "tolerance"
+    # a capacity bound <= the buffer discharges C-BUF statically
+    cs2 = compile_script(parse(sql), online_buffer=256)
+    cert2 = certify(cs2, capacity=128)
+    entry = cert2.consistency["columns"]["f0"]
+    assert "C-BUF" not in {h["rule"] for h in entry["rules"]}
+
+
+# ------------------------------------------------------------- sharding
+
+
+@pytest.mark.parametrize("sql_kw", [
+    dict(aggs=["sum(price)"], frame="range", union=False, join=False,
+         preagg=False),
+    dict(aggs=["sum(price)"], frame="rows", union=True, join=False,
+         preagg=False),
+    dict(aggs=["sum(price)", "max(price)"], frame="range", union=False,
+         join=True, preagg=False),
+    dict(aggs=["sum(price)"], frame="range", union=False, join=False,
+         preagg=True),
+])
+def test_sharding_tree_matches_driver(sql_kw):
+    """The structured reason tree must agree exactly with the driver's
+    own ``sharded_eligible()`` boolean."""
+    sql = _script(**sql_kw)
+    cs = compile_script(parse(sql))
+    tree = explain_sharding(cs)
+    ok, why = cs.sharded_eligible()
+    assert tree["eligible"] == ok, (sql, tree, why)
+    assert tree["driver_reason"] == why
+    if not ok:
+        assert tree["first_failure"] is not None
+    for chk in tree["checks"]:
+        assert set(chk) >= {"rule", "ok", "detail"}
+
+
+def test_sharding_two_partition_keys_ineligible():
+    sql = """
+SELECT sum(price) OVER wa AS s, count(price) OVER wb AS c FROM actions
+WINDOW wa AS (PARTITION BY userid ORDER BY ts
+              ROWS_RANGE BETWEEN 10s PRECEDING AND CURRENT ROW),
+       wb AS (PARTITION BY category ORDER BY ts
+              ROWS_RANGE BETWEEN 10s PRECEDING AND CURRENT ROW)
+"""
+    cs = compile_script(parse(sql))
+    tree = explain_sharding(cs)
+    ok, _ = cs.sharded_eligible()
+    assert tree["eligible"] == ok
+    if not ok:
+        failed = [c["rule"] for c in tree["checks"] if not c["ok"]]
+        assert failed, tree
+
+
+# -------------------------------------------------------------- retrace
+
+
+def test_retrace_bound_covers_observed_compiles(action_tables):
+    """Drive online_batch across many batch sizes: fresh executables
+    must stay within the certificate's online_batch class count."""
+    sql = _script(["sum(price)", "count(price)"], "range", False, False,
+                  False)
+    tables = make_action_tables(n_actions=90, n_orders=0, n_users=4,
+                                seed=8, with_profile=False)
+    cs = compile_script(parse(sql), tables=tables)
+    cert = certify(cs, tables=tables, max_batch=16)
+    bound = cert.retrace["drivers"]["online_batch"]["max_executables"]
+    assert bound == len(pow2_classes(16)) == 5
+
+    eng = FeatureEngine(sql, tables, capacity=512)
+    a = tables["actions"]
+    rows = [a.row(40 + i) for i in range(16)]
+    need = eng._need[eng.cs.script.base_table]
+    keys = [eng._encode("actions", eng.key_col, r[eng.key_col])
+            for r in rows]
+    ts = [int(r[eng.cs.script.order_column]) for r in rows]
+    values = {c: [float(eng._encode("actions", c, r[c])) for r in rows]
+              for c in need}
+    misses0 = cache_stats()["misses"]
+    for b in (1, 2, 3, 5, 7, 8, 11, 16):
+        out = eng.cs.online_batch(eng.store, keys[:b], ts[:b],
+                                  {c: values[c][:b] for c in need})
+        assert all(v.shape[0] == b for v in out.values())
+    fresh = cache_stats()["misses"] - misses0
+    assert fresh <= bound, (fresh, bound)
+
+
+def test_retrace_class_enumerators():
+    assert pow2_classes(1) == [1]
+    assert pow2_classes(9) == [1, 2, 4, 8, 16]
+    assert sharded_pad_classes(32) == [1, 2, 4, 8, 16, 32]
+    assert sharded_pad_classes(100) == [1, 2, 4, 8, 16, 32, 64, 96, 128]
+    # linear growth beyond 32 is the flagged hazard
+    assert len(sharded_pad_classes(1024)) == 6 + 31
+
+
+def test_retrace_exact_offline_classes_with_plan():
+    sql = _script(["sum(price)"], "range", False, False, False)
+    tables = make_action_tables(n_actions=90, n_orders=0, n_users=4,
+                                seed=9, with_profile=False)
+    cs = compile_script(parse(sql), tables=tables)
+    cert = certify(cs, tables=tables)
+    off = cert.retrace["drivers"]["offline"]
+    assert off["unit_width_classes"], off
+    assert all(w >= 1 for w in off["unit_width_classes"])
+    assert cert.retrace["bounded"]
+    # without tables the offline classes are unknown and flagged
+    cs2 = compile_script(parse(sql))
+    r2 = retrace_bound(cs2)
+    assert r2["drivers"]["offline"]["unit_width_classes"] is None
+    assert not r2["bounded"]
+    assert any("unit width classes unknown" in h for h in r2["hazards"])
+
+
+# --------------------------------------------------------------- memory
+
+
+def test_preagg_plane_bytes_exact():
+    """The static plane bound equals the actual init_state() nbytes."""
+    tables = make_action_tables(n_actions=90, n_orders=0, n_users=4,
+                                horizon_ms=12_000_000, seed=4,
+                                with_profile=False)
+    cs = compile_script(parse(PREAGG_SQL), tables=tables)
+    (w,) = [w for w in cs.windows if w.preagg is not None]
+    state = w.preagg.init_state()
+    actual = sum(int(np.asarray(v).nbytes)
+                 for grp in ("fine", "coarse")
+                 for v in state[grp].values())
+    actual += int(np.asarray(state["fine_epoch"]).nbytes)
+    actual += int(np.asarray(state["coarse_epoch"]).nbytes)
+    assert preagg_plane_bytes(w.preagg) == actual
+
+
+def test_memory_bound_reconciles_store_and_paper_model():
+    sql = _script(["sum(price)", "max(price)"], "range", False, False,
+                  False)
+    tables = make_action_tables(n_actions=90, n_orders=0, n_users=4,
+                                seed=6, with_profile=False)
+    cs = compile_script(parse(sql), tables=tables)
+    m = memory_bound(cs, tables=tables)
+    entry = m["store"]["actions"]
+    assert entry["rows"] == 90
+    assert entry["bytes"] == 90 * entry["row_bytes_dense"] + 4
+    assert m["steady_state_bytes"] is not None
+    assert m["paper_model_bytes"] > 0
+    # capacity overrides table rows; no evidence at all -> unbounded
+    m_cap = memory_bound(cs, tables=None, capacity=1000)
+    assert m_cap["store"]["actions"]["rows"] == 1000
+    m_none = memory_bound(compile_script(parse(sql)))
+    assert m_none["steady_state_bytes"] is None
+    assert m_none["hazards"]
+
+
+# ---------------------------------------------------------- certificate
+
+
+def test_certificate_roundtrip_and_queries():
+    sql = _script(["sum(price)"], "range", False, False, False)
+    tables = make_action_tables(n_actions=60, n_orders=0, n_users=4,
+                                seed=2, with_profile=False)
+    cs = compile_script(parse(sql), tables=tables)
+    cert = certify(cs, tables=tables)
+    assert isinstance(cert, DeploymentCertificate)
+    d = json.loads(cert.to_json())
+    assert set(d) == {"certificate", "fingerprint", "features",
+                      "consistency", "retrace", "sharding", "memory",
+                      "rules"}
+    assert d["fingerprint"] == cs.fingerprint
+    assert d["features"] == list(cs.feature_names)
+    assert cert.column_class("f0", "raw") in ("bitwise", "tolerance")
+    assert "f0" in cert.bitwise_columns("raw")
+    text = cert.summary()
+    assert "deployment certificate" in text and "retrace" in text
+    # rule IDs referenced by hits are all documented
+    for entry in cert.consistency["columns"].values():
+        for h in entry["rules"]:
+            assert h["rule"] in d["rules"], h
+
+
+def test_classify_without_compile_time_tables_dict():
+    """compile_script() without tables leaves ctx.tables as {} — that
+    must not count as evidence."""
+    sql = _script(["sum(price)"], "range", False, False, False)
+    cs = compile_script(parse(sql))
+    out = classify_consistency(cs)
+    assert out["evidence"] == "none"

@@ -1,0 +1,83 @@
+"""BENCH_*.json artifact schema (benchmarks/common.py).
+
+``write_json`` must refuse to emit an artifact that downstream diffing
+can't rely on; ``validate_payload`` is the reusable checker.
+"""
+
+import json
+import pathlib
+import sys
+
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
+from benchmarks import common  # noqa: E402
+
+
+def good_payload():
+    return {
+        "bench": "demo",
+        "config": {"quick": True},
+        "rows": [
+            {"name": "a", "us_per_call": 12.5, "derived": "3.1x"},
+            {"name": "b", "us_per_call": 7, "derived": ""},
+        ],
+        "medians": {"a": 12.5, "b": 7},
+        "samples": {"a": [12.0, 13.0], "b": [7.0]},
+    }
+
+
+def test_good_payload_validates():
+    assert common.validate_payload(good_payload()) == []
+
+
+@pytest.mark.parametrize("mutate,frag", [
+    (lambda p: p.pop("rows"), "missing key 'rows'"),
+    (lambda p: p.update(rows={}), "'rows' is dict"),
+    (lambda p: p.update(extra=1), "unknown key 'extra'"),
+    (lambda p: p["rows"][0].pop("name"), "rows[0] missing 'name'"),
+    (lambda p: p["rows"][0].update(us_per_call="fast"),
+     "rows[0].us_per_call has type"),
+    (lambda p: p["rows"][0].update(us_per_call=-1.0),
+     "finite non-negative"),
+    (lambda p: p["rows"][0].update(us_per_call=float("nan")),
+     "finite non-negative"),
+    (lambda p: p["medians"].pop("a"), "disagree with row names"),
+    (lambda p: p["samples"].update(a=[1.0, float("inf")]),
+     "finite numbers"),
+    (lambda p: p["samples"].update(a=[[1.0]]), "flat list"),
+])
+def test_broken_payloads_are_caught(mutate, frag):
+    p = good_payload()
+    mutate(p)
+    probs = common.validate_payload(p)
+    assert any(frag in s for s in probs), (frag, probs)
+
+
+def test_non_dict_payload():
+    assert common.validate_payload([1, 2]) != []
+
+
+def test_write_json_roundtrip_validates(tmp_path, monkeypatch):
+    monkeypatch.setattr(common, "_rows", [])
+    monkeypatch.setattr(common, "_samples", {})
+    monkeypatch.setattr(common, "_config", {})
+    common.set_config(tiny=True)
+    common.record_samples("lap", [3.0, 4.0])
+    common.emit("lap", 3.5, "2x")
+    out = tmp_path / "BENCH_demo.json"
+    path = common.write_json("demo", str(out))
+    payload = json.loads(pathlib.Path(path).read_text())
+    assert common.validate_payload(payload) == []
+    assert payload["medians"] == {"lap": 3.5}
+
+
+def test_write_json_rejects_malformed(tmp_path, monkeypatch):
+    monkeypatch.setattr(common, "_rows",
+                        [{"name": "x", "us_per_call": float("nan"),
+                          "derived": ""}])
+    monkeypatch.setattr(common, "_samples", {})
+    monkeypatch.setattr(common, "_config", {})
+    with pytest.raises(ValueError, match="fails schema"):
+        common.write_json("demo", str(tmp_path / "BENCH_demo.json"))

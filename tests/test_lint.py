@@ -1,0 +1,254 @@
+"""JAX-purity lint (tools/lint_repro.py): rule battery + clean gate.
+
+Each rule is exercised on minimal snippets, both directions (fires on
+the bug, stays quiet on the idiomatic equivalent), suppression syntax
+is covered, and the whole of ``src/`` must lint clean — the same gate
+CI runs.
+"""
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
+from tools.lint_repro import lint_paths, lint_source, main  # noqa: E402
+
+SRC = pathlib.Path(__file__).resolve().parent.parent / "src"
+
+
+def rules_of(src: str):
+    return sorted({f.rule for f in lint_source(src, "<t>")})
+
+
+# ----------------------------------------------------------------- J001
+
+
+def test_j001_branch_on_jax_value():
+    src = (
+        "import jax.numpy as jnp\n"
+        "def f(x):\n"
+        "    y = jnp.sum(x)\n"
+        "    if y > 0:\n"
+        "        return y\n"
+        "    return -y\n")
+    assert "J001" in rules_of(src)
+
+
+def test_j001_while_and_ifexp():
+    src = (
+        "import jax.numpy as jnp\n"
+        "def f(x):\n"
+        "    y = jnp.sum(x)\n"
+        "    z = 1 if y > 0 else 2\n"
+        "    while y > 0:\n"
+        "        y = y - 1\n"
+        "    return z\n")
+    assert [f.rule for f in lint_source(src, "<t>")].count("J001") == 2
+
+
+def test_j001_quiet_on_static_shape_and_isinstance():
+    src = (
+        "import jax.numpy as jnp\n"
+        "def f(x):\n"
+        "    y = jnp.cumsum(x)\n"
+        "    if y.shape[0] > 1 and y.ndim == 1:\n"
+        "        y = y[:1]\n"
+        "    z = list(y) if isinstance(y, tuple) else [y]\n"
+        "    n = x.size\n"
+        "    while n > 1:\n"
+        "        n -= 1\n"
+        "    return z, n\n")
+    assert rules_of(src) == []
+
+
+def test_j001_quiet_on_host_values():
+    src = (
+        "def f(flag, n):\n"
+        "    if flag:\n"
+        "        return n + 1\n"
+        "    while n > 0:\n"
+        "        n -= 1\n"
+        "    return n\n")
+    assert rules_of(src) == []
+
+
+def test_assignment_checks_rhs_before_tainting_target():
+    # `jk = key if jk is None else jnp.asarray(jk)`: the IfExp condition
+    # reads the PRE-assignment (untainted) jk — must not fire
+    src = (
+        "import jax.numpy as jnp\n"
+        "def f(key, jk=None):\n"
+        "    jk = key if jk is None else jnp.asarray(jk)\n"
+        "    return jk\n")
+    assert rules_of(src) == []
+
+
+# ----------------------------------------------------------------- J002
+
+
+def test_j002_item_and_float():
+    src = (
+        "import jax.numpy as jnp\n"
+        "def f(x):\n"
+        "    y = jnp.sum(x)\n"
+        "    a = y.item()\n"
+        "    b = float(jnp.max(x))\n"
+        "    return a + b\n")
+    assert [f.rule for f in lint_source(src, "<t>")].count("J002") == 2
+
+
+def test_j002_quiet_on_host_conversions():
+    src = (
+        "def f(s):\n"
+        "    return int(s) + float('3')\n")
+    assert rules_of(src) == []
+
+
+# ----------------------------------------------------------------- J003
+
+
+def test_j003_time_in_traced_function():
+    src = (
+        "import time\n"
+        "import jax\n"
+        "def step(x):\n"
+        "    t = time.time()\n"
+        "    return x + t\n"
+        "fast = jax.jit(step)\n")
+    assert "J003" in rules_of(src)
+
+
+def test_j003_quiet_outside_traced_code():
+    src = (
+        "import time\n"
+        "def bench(fn):\n"
+        "    t0 = time.perf_counter()\n"
+        "    fn()\n"
+        "    return time.perf_counter() - t0\n")
+    assert rules_of(src) == []
+
+
+# ----------------------------------------------------------------- J004
+
+
+def test_j004_use_after_donation():
+    src = (
+        "import jax\n"
+        "def g(state, x):\n"
+        "    step = jax.jit(update, donate_argnums=(0,))\n"
+        "    new = step(state, x)\n"
+        "    return state, new\n")
+    assert "J004" in rules_of(src)
+
+
+# ----------------------------------------------------------------- J005
+
+
+def test_j005_unstable_cache_key():
+    src = (
+        "from repro.core.lowering.cache import cached\n"
+        "def f(cols):\n"
+        "    return cached([c for c in cols], lambda: 1)\n")
+    assert "J005" in rules_of(src)
+
+
+def test_j005_quiet_on_tuple_key():
+    src = (
+        "from repro.core.lowering.cache import cached\n"
+        "def f(cols):\n"
+        "    return cached(('k', tuple(cols)), lambda: 1)\n")
+    assert rules_of(src) == []
+
+
+# ----------------------------------------------------------------- J006
+
+
+def test_j006_unused_import():
+    src = "import os\nimport sys\nprint(sys.argv)\n"
+    fs = lint_source(src, "<t>")
+    assert [f.rule for f in fs] == ["J006"]
+    assert "os" in fs[0].msg
+
+
+def test_j006_respects_string_annotations_and_all():
+    src = (
+        "from typing import Optional\n"
+        "import numpy as np\n"
+        "__all__ = ['np']\n"
+        "def f(x: 'Optional[int]'):\n"
+        "    return x\n")
+    assert rules_of(src) == []
+
+
+# ---------------------------------------------------------- suppressions
+
+
+def test_line_suppression_with_reason():
+    src = (
+        "import jax.numpy as jnp\n"
+        "def f(x):\n"
+        "    y = jnp.sum(x)\n"
+        "    if y > 0:  # lint: ok J001 — host-eager helper, never jitted\n"
+        "        return y\n"
+        "    return -y\n")
+    assert rules_of(src) == []
+
+
+def test_bare_suppression_is_j000():
+    src = (
+        "import jax.numpy as jnp\n"
+        "def f(x):\n"
+        "    y = jnp.sum(x)\n"
+        "    if y > 0:  # lint: ok J001\n"
+        "        return y\n"
+        "    return -y\n")
+    assert rules_of(src) == ["J000"]
+
+
+def test_module_suppression():
+    src = (
+        "# lint: module-ok J002 — host-eager driver, syncs on purpose\n"
+        "import jax.numpy as jnp\n"
+        "def f(x):\n"
+        "    return float(jnp.sum(x)) + int(jnp.max(x))\n")
+    assert rules_of(src) == []
+
+
+def test_module_suppression_needs_reason():
+    src = (
+        "# lint: module-ok J002\n"
+        "import jax.numpy as jnp\n"
+        "def f(x):\n"
+        "    return float(jnp.sum(x))\n")
+    assert "J000" in rules_of(src)
+
+
+def test_suppression_is_rule_specific():
+    src = (
+        "import jax.numpy as jnp\n"
+        "def f(x):\n"
+        "    y = jnp.sum(x)\n"
+        "    if y > 0:  # lint: ok J002 — wrong rule id\n"
+        "        return y\n"
+        "    return -y\n")
+    assert "J001" in rules_of(src)
+
+
+# ------------------------------------------------------------ clean gate
+
+
+def test_src_lints_clean():
+    """The committed tree must stay at zero findings — same gate as the
+    CI static-analysis job."""
+    findings = lint_paths([SRC])
+    assert not findings, "\n".join(str(f) for f in findings)
+
+
+def test_cli_main_green_on_src():
+    assert main([str(SRC)]) == 0
+
+
+def test_cli_main_red_on_finding(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text("import os\n")
+    assert main([str(bad)]) == 1

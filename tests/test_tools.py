@@ -1,0 +1,96 @@
+"""Direct tier-1 coverage for the tools/ CI gates.
+
+The gates previously only ran inside CI jobs; these tests call their
+``main()`` functions directly (small sizes) so a regression in the gate
+logic itself — not just the properties they check — fails the suite.
+"""
+
+import json
+import pathlib
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT))
+
+from tools import _common, analyze_plan, check_consistency  # noqa: E402
+from tools import check_replay  # noqa: E402
+
+
+def test_common_tail_int_argv():
+    n, flags = _common.tail_int_argv(["--bitwise", "7"], 4, "--bitwise")
+    assert n == 7 and flags == {"bitwise": True}
+    n, flags = _common.tail_int_argv([], 4, "--bitwise")
+    assert n == 4 and flags == {"bitwise": False}
+    n, flags = _common.tail_int_argv(["3"], 9)
+    assert n == 3 and flags == {}
+
+
+def test_common_int_prices():
+    from repro.data.synthetic import make_action_tables
+
+    tables = _common.int_prices(make_action_tables(
+        n_actions=20, n_orders=0, n_users=2, seed=0, with_profile=False))
+    import numpy as np
+
+    p = tables["actions"].columns["price"]
+    assert p.dtype == np.float32
+    assert np.array_equal(p, np.floor(p))
+
+
+def test_check_consistency_gate_passes():
+    assert check_consistency.main(n_shards=2, bitwise=False) == 0
+
+
+def test_check_replay_gate_passes():
+    assert check_replay.main(n_actions=70) == 0
+
+
+def test_analyze_plan_load_sql(tmp_path):
+    sql_file = tmp_path / "f.sql"
+    sql_file.write_text("SELECT 1")
+    assert analyze_plan.load_sql(sql_file) == "SELECT 1"
+    py_file = tmp_path / "ex.py"
+    py_file.write_text('X = 2\nSQL = """SELECT price FROM t"""\n')
+    assert "SELECT price" in analyze_plan.load_sql(py_file)
+    bad = tmp_path / "none.py"
+    bad.write_text("X = 1\n")
+    with pytest.raises(SystemExit):
+        analyze_plan.load_sql(bad)
+
+
+def test_analyze_plan_synthetic_tables_shape():
+    t = analyze_plan.synthetic_tables(
+        'WINDOW w AS (UNION orders ...) OPTIONS (long_windows = "w:100s")'
+        ' LAST JOIN profile', n_actions=40)
+    assert set(t) == {"actions", "orders", "profile"}
+    t2 = analyze_plan.synthetic_tables("SELECT price FROM actions",
+                                       n_actions=40)
+    assert "profile" not in t2
+    assert len(t2.get("orders", [])) == 0   # no UNION -> no order rows
+
+
+def test_analyze_plan_end_to_end(tmp_path):
+    out = tmp_path / "CERT_quickstart.json"
+    rc = analyze_plan.main([str(ROOT / "examples" / "quickstart.py"),
+                            "--json", str(out), "--n-actions", "60"])
+    assert rc == 0
+    cert = json.loads(out.read_text())
+    assert cert["certificate"] == "repro.core.analysis"
+    assert cert["consistency"]["columns"]
+    assert cert["retrace"]["bounded"]
+
+
+def test_analyze_plan_no_tables_conservative(capsys):
+    rc = analyze_plan.main([str(ROOT / "examples" / "quickstart.py"),
+                            "--no-tables"])
+    assert rc == 0
+    text = capsys.readouterr().out
+    assert "evidence: none" in text
+
+
+def test_analyze_plan_cross_check_refuses_no_tables():
+    with pytest.raises(SystemExit):
+        analyze_plan.main([str(ROOT / "examples" / "quickstart.py"),
+                           "--no-tables", "--cross-check"])

@@ -1,0 +1,1 @@
+"""Repo tooling: CI gates, the static certifier CLI, and the lint."""

@@ -22,39 +22,13 @@ from __future__ import annotations
 
 import sys
 
-sys.path.insert(0, "src")
+try:
+    from tools._common import PREAGG_SQL, RAW_SQL, int_prices, tail_int_argv
+except ImportError:                      # invoked as `python tools/x.py`
+    from _common import PREAGG_SQL, RAW_SQL, int_prices, tail_int_argv
 
 from repro.core import compile_script, parse, verify_consistency  # noqa
 from repro.data.synthetic import make_action_tables  # noqa
-
-RAW_SQL = """
-SELECT sum(price) OVER w AS s, count(price) OVER w AS c,
-       max(price) OVER w AS mx, min(price) OVER w AS mn
-FROM actions
-WINDOW w AS (PARTITION BY userid ORDER BY ts
-             ROWS_RANGE BETWEEN 10s PRECEDING AND CURRENT ROW)
-"""
-
-PREAGG_SQL = """
-SELECT sum(price) OVER w AS s, count(price) OVER w AS c,
-       max(price) OVER w AS mx
-FROM actions
-WINDOW w AS (PARTITION BY userid ORDER BY ts
-             ROWS_RANGE BETWEEN 3000s PRECEDING AND CURRENT ROW)
-OPTIONS (long_windows = "w:100s")
-"""
-
-
-def _int_prices(tables):
-    """Integer-valued float32 prices: every combine bracketing is exact
-    in f32, so even the re-bracketed pre-agg path is bitwise."""
-    import numpy as np
-
-    for t in tables.values():
-        if "price" in t.columns:
-            t.columns["price"] = np.floor(t.columns["price"]).astype(
-                np.float32)
-    return tables
 
 
 def main(n_shards: int = 4, bitwise: bool = False) -> int:
@@ -82,7 +56,7 @@ def main(n_shards: int = 4, bitwise: bool = False) -> int:
     ok &= rep2.passed
 
     if bitwise:
-        tables3 = _int_prices(make_action_tables(
+        tables3 = int_prices(make_action_tables(
             n_actions=120, n_orders=0, n_users=4,
             horizon_ms=12_000_000, seed=13, with_profile=False))
         cs3 = compile_script(parse(PREAGG_SQL), tables=tables3)
@@ -103,7 +77,5 @@ def main(n_shards: int = 4, bitwise: bool = False) -> int:
 
 
 if __name__ == "__main__":
-    argv = [a for a in sys.argv[1:]]
-    bitwise = "--bitwise" in argv
-    argv = [a for a in argv if a != "--bitwise"]
-    sys.exit(main(int(argv[0]) if argv else 4, bitwise=bitwise))
+    n, flags = tail_int_argv(None, 4, "--bitwise")
+    sys.exit(main(n, bitwise=flags["bitwise"]))

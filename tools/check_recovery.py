@@ -19,39 +19,16 @@ from __future__ import annotations
 
 import sys
 
-sys.path.insert(0, "src")
+try:
+    from tools._common import PREAGG_SQL, RAW_SQL, int_prices, tail_int_argv
+except ImportError:                      # invoked as `python tools/x.py`
+    from _common import PREAGG_SQL, RAW_SQL, int_prices, tail_int_argv
 
 import numpy as np  # noqa: E402
 
 from repro.core import compile_script, parse, verify_consistency  # noqa
 from repro.data.synthetic import make_action_tables  # noqa: E402
 from repro.serve.engine import FeatureEngine  # noqa: E402
-
-RAW_SQL = """
-SELECT sum(price) OVER w AS s, count(price) OVER w AS c,
-       max(price) OVER w AS mx, min(price) OVER w AS mn
-FROM actions
-WINDOW w AS (PARTITION BY userid ORDER BY ts
-             ROWS_RANGE BETWEEN 10s PRECEDING AND CURRENT ROW)
-"""
-
-PREAGG_SQL = """
-SELECT sum(price) OVER w AS s, count(price) OVER w AS c,
-       max(price) OVER w AS mx
-FROM actions
-WINDOW w AS (PARTITION BY userid ORDER BY ts
-             ROWS_RANGE BETWEEN 3000s PRECEDING AND CURRENT ROW)
-OPTIONS (long_windows = "w:100s")
-"""
-
-
-def _int_prices(tables):
-    """Integer-valued f32 prices: re-bracketed combines stay bitwise."""
-    for t in tables.values():
-        if "price" in t.columns:
-            t.columns["price"] = np.floor(t.columns["price"]).astype(
-                np.float32)
-    return tables
 
 
 def _engine_gate(n_shards: int) -> bool:
@@ -98,7 +75,7 @@ def main(n_shards: int = 4) -> int:
     print(f"raw+kill  (S={n_shards}): {rep}")
     ok &= rep.passed
 
-    tables2 = _int_prices(make_action_tables(
+    tables2 = int_prices(make_action_tables(
         n_actions=120, n_orders=0, n_users=4, horizon_ms=12_000_000,
         seed=13, with_profile=False))
     cs2 = compile_script(parse(PREAGG_SQL), tables=tables2)
@@ -114,5 +91,4 @@ def main(n_shards: int = 4) -> int:
 
 
 if __name__ == "__main__":
-    argv = sys.argv[1:]
-    sys.exit(main(int(argv[0]) if argv else 4))
+    sys.exit(main(tail_int_argv(None, 4)[0]))

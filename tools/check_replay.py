@@ -29,7 +29,10 @@ from __future__ import annotations
 import sys
 import tempfile
 
-sys.path.insert(0, "src")
+try:
+    from tools._common import RAW_SQL, int_prices, tail_int_argv
+except ImportError:                      # invoked as `python tools/x.py`
+    from _common import RAW_SQL, int_prices, tail_int_argv
 
 import numpy as np  # noqa: E402
 
@@ -39,14 +42,6 @@ from repro.serve.engine import FeatureEngine  # noqa: E402
 from repro.serve.trace import (load_trace, outputs_in_base_order,  # noqa
                                record_consistency_trace, replay,
                                save_trace, store_state_arrays)
-
-RAW_SQL = """
-SELECT sum(price) OVER w AS s, count(price) OVER w AS c,
-       max(price) OVER w AS mx, min(price) OVER w AS mn
-FROM actions
-WINDOW w AS (PARTITION BY userid ORDER BY ts
-             ROWS_RANGE BETWEEN 10s PRECEDING AND CURRENT ROW)
-"""
 
 REPLAY_KW = dict(batch_size=1, max_wait_ms=0.0, slo_ms=1e6)
 
@@ -60,12 +55,9 @@ def _arrays_equal(a, b, what: str) -> bool:
 
 
 def main(n_actions: int = 90) -> int:
-    tables = make_action_tables(n_actions=n_actions, n_orders=0,
-                                n_users=4, horizon_ms=600_000, seed=7,
-                                with_profile=False)
-    for t in tables.values():
-        t.columns["price"] = np.floor(t.columns["price"]).astype(
-            np.float32)
+    tables = int_prices(make_action_tables(
+        n_actions=n_actions, n_orders=0, n_users=4, horizon_ms=600_000,
+        seed=7, with_profile=False))
 
     def factory():
         return FeatureEngine(RAW_SQL, tables, capacity=256,
@@ -115,5 +107,4 @@ def main(n_actions: int = 90) -> int:
 
 
 if __name__ == "__main__":
-    argv = sys.argv[1:]
-    sys.exit(main(int(argv[0]) if argv else 90))
+    sys.exit(main(tail_int_argv(None, 90)[0]))

@@ -1,0 +1,576 @@
+"""AST lint for the repo's JAX invariants (rule IDs ``J*``).
+
+The last several PRs fixed tracer-purity, donation-safety, and
+cache-key bugs by hand; this tool enforces those invariants
+mechanically over ``src/``:
+
+``J001`` tracer-unsafe branch
+    ``if``/``while`` whose condition derives from a ``jnp.``/``jax.``
+    computation: under tracing the condition is a tracer and the
+    Python branch either raises or silently bakes in one path.
+``J002`` concretization in a traced path
+    ``.item()`` / ``float()`` / ``int()`` / ``bool()`` applied to a
+    jax-derived value — forces a device sync under eager execution and
+    a ConcretizationTypeError under jit.
+``J003`` impure call in traced code
+    ``time.time``/``perf_counter``/RNG (``np.random``, ``random.*``)
+    inside a function that is jitted/vmapped/scanned: the value freezes
+    at trace time and silently never changes again.
+``J004`` use after donation
+    an argument passed at a donated position of a
+    ``jax.jit(..., donate_argnums=...)`` function is read again after
+    the call — the buffer may already be aliased/invalid.
+``J005`` unstable jit-cache key
+    an unhashable or iteration-order-dependent component (list/set/dict
+    display or constructor, unsorted ``.keys()``/``.values()``) inside
+    a key passed to the lowering ``cached(...)``.
+``J006`` unused import
+    a module-level import never referenced (dead imports hide stale
+    dependencies and break doc-path gates late).
+
+Suppression syntax (per line, justification REQUIRED)::
+
+    x = risky()  # lint: ok J001 — host-eager path, never traced
+
+A bare ``# lint: ok J001`` without a justification is itself a finding
+(``J000``).  ``# noqa`` / ``# noqa: F401`` on an import line also
+suppresses J006 (the conventional re-export marker).
+
+Zero-findings baseline: ``tools/lint_baseline.json`` pins the accepted
+finding set (committed empty).  Any finding not in the baseline fails
+CI; shrinking the baseline is always allowed.
+
+    python tools/lint_repro.py [paths...] [--json] [--baseline FILE]
+"""
+
+from __future__ import annotations
+
+import argparse
+import ast
+import json
+import pathlib
+import re
+import sys
+from typing import Dict, List, Optional, Set, Tuple
+
+RULES = {
+    "J000": "suppression without a justification",
+    "J001": "Python branch on a jax-derived value",
+    "J002": "concretization (.item()/float()/int()/bool()) of a "
+            "jax-derived value",
+    "J003": "time/RNG call inside traced code",
+    "J004": "use of an argument after donation",
+    "J005": "unstable component in a jit-cache key",
+    "J006": "unused module-level import",
+}
+
+JAX_ROOTS = {"jnp", "jax", "lax", "pl", "pltpu"}
+# jax.* attributes that return host values / transforms, not tracers
+HOST_SIDE_ATTRS = {
+    "jit", "vmap", "pmap", "grad", "value_and_grad", "devices",
+    "device_count", "local_device_count", "default_backend",
+    "named_scope", "checkpoint", "custom_vjp", "custom_jvp",
+    "ShapeDtypeStruct", "tree_util", "tree_map", "tree_leaves",
+    "make_mesh", "eval_shape", "block_until_ready", "typeof",
+    "dtype", "shape", "ndim", "debug",
+}
+TRACE_ENTRY_ATTRS = {
+    "jit", "vmap", "pmap", "grad", "value_and_grad", "checkpoint",
+    "scan", "fori_loop", "while_loop", "cond", "switch",
+    "associative_scan", "shard_map", "pallas_call",
+}
+IMPURE_CALLS = {
+    ("time", "time"), ("time", "perf_counter"), ("time", "monotonic"),
+    ("time", "time_ns"), ("time", "perf_counter_ns"),
+    ("os", "urandom"),
+}
+SUPPRESS_RE = re.compile(
+    r"#\s*lint:\s*ok\s+(?P<rules>J\d{3}(?:\s*,\s*J\d{3})*)"
+    r"(?P<why>.*)$")
+# whole-module opt-out for host-eager driver files, e.g.
+#   # lint: module-ok J002 — training loop syncs metrics to host each step
+MODULE_SUPPRESS_RE = re.compile(
+    r"#\s*lint:\s*module-ok\s+(?P<rules>J\d{3}(?:\s*,\s*J\d{3})*)"
+    r"(?P<why>.*)$")
+
+
+class Finding:
+    def __init__(self, path: str, line: int, col: int, rule: str,
+                 msg: str):
+        self.path, self.line, self.col = path, line, col
+        self.rule, self.msg = rule, msg
+
+    @property
+    def key(self) -> str:
+        return f"{self.path}:{self.rule}:{self.msg}"
+
+    def __str__(self):
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.msg}"
+
+    def to_dict(self):
+        return {"path": self.path, "line": self.line, "col": self.col,
+                "rule": self.rule, "msg": self.msg}
+
+
+# ---------------------------------------------------------------------------
+# suppression comments
+# ---------------------------------------------------------------------------
+
+
+def parse_suppressions(source: str, path: str
+                       ) -> Tuple[Dict[int, Set[str]], Set[str],
+                                  List[Finding]]:
+    """Per-line + whole-module suppressed rule sets, J000 for bare ones."""
+    sup: Dict[int, Set[str]] = {}
+    mod: Set[str] = set()
+    bad: List[Finding] = []
+    for i, text in enumerate(source.splitlines(), start=1):
+        m = MODULE_SUPPRESS_RE.search(text)
+        if m is None:
+            m = SUPPRESS_RE.search(text)
+            target = None
+        else:
+            target = mod
+        if m:
+            rules = {r.strip() for r in m.group("rules").split(",")}
+            why = m.group("why").strip(" -—:\t")
+            if not why:
+                bad.append(Finding(path, i, 0, "J000",
+                                   f"suppression of {sorted(rules)} "
+                                   f"carries no justification"))
+            if target is None:
+                sup[i] = rules
+            else:
+                target.update(rules)
+        if "# noqa" in text:
+            sup.setdefault(i, set()).add("J006")
+    return sup, mod, bad
+
+
+# ---------------------------------------------------------------------------
+# expression helpers
+# ---------------------------------------------------------------------------
+
+
+def attr_chain(node: ast.AST) -> List[str]:
+    """``jax.lax.scan`` -> ["jax", "lax", "scan"]; [] if not a chain."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return parts[::-1]
+    return []
+
+
+def is_jax_call(node: ast.AST) -> bool:
+    """A Call whose root is jnp/jax/lax and that returns a device value."""
+    if not isinstance(node, ast.Call):
+        return False
+    chain = attr_chain(node.func)
+    if not chain or chain[0] not in JAX_ROOTS:
+        return False
+    return not (set(chain[1:]) & HOST_SIDE_ATTRS)
+
+
+# attributes of a device array that are HOST static metadata, not data
+STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "itemsize", "nbytes"}
+
+
+class _TaintScan(ast.NodeVisitor):
+    """Does this expression reference a jax value (directly or via a
+    tainted local)?"""
+
+    def __init__(self, tainted: Set[str]):
+        self.tainted = tainted
+        self.hit = False
+
+    def visit_Attribute(self, node: ast.Attribute):
+        if node.attr in STATIC_ATTRS:
+            return          # x.shape / x.ndim are trace-time constants
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call):
+        if is_jax_call(node):
+            self.hit = True
+        chain = attr_chain(node.func)
+        # int(x)/float(x)/np.asarray(x) concretize: the RESULT is host;
+        # isinstance/len read static structure, never the device value
+        if chain and chain[-1] in ("int", "float", "bool", "item",
+                                   "asarray", "array", "isinstance",
+                                   "len"):
+            return
+        self.generic_visit(node)
+
+    def visit_Name(self, node: ast.Name):
+        if node.id in self.tainted:
+            self.hit = True
+
+
+def is_tainted(expr: ast.AST, tainted: Set[str]) -> bool:
+    s = _TaintScan(tainted)
+    s.visit(expr)
+    return s.hit
+
+
+# ---------------------------------------------------------------------------
+# per-function checks (J001/J002/J004)
+# ---------------------------------------------------------------------------
+
+
+def _assigned_names(tgt: ast.AST) -> List[str]:
+    if isinstance(tgt, ast.Name):
+        return [tgt.id]
+    if isinstance(tgt, (ast.Tuple, ast.List)):
+        out = []
+        for e in tgt.elts:
+            out.extend(_assigned_names(e))
+        return out
+    return []
+
+
+class FunctionChecker(ast.NodeVisitor):
+    def __init__(self, path: str, findings: List[Finding],
+                 traced: bool):
+        self.path = path
+        self.findings = findings
+        self.traced = traced
+        self.tainted: Set[str] = set()
+        self.donating: Dict[str, Tuple[int, ...]] = {}
+        self.donated_names: Dict[str, int] = {}   # name -> call lineno
+
+    def add(self, node, rule, msg):
+        self.findings.append(Finding(self.path, node.lineno,
+                                     node.col_offset, rule, msg))
+
+    # ---- taint propagation through simple assignments (the RHS is
+    # checked FIRST, against the pre-assignment taint set)
+    def visit_Assign(self, node: ast.Assign):
+        self.generic_visit(node)
+        names = [n for t in node.targets for n in _assigned_names(t)]
+        self._track_assign(names, node.value)
+
+    def visit_AnnAssign(self, node: ast.AnnAssign):
+        self.generic_visit(node)
+        if node.value is not None:
+            self._track_assign(_assigned_names(node.target), node.value)
+
+    def visit_AugAssign(self, node: ast.AugAssign):
+        self.generic_visit(node)
+        # x += rhs reads x: existing taint survives an untainted RHS
+        self._track_assign(_assigned_names(node.target), node.value,
+                           keep=True)
+
+    def _track_assign(self, names: List[str], value: ast.AST,
+                      keep: bool = False):
+        jit_donate = self._donating_jit(value)
+        if jit_donate is not None and len(names) == 1:
+            self.donating[names[0]] = jit_donate
+            return
+        if is_tainted(value, self.tainted):
+            self.tainted.update(names)
+        else:
+            for n in names:
+                self.tainted.discard(n)
+                self.donating.pop(n, None)
+
+    @staticmethod
+    def _donating_jit(value: ast.AST) -> Optional[Tuple[int, ...]]:
+        """``jax.jit(..., donate_argnums=(1, 2))`` -> (1, 2)."""
+        if not isinstance(value, ast.Call):
+            return None
+        chain = attr_chain(value.func)
+        if not chain or chain[-1] != "jit" or chain[0] not in JAX_ROOTS:
+            return None
+        for kw in value.keywords:
+            if kw.arg == "donate_argnums":
+                try:
+                    v = ast.literal_eval(kw.value)
+                except (ValueError, SyntaxError):
+                    return ()
+                return tuple(v) if isinstance(v, (tuple, list)) else (v,)
+        return None
+
+    # ---- J001: branches on tainted conditions
+    def visit_If(self, node: ast.If):
+        self._check_branch(node, node.test, "if")
+        self.generic_visit(node)
+
+    def visit_While(self, node: ast.While):
+        self._check_branch(node, node.test, "while")
+        self.generic_visit(node)
+
+    def visit_IfExp(self, node: ast.IfExp):
+        self._check_branch(node, node.test, "conditional expression")
+        self.generic_visit(node)
+
+    def _check_branch(self, node, test, what):
+        if is_tainted(test, self.tainted):
+            self.add(node, "J001",
+                     f"{what} condition derives from a jax value "
+                     f"(tracer under jit); use jnp.where/lax.cond")
+
+    # ---- J002: concretization of tainted values
+    def visit_Call(self, node: ast.Call):
+        chain = attr_chain(node.func)
+        if (chain and chain[-1] == "item" and len(chain) >= 2
+                and chain[0] in self.tainted):
+            self.add(node, "J002",
+                     f"`.item()` on jax-derived {chain[0]!r} "
+                     f"forces a sync / breaks under jit")
+        if (isinstance(node.func, ast.Name)
+                and node.func.id in ("float", "int", "bool")
+                and node.args
+                and is_tainted(node.args[0], self.tainted)):
+            self.add(node, "J002",
+                     f"`{node.func.id}()` concretizes a jax-derived "
+                     f"value; keep it on-device or mark host-eager")
+        # J003 inside traced functions
+        if self.traced and chain:
+            tup = (chain[0], chain[-1])
+            if (tup in IMPURE_CALLS
+                    or (chain[0] in ("np", "numpy", "random")
+                        and "random" in chain)):
+                self.add(node, "J003",
+                         f"impure call {'.'.join(chain)} in traced "
+                         f"code freezes at trace time; pass the value "
+                         f"in as an argument")
+        # J004: record donated argument names at call sites
+        if (isinstance(node.func, ast.Name)
+                and node.func.id in self.donating):
+            for pos in self.donating[node.func.id]:
+                if pos < len(node.args) and isinstance(
+                        node.args[pos], ast.Name):
+                    self.donated_names[node.args[pos].id] = node.lineno
+        self.generic_visit(node)
+
+    # ---- J004: reads after a donated call
+    def visit_Name(self, node: ast.Name):
+        if (isinstance(node.ctx, ast.Load)
+                and node.id in self.donated_names
+                and node.lineno > self.donated_names[node.id]):
+            self.add(node, "J004",
+                     f"{node.id!r} was passed at a donated position "
+                     f"(donate_argnums) and read again afterwards")
+            del self.donated_names[node.id]
+
+    # nested defs: fresh scope (tainting does not leak across scopes)
+    def visit_FunctionDef(self, node):
+        pass
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+    visit_Lambda = visit_FunctionDef
+
+
+# ---------------------------------------------------------------------------
+# module-level orchestration
+# ---------------------------------------------------------------------------
+
+
+def _traced_function_names(tree: ast.Module) -> Set[str]:
+    """Names of functions demonstrably traced in this module: decorated
+    with / passed (positionally) to jit/vmap/scan-family transforms."""
+    traced: Set[str] = set()
+
+    class V(ast.NodeVisitor):
+        def visit_Call(self, node: ast.Call):
+            chain = attr_chain(node.func)
+            if chain and chain[-1] in TRACE_ENTRY_ATTRS:
+                for a in node.args:
+                    if isinstance(a, ast.Name):
+                        traced.add(a.id)
+                    inner = attr_chain(a)
+                    if inner and len(inner) == 1:
+                        traced.add(inner[0])
+            self.generic_visit(node)
+
+        def visit_FunctionDef(self, node):
+            for dec in node.decorator_list:
+                chain = attr_chain(dec if not isinstance(dec, ast.Call)
+                                   else dec.func)
+                if chain and (chain[-1] in TRACE_ENTRY_ATTRS
+                              or (len(chain) >= 2
+                                  and chain[-2] in ("partial",)
+                                  and any(attr_chain(a)[-1:] ==
+                                          [t] for t in TRACE_ENTRY_ATTRS
+                                          for a in getattr(
+                                              dec, "args", [])))):
+                    traced.add(node.name)
+            self.generic_visit(node)
+
+    V().visit(tree)
+    return traced
+
+
+def _check_cache_keys(tree: ast.Module, path: str,
+                      findings: List[Finding]) -> None:
+    """J005: unstable components in ``cached(key, ...)`` keys."""
+    simple_assigns: Dict[str, ast.AST] = {}
+
+    class Collect(ast.NodeVisitor):
+        def visit_Assign(self, node: ast.Assign):
+            if (len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Name)):
+                simple_assigns[node.targets[0].id] = node.value
+            self.generic_visit(node)
+
+    Collect().visit(tree)
+
+    def unstable(expr: ast.AST) -> Optional[str]:
+        for sub in ast.walk(expr):
+            if isinstance(sub, (ast.ListComp, ast.SetComp, ast.DictComp,
+                                ast.List, ast.Set, ast.Dict)):
+                return type(sub).__name__
+            if isinstance(sub, ast.Call):
+                chain = attr_chain(sub.func)
+                if chain and chain[-1] in ("list", "set", "dict"):
+                    return f"{chain[-1]}()"
+                if chain and chain[-1] in ("keys", "values"):
+                    return f".{chain[-1]}() (dict order)"
+        return None
+
+    class V(ast.NodeVisitor):
+        def visit_Call(self, node: ast.Call):
+            chain = attr_chain(node.func)
+            if chain and chain[-1] == "cached" and node.args:
+                key = node.args[0]
+                if isinstance(key, ast.Name):
+                    key = simple_assigns.get(key.id, key)
+                why = unstable(key)
+                if why:
+                    findings.append(Finding(
+                        path, node.lineno, node.col_offset, "J005",
+                        f"cache key contains {why}: unhashable or "
+                        f"iteration-order dependent"))
+            self.generic_visit(node)
+
+    V().visit(tree)
+
+
+def _check_unused_imports(tree: ast.Module, path: str,
+                          findings: List[Finding]) -> None:
+    imports: Dict[str, ast.stmt] = {}
+    for node in tree.body:
+        if isinstance(node, ast.Import):
+            for al in node.names:
+                name = (al.asname or al.name).split(".")[0]
+                imports[name] = node
+        elif isinstance(node, ast.ImportFrom):
+            if node.module == "__future__":
+                continue
+            for al in node.names:
+                if al.name == "*":
+                    continue
+                imports[al.asname or al.name] = node
+
+    used: Set[str] = set()
+
+    class V(ast.NodeVisitor):
+        def visit_Name(self, node: ast.Name):
+            used.add(node.id)
+
+        def visit_Attribute(self, node: ast.Attribute):
+            chain = attr_chain(node)
+            if chain:
+                used.add(chain[0])
+            self.generic_visit(node)
+
+        def visit_Constant(self, node: ast.Constant):
+            # string annotations: "timestore.OnlineStore"
+            if isinstance(node.value, str) and re.fullmatch(
+                    r"[A-Za-z_][\w.\[\], ]*", node.value):
+                used.add(node.value.split(".")[0].split("[")[0].strip())
+
+    V().visit(tree)
+    for lst in ast.walk(tree):
+        if (isinstance(lst, ast.Assign)
+                and any(isinstance(t, ast.Name) and t.id == "__all__"
+                        for t in lst.targets)):
+            try:
+                used.update(ast.literal_eval(lst.value))
+            except (ValueError, SyntaxError):
+                pass
+    for name, node in imports.items():
+        if name not in used:
+            findings.append(Finding(path, node.lineno, node.col_offset,
+                                    "J006",
+                                    f"import {name!r} is never used"))
+
+
+def lint_source(source: str, path: str) -> List[Finding]:
+    """Lint one module's source; returns unsuppressed findings."""
+    findings: List[Finding] = []
+    sup, mod_sup, bad = parse_suppressions(source, path)
+    findings.extend(bad)
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as e:
+        findings.append(Finding(path, e.lineno or 0, 0, "J000",
+                                f"syntax error: {e.msg}"))
+        return findings
+
+    traced = _traced_function_names(tree)
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            chk = FunctionChecker(path, findings,
+                                  traced=node.name in traced)
+            for stmt in node.body:
+                chk.visit(stmt)
+    _check_cache_keys(tree, path, findings)
+    _check_unused_imports(tree, path, findings)
+
+    out = []
+    for f in findings:
+        if f.rule != "J000" and (f.rule in mod_sup
+                                 or f.rule in sup.get(f.line, set())):
+            continue
+        out.append(f)
+    return out
+
+
+def lint_paths(paths: List[pathlib.Path]) -> List[Finding]:
+    files: List[pathlib.Path] = []
+    for p in paths:
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.py")))
+        else:
+            files.append(p)
+    findings: List[Finding] = []
+    for f in files:
+        rel = str(f)
+        findings.extend(lint_source(f.read_text(), rel))
+    return findings
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="lint_repro", description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="*", default=["src"])
+    ap.add_argument("--json", action="store_true")
+    ap.add_argument("--baseline",
+                    default=str(pathlib.Path(__file__).parent
+                                / "lint_baseline.json"))
+    args = ap.parse_args(argv)
+
+    baseline: Set[str] = set()
+    bp = pathlib.Path(args.baseline)
+    if bp.exists():
+        baseline = {e["key"] for e in
+                    json.loads(bp.read_text()).get("findings", [])}
+
+    findings = lint_paths([pathlib.Path(p) for p in args.paths])
+    fresh = [f for f in findings if f.key not in baseline]
+    if args.json:
+        print(json.dumps([f.to_dict() for f in fresh], indent=1))
+    else:
+        for f in fresh:
+            print(f)
+        print(f"lint_repro: {len(fresh)} finding(s) "
+              f"({len(findings) - len(fresh)} baselined) over "
+              f"{len(args.paths)} path(s)")
+    return 1 if fresh else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
